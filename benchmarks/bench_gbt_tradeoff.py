@@ -1,0 +1,91 @@
+"""Paper Figures 1 & 3 (Experiments 1-2): accuracy / % classification
+differences vs mean #base models on the GBT benchmark datasets.
+
+Compared methods (per paper §5):
+  QWYC*            — joint ordering + thresholds (Algorithm 1)
+  QWYC (GBT order) — Algorithm 2 on the natural boosting order
+  Fan*             — Fan et al. (2002), Individual-MSE order
+  Fan (GBT order)  — Fan et al. mechanism on the boosting order
+  GBT alone        — smaller ensembles, fully evaluated
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbt_scores_for, save_rows
+from repro.core import (
+    evaluate_cascade,
+    evaluate_fan,
+    fit_fan,
+    fit_qwyc,
+    fit_thresholds_for_order,
+    individual_mse_order,
+)
+
+ALPHAS = (0.0025, 0.005, 0.01, 0.02, 0.04)
+GAMMAS = (0.5, 1.0, 2.0, 3.0, 4.0, 6.0)
+
+
+def _acc(decisions, y):
+    return float((decisions == (y > 0.5)).mean())
+
+
+def run(dataset: str = "adult", T: int = 300, depth: int = 5, scale: float = 1.0):
+    F_tr, F_te, beta, ds = gbt_scores_for(dataset, T, depth, scale)
+    y_te = ds.y_test
+    full_dec = F_te.sum(1) >= beta
+    rows = [
+        {
+            "method": "full",
+            "dataset": dataset,
+            "mean_models": float(T),
+            "diff": 0.0,
+            "acc": _acc(full_dec, y_te),
+        }
+    ]
+
+    for alpha in ALPHAS:
+        m = fit_qwyc(F_tr, beta=beta, alpha=alpha)
+        ev = evaluate_cascade(m, F_te)
+        rows.append(
+            {"method": "qwyc_star", "dataset": dataset, "alpha": alpha,
+             "mean_models": ev["mean_models"], "diff": ev["diff_rate"],
+             "acc": _acc(ev["decisions"], y_te)}
+        )
+        g = fit_thresholds_for_order(F_tr, np.arange(T), beta=beta, alpha=alpha)
+        eg = evaluate_cascade(g, F_te)
+        rows.append(
+            {"method": "qwyc_gbt_order", "dataset": dataset, "alpha": alpha,
+             "mean_models": eg["mean_models"], "diff": eg["diff_rate"],
+             "acc": _acc(eg["decisions"], y_te)}
+        )
+
+    mse_order = individual_mse_order(F_tr, ds.y_train)
+    fan_star = fit_fan(F_tr, mse_order, lam=0.01, beta=beta)
+    fan_gbt = fit_fan(F_tr, np.arange(T), lam=0.01, beta=beta)
+    for gamma in GAMMAS:
+        ef = evaluate_fan(fan_star, F_te, gamma=gamma)
+        rows.append(
+            {"method": "fan_star", "dataset": dataset, "gamma": gamma,
+             "mean_models": ef["mean_models"], "diff": ef["diff_rate"],
+             "acc": _acc(ef["decisions"], y_te)}
+        )
+        eg = evaluate_fan(fan_gbt, F_te, gamma=gamma)
+        rows.append(
+            {"method": "fan_gbt_order", "dataset": dataset, "gamma": gamma,
+             "mean_models": eg["mean_models"], "diff": eg["diff_rate"],
+             "acc": _acc(eg["decisions"], y_te)}
+        )
+
+    # smaller ensembles, fully evaluated ("GBT alone")
+    for t_small in (10, 25, 50, 100, T):
+        dec = F_te[:, :t_small].sum(1) >= beta * t_small / T
+        rows.append(
+            {"method": "gbt_alone", "dataset": dataset,
+             "mean_models": float(t_small),
+             "diff": float((dec != full_dec).mean()),
+             "acc": _acc(dec, y_te)}
+        )
+    save_rows(f"gbt_tradeoff_{dataset}", rows)
+    return rows

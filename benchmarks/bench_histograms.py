@@ -1,0 +1,48 @@
+"""Paper Figures 5-6: distribution of #base-models evaluated per test
+example at ~0.5% classification differences (QWYC vs Fan vs GBT-order)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbt_scores_for, save_rows
+from repro.core import (
+    evaluate_cascade,
+    evaluate_fan,
+    fit_fan,
+    fit_qwyc,
+    fit_thresholds_for_order,
+    individual_mse_order,
+)
+
+BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256, 10**9]
+
+
+def _hist(exit_steps):
+    h, lo = [], 0
+    for hi in BUCKETS:
+        h.append(int(((exit_steps > lo) & (exit_steps <= hi)).sum()))
+        lo = hi
+    return h
+
+
+def run(dataset: str = "adult", T: int = 300, scale: float = 1.0):
+    F_tr, F_te, beta, ds = gbt_scores_for(dataset, T, 5, scale)
+    rows = []
+    q = fit_qwyc(F_tr, beta=beta, alpha=0.005)
+    qe = evaluate_cascade(q, F_te)
+    rows.append({"method": "qwyc_star", "dataset": dataset,
+                 "buckets": BUCKETS[:-1] + ["inf"], "hist": _hist(qe["exit_step"]),
+                 "mean": qe["mean_models"], "diff": qe["diff_rate"]})
+    g = fit_thresholds_for_order(F_tr, np.arange(T), beta=beta, alpha=0.005)
+    ge = evaluate_cascade(g, F_te)
+    rows.append({"method": "qwyc_gbt_order", "dataset": dataset,
+                 "hist": _hist(ge["exit_step"]), "mean": ge["mean_models"],
+                 "diff": ge["diff_rate"]})
+    fan = fit_fan(F_tr, individual_mse_order(F_tr, ds.y_train), lam=0.01, beta=beta)
+    fe = evaluate_fan(fan, F_te, gamma=3.0)
+    rows.append({"method": "fan_star", "dataset": dataset,
+                 "hist": _hist(fe["exit_step"]), "mean": fe["mean_models"],
+                 "diff": fe["diff_rate"]})
+    save_rows(f"histograms_{dataset}", rows)
+    return rows

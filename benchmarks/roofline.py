@@ -1,0 +1,60 @@
+"""§Roofline table generator: reads the dry-run JSON grid and renders the
+per-(arch x shape) roofline terms, dominant bottleneck, and MODEL/HLO flop
+ratio as markdown (consumed by EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def load(mesh_tag: str = "16x16") -> dict:
+    p = RESULTS / f"dryrun_{mesh_tag}.json"
+    return json.loads(p.read_text()) if p.exists() else {}
+
+
+def table(mesh_tag: str = "16x16") -> str:
+    data = load(mesh_tag)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "model/HLO flops | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(data):
+        r = data[key]
+        if "error" in r:
+            arch, shape = key.split("|")
+            lines.append(f"| {arch} | {shape} | FAILED | | | | | |")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]
+        hbm = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.3f} | {hbm:.2f}GB |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for tag in ("16x16", "2x16x16"):
+        data = load(tag)
+        if data:
+            ok = sum(1 for v in data.values() if "error" not in v)
+            print(f"\n== mesh {tag}: {ok}/{len(data)} pairs ==")
+            print(table(tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Beyond-paper: QWYC early exit inside a transformer (depth level) and
+inside a MoE layer (expert level).
+
+1. Depth: a small decoder with exit heads every 2 layers classifies
+   sequences; QWYC Algorithm-2 thresholds let easy inputs leave the network
+   early while agreeing with the full-depth decision (ordering is pinned to
+   depth — see DESIGN.md §Arch-applicability).
+2. Experts: the routed experts of a MoE layer form an exchangeable additive
+   ensemble, so the FULL joint optimization (Algorithm 1) applies: QWYC
+   picks which experts to evaluate first and when to stop.
+
+    PYTHONPATH=src python examples/adaptive_depth_llm.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    calibrate_early_exit,
+    evaluate_early_exit,
+    exit_scores,
+    expert_contributions,
+    fit_moe_qwyc,
+    report_moe_qwyc,
+)
+from repro.models.config import ModelConfig
+from repro.models.moe import init_moe
+from repro.models.transformer import init_params
+
+
+def depth_level() -> None:
+    cfg = ModelConfig(
+        name="ee-demo", arch_type="dense", n_layers=12, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=256, exit_interval=2,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1024, 16), 0, cfg.vocab_size)
+    scores = np.asarray(exit_scores(params, cfg, toks))  # (N, 6 exits)
+    calib, test = scores[:512], scores[512:]
+    for alpha in (0.005, 0.02, 0.05):
+        m = calibrate_early_exit(calib, cfg, alpha=alpha)
+        rep = evaluate_early_exit(m, test, cfg)
+        print(
+            f"[depth] alpha={alpha:<6} mean layers {rep.mean_layers:5.2f}/"
+            f"{rep.full_layers}  speedup {rep.speedup:4.2f}x  diff {rep.diff_rate:.4f}"
+        )
+
+
+def expert_level() -> None:
+    cfg = ModelConfig(
+        name="moe-demo", arch_type="moe", n_layers=2, d_model=64, n_heads=2,
+        n_kv_heads=1, head_dim=32, d_ff=128, vocab_size=256, n_experts=16,
+        top_k=4, moe_d_ff=64,
+    )
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048, cfg.d_model))
+    readout = jax.random.normal(jax.random.PRNGKey(2), (cfg.d_model,))
+    C = expert_contributions(p, x, readout, cfg)
+    m = fit_moe_qwyc(C[:1024], alpha=0.01)
+    rep = report_moe_qwyc(m, C[1024:])
+    print(
+        f"[experts] QWYC order {rep['order'][:6]}... evaluates "
+        f"{rep['mean_experts']:.2f}/{rep['full_experts']} experts "
+        f"({rep['speedup']:.1f}x), diff {rep['diff_rate']:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    depth_level()
+    expert_level()

@@ -1,0 +1,77 @@
+"""Minimal sharding-aware checkpointing (msgpack + raw array blobs).
+
+Layout: a directory with ``manifest.msgpack`` (tree structure, shapes,
+dtypes) and one ``.npy``-style raw blob per leaf.  Restore accepts an
+optional sharding tree so leaves land directly on the target mesh
+(``jax.device_put`` with NamedSharding — no host-side reassembly).
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save_checkpoint(ckpt_dir: str | pathlib.Path, step: int, tree: Any) -> pathlib.Path:
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    items, _ = _flatten(tree)
+    manifest = {}
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(leaf)
+        blob = d / f"leaf_{i:05d}.bin"
+        blob.write_bytes(arr.tobytes())
+        manifest[key] = {
+            "index": i,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    (d / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
+    return d
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> int | None:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str | pathlib.Path, step: int, target: Any, shardings: Any | None = None
+) -> Any:
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of NamedShardings."""
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = msgpack.unpackb((d / "manifest.msgpack").read_bytes())
+    items, treedef = _flatten(target)
+    sh_items = None
+    if shardings is not None:
+        sh_items, _ = _flatten(shardings)
+    leaves = []
+    for j, (key, leaf) in enumerate(items):
+        meta = manifest[key]
+        raw = (d / f"leaf_{meta['index']:05d}.bin").read_bytes()
+        arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+        if sh_items is not None:
+            leaves.append(jax.device_put(arr, sh_items[j][1]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,43 @@
+"""The paper's own experiment configurations (Table 1).
+
+Four (dataset, ensemble) settings: GBT-500 on adult/nomao-like data and
+lattice ensembles (T=5, T=500) on the two Filter-and-Score real-world
+analogues.  Used by the benchmark harness and examples.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleExperiment:
+    name: str
+    dataset: str
+    ensemble: str  # "gbt" | "lattice"
+    T: int
+    depth: int = 5  # gbt tree depth
+    lattice_S: int = 8  # features per lattice
+    training: str = "joint"  # lattice: joint | independent
+    mode: str = "both"  # qwyc early stopping: both | neg_only
+    alphas: tuple = (0.0025, 0.005, 0.01, 0.02, 0.04)
+
+
+EXPERIMENTS = {
+    "exp1_adult": EnsembleExperiment("exp1_adult", "adult", "gbt", T=500, depth=5),
+    "exp2_nomao": EnsembleExperiment("exp2_nomao", "nomao", "gbt", T=500, depth=9),
+    "exp3_rw1_joint": EnsembleExperiment(
+        "exp3_rw1_joint", "rw1", "lattice", T=5, lattice_S=13 - 5, training="joint",
+        mode="neg_only",
+    ),
+    "exp4_rw2_joint": EnsembleExperiment(
+        "exp4_rw2_joint", "rw2", "lattice", T=500, lattice_S=8, training="joint",
+        mode="neg_only",
+    ),
+    "exp5_rw1_indep": EnsembleExperiment(
+        "exp5_rw1_indep", "rw1", "lattice", T=5, lattice_S=13 - 5,
+        training="independent", mode="neg_only",
+    ),
+    "exp6_rw2_indep": EnsembleExperiment(
+        "exp6_rw2_indep", "rw2", "lattice", T=500, lattice_S=8,
+        training="independent", mode="neg_only",
+    ),
+}

@@ -1,0 +1,37 @@
+"""Architecture registry: --arch <id> resolution."""
+
+from repro.configs import (
+    command_r_35b,
+    command_r_plus_104b,
+    deepseek_v2_lite_16b,
+    gemma2_2b,
+    internvl2_26b,
+    musicgen_large,
+    qwen3_1_7b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_2b,
+    rwkv6_1_6b,
+)
+from repro.models.config import ModelConfig
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        deepseek_v2_lite_16b,
+        gemma2_2b,
+        qwen3_1_7b,
+        rwkv6_1_6b,
+        command_r_plus_104b,
+        internvl2_26b,
+        qwen3_moe_30b_a3b,
+        command_r_35b,
+        recurrentgemma_2b,
+        musicgen_large,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,56 @@
+"""QWYC core: the paper's contribution as a composable library."""
+
+from repro.core.cascade import CascadeOut, cascade_apply, cascade_from_scores, pack_model
+from repro.core.early_exit import (
+    EarlyExitReport,
+    calibrate_early_exit,
+    evaluate_early_exit,
+    exit_scores,
+)
+from repro.core.fan import FanModel, evaluate_fan, fit_fan
+from repro.core.moe_qwyc import expert_contributions, fit_moe_qwyc, report_moe_qwyc
+from repro.core.multiclass import (
+    MulticlassQWYC,
+    evaluate_multiclass,
+    fit_qwyc_multiclass,
+)
+from repro.core.orderings import (
+    gbt_order,
+    greedy_mse_order,
+    individual_mse_order,
+    random_order,
+)
+from repro.core.qwyc import (
+    QWYCModel,
+    evaluate_cascade,
+    fit_qwyc,
+    fit_thresholds_for_order,
+)
+
+__all__ = [
+    "CascadeOut",
+    "EarlyExitReport",
+    "calibrate_early_exit",
+    "evaluate_early_exit",
+    "exit_scores",
+    "expert_contributions",
+    "fit_moe_qwyc",
+    "report_moe_qwyc",
+    "MulticlassQWYC",
+    "evaluate_multiclass",
+    "fit_qwyc_multiclass",
+    "FanModel",
+    "QWYCModel",
+    "cascade_apply",
+    "cascade_from_scores",
+    "evaluate_cascade",
+    "evaluate_fan",
+    "fit_fan",
+    "fit_qwyc",
+    "fit_thresholds_for_order",
+    "gbt_order",
+    "greedy_mse_order",
+    "individual_mse_order",
+    "pack_model",
+    "random_order",
+]

@@ -1,0 +1,121 @@
+"""Runtime cascade evaluation in JAX (TPU-friendly masked scan).
+
+The paper's serving loop is a per-example data-dependent ``while``: evaluate
+base models in QWYC order, stop as soon as the partial score crosses a
+threshold.  On TPU we keep SIMD lanes full instead: a ``lax.scan`` over the T
+ordered base models carries an ``active`` mask per example.  Semantics (exit
+step, decision) are bit-identical to the sequential loop; the *cost model*
+(#models evaluated = sum of active steps) matches the paper's accounting; the
+actual compute skip happens at block granularity inside the Pallas kernel
+(``repro/kernels/cascade_kernel.py``).
+
+Two entry points:
+  * ``cascade_from_scores`` — scores precomputed (N, T): pure threshold logic.
+  * ``cascade_apply``       — base models evaluated lazily inside the scan via
+    a stacked-parameter ``apply_fn``; this is the real serving path where the
+    saved work is the base-model evaluation itself.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CascadeOut", "cascade_from_scores", "cascade_apply", "pack_model"]
+
+
+class CascadeOut(NamedTuple):
+    decisions: jax.Array  # (N,) bool
+    exit_step: jax.Array  # (N,) int32, 1-based; T if never exited early
+    models_evaluated: jax.Array  # (N,) int32 == exit_step (cost accounting)
+    g_final: jax.Array  # (N,) partial score at exit (full score if no exit)
+
+
+def _step(beta, carry, xs):
+    g, active, decided_pos, exit_step, step_idx = carry
+    f_t, eps_pos_t, eps_neg_t = xs
+    g = g + jnp.where(active, f_t, 0.0)
+    out_neg = active & (g < eps_neg_t)  # negative exit priority (matches fit)
+    out_pos = active & (g > eps_pos_t) & ~out_neg
+    newly = out_pos | out_neg
+    decided_pos = jnp.where(out_pos, True, decided_pos)
+    exit_step = jnp.where(newly, step_idx + 1, exit_step)
+    active = active & ~newly
+    return (g, active, decided_pos, exit_step, step_idx + 1), None
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cascade_from_scores(
+    scores_ordered: jax.Array,
+    eps_pos: jax.Array,
+    eps_neg: jax.Array,
+    beta: jax.Array | float,
+) -> CascadeOut:
+    """Threshold cascade over a precomputed, already-ordered score matrix.
+
+    Args:
+      scores_ordered: (N, T), column r = f_{pi(r)}(x_i).
+      eps_pos / eps_neg: (T,).
+      beta: full-ensemble decision threshold.
+    """
+    n, T = scores_ordered.shape
+    init = (
+        jnp.zeros(n, scores_ordered.dtype),
+        jnp.ones(n, dtype=bool),
+        jnp.zeros(n, dtype=bool),
+        jnp.full(n, T, dtype=jnp.int32),
+        jnp.int32(0),
+    )
+    xs = (scores_ordered.T, eps_pos.astype(scores_ordered.dtype), eps_neg.astype(scores_ordered.dtype))
+    (g, active, decided_pos, exit_step, _), _ = jax.lax.scan(
+        functools.partial(_step, beta), init, xs
+    )
+    decisions = jnp.where(active, g >= beta, decided_pos)
+    return CascadeOut(decisions, exit_step, exit_step, g)
+
+
+def cascade_apply(
+    stacked_params: Any,
+    apply_fn: Callable[[Any, jax.Array], jax.Array],
+    x: jax.Array,
+    eps_pos: jax.Array,
+    eps_neg: jax.Array,
+    beta: jax.Array | float,
+) -> CascadeOut:
+    """Cascade where base models are evaluated inside the scan.
+
+    Args:
+      stacked_params: pytree whose leaves have a leading T axis, already in
+        QWYC order (see ``pack_model``).
+      apply_fn: (params_t, x) -> (N,) scores of one base model.
+      x: (N, D) examples.
+    """
+    n = x.shape[0]
+    T = eps_pos.shape[0]
+
+    def step(carry, xs):
+        params_t, ep, en = xs
+        f_t = apply_fn(params_t, x)  # all lanes compute; mask gates accounting
+        return _step(beta, carry, (f_t, ep, en))
+
+    init = (
+        jnp.zeros(n, jnp.result_type(float)),
+        jnp.ones(n, dtype=bool),
+        jnp.zeros(n, dtype=bool),
+        jnp.full(n, T, dtype=jnp.int32),
+        jnp.int32(0),
+    )
+    (g, active, decided_pos, exit_step, _), _ = jax.lax.scan(
+        step, init, (stacked_params, eps_pos, eps_neg)
+    )
+    decisions = jnp.where(active, g >= beta, decided_pos)
+    return CascadeOut(decisions, exit_step, exit_step, g)
+
+
+def pack_model(stacked_params: Any, order) -> Any:
+    """Reorder a stacked-parameter pytree's leading axis by the QWYC order."""
+    order = jnp.asarray(order)
+    return jax.tree_util.tree_map(lambda p: p[order], stacked_params)

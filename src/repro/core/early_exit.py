@@ -1,0 +1,99 @@
+"""QWYC depth-level early exit for transformer classifiers.
+
+The additive-ensemble view of a residual-stream transformer: with an exit
+head every ``exit_interval`` layers, the classifier score at exit r is
+s_r(x) = h_r(x) . w_exit — and the per-segment deltas f_t = s_t - s_{t-1}
+form an additive ensemble whose running sum IS the exit-r score.  QWYC's
+threshold machinery (Algorithm 2) then calibrates 2 thresholds per exit so
+that easy inputs leave the network early while agreeing with the full-depth
+decision on >= 1 - alpha of a calibration set.
+
+ORDERING is inapplicable here: layer t consumes layer t-1's output, so pi
+is pinned to depth order — exactly the paper's "Algorithm 2 with a
+pre-selected ordering" regime (DESIGN.md §Arch-applicability).  The full
+joint optimization (Algorithm 1) applies to the exchangeable ensembles
+(GBT/lattice substrate, and MoE experts in ``core/moe_qwyc.py``).
+
+Costs: c_t = number of layers in segment t, so "mean cost" is directly
+mean transformer layers executed per example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qwyc import QWYCModel, evaluate_cascade, fit_thresholds_for_order
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+
+__all__ = ["exit_scores", "calibrate_early_exit", "EarlyExitReport", "evaluate_early_exit"]
+
+
+def exit_scores(
+    params, cfg: ModelConfig, tokens: jax.Array, frontend=None
+) -> jax.Array:
+    """(N, n_exits) classifier scores at every exit point.
+
+    Uses collect_hidden to fetch the per-layer residual stream; the score at
+    exit r is the exit head applied to the (normed) last-token hidden state
+    after layer (r+1) * exit_interval.
+    """
+    assert cfg.exit_interval, "config must set exit_interval"
+    positions = jnp.arange(tokens.shape[1] + (frontend.shape[1] if frontend is not None else 0))
+    _, _, _, hidden = forward(
+        params, cfg, tokens, positions, frontend_embeds=frontend, collect_hidden=True
+    )
+    # hidden: (L, B, S, d) -> last-token states at exit layers
+    exits = np.arange(cfg.exit_interval - 1, cfg.n_layers, cfg.exit_interval)
+    h = hidden[exits, :, -1, :]  # (E, B, d)
+    w = params["exit_heads"]  # (E, d)
+    scores = jnp.einsum("ebd,ed->be", h.astype(jnp.float32), w.astype(jnp.float32))
+    return scores  # (B, E)
+
+
+@dataclasses.dataclass
+class EarlyExitReport:
+    model: QWYCModel
+    mean_layers: float
+    full_layers: int
+    diff_rate: float
+    speedup: float
+
+
+def calibrate_early_exit(
+    scores_calib: np.ndarray,
+    cfg: ModelConfig,
+    alpha: float = 0.01,
+    beta: float = 0.0,
+    mode: str = "both",
+) -> QWYCModel:
+    """Fit per-exit thresholds (Algorithm 2, depth order) on calibration
+    exit scores (N, n_exits)."""
+    s = np.asarray(scores_calib, dtype=np.float64)
+    deltas = np.diff(np.concatenate([np.zeros((s.shape[0], 1)), s], axis=1), axis=1)
+    n_exits = deltas.shape[1]
+    costs = np.full(n_exits, float(cfg.exit_interval))
+    return fit_thresholds_for_order(
+        deltas, np.arange(n_exits), costs=costs, beta=beta, alpha=alpha, mode=mode
+    )
+
+
+def evaluate_early_exit(
+    model: QWYCModel, scores_test: np.ndarray, cfg: ModelConfig
+) -> EarlyExitReport:
+    s = np.asarray(scores_test, dtype=np.float64)
+    deltas = np.diff(np.concatenate([np.zeros((s.shape[0], 1)), s], axis=1), axis=1)
+    ev = evaluate_cascade(model, deltas)
+    mean_layers = ev["mean_cost"]  # costs were layers-per-segment
+    full = cfg.n_layers
+    return EarlyExitReport(
+        model=model,
+        mean_layers=float(mean_layers),
+        full_layers=full,
+        diff_rate=float(ev["diff_rate"]),
+        speedup=full / float(mean_layers),
+    )

@@ -1,0 +1,5 @@
+"""Data pipelines: synthetic paper-analogue datasets + LM token pipeline."""
+
+from repro.data.synthetic import DATASETS, Dataset, make_dataset
+
+__all__ = ["DATASETS", "Dataset", "make_dataset"]

@@ -1,0 +1,20 @@
+"""Base-model ensembles (GBT, lattices) — the paper's experimental substrate."""
+
+from repro.ensembles.gbt import GBTParams, apply_gbt, apply_gbt_scores, train_gbt
+from repro.ensembles.lattice import (
+    apply_lattice,
+    apply_lattice_scores,
+    init_lattice_ensemble,
+    train_lattice_ensemble,
+)
+
+__all__ = [
+    "GBTParams",
+    "apply_gbt",
+    "apply_gbt_scores",
+    "train_gbt",
+    "apply_lattice",
+    "apply_lattice_scores",
+    "init_lattice_ensemble",
+    "train_lattice_ensemble",
+]

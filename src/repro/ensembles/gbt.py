@@ -1,0 +1,177 @@
+"""Gradient-boosted oblivious trees, trained on host, evaluated in JAX.
+
+The paper's benchmark experiments (UCI Adult / Nomao) use GBT ensembles of
+T=500 depth-5/9 trees.  We use *oblivious* trees (one (feature, threshold)
+pair per level, shared across the level) because they evaluate as a pure
+index-computation + LUT gather — exactly the shape TPUs like, and the form
+our Pallas tree kernel implements.  Training is second-order boosting on the
+logistic loss with quantile-binned greedy level search, vectorized so each
+level costs O(D * N).
+
+Parameters (stacked over T trees, ready for jnp / the tree kernel):
+    feats:  (T, depth) int32   feature id per level
+    thrs:   (T, depth) float32 threshold per level
+    leaves: (T, 2**depth) float32 leaf values (already scaled by learning rate)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GBTParams", "train_gbt", "apply_gbt", "apply_gbt_scores"]
+
+
+@dataclasses.dataclass
+class GBTParams:
+    feats: np.ndarray
+    thrs: np.ndarray
+    leaves: np.ndarray
+    base_score: float  # prior logit added to the full sum
+
+    @property
+    def T(self) -> int:
+        return int(self.feats.shape[0])
+
+    @property
+    def depth(self) -> int:
+        return int(self.feats.shape[1])
+
+    def stacked(self) -> dict:
+        return {
+            "feats": jnp.asarray(self.feats),
+            "thrs": jnp.asarray(self.thrs),
+            "leaves": jnp.asarray(self.leaves),
+        }
+
+
+def _sigmoid(z):
+    return 1.0 / (1.0 + np.exp(-z))
+
+
+def _fit_oblivious_tree(
+    x: np.ndarray,
+    grad: np.ndarray,
+    hess: np.ndarray,
+    bins: np.ndarray,
+    edges: np.ndarray,
+    depth: int,
+    l2: float,
+    rng: np.random.Generator,
+    feature_subsample: float = 1.0,
+):
+    """One oblivious tree via greedy level-wise search on binned features.
+
+    bins:  (N, D) int16 — precomputed quantile bin of each feature value.
+    edges: (D, B) float — bin upper edges (threshold candidates).
+    """
+    n, d = bins.shape
+    b = edges.shape[1]
+    leaf = np.zeros(n, dtype=np.int64)
+    feats, thrs = [], []
+    active_feats = np.arange(d)
+    if feature_subsample < 1.0:
+        k = max(1, int(round(d * feature_subsample)))
+        active_feats = rng.choice(d, size=k, replace=False)
+    for lev in range(depth):
+        n_leaf = 1 << lev
+        best = (-np.inf, 0, 0)  # (gain, feat, bin_k)
+        for f in active_feats:
+            # joint (leaf, bin) histogram of grad & hess in one bincount pass
+            idx = leaf * b + bins[:, f]
+            cnt_g = np.bincount(idx, weights=grad, minlength=n_leaf * b).reshape(n_leaf, b)
+            cnt_h = np.bincount(idx, weights=hess, minlength=n_leaf * b).reshape(n_leaf, b)
+            gl = np.cumsum(cnt_g, axis=1)  # left stats for threshold k = bins <= k
+            hl = np.cumsum(cnt_h, axis=1)
+            gt = gl[:, -1:]
+            ht = hl[:, -1:]
+            gr = gt - gl
+            hr = ht - hl
+            gain_k = (gl**2 / (hl + l2) + gr**2 / (hr + l2)).sum(axis=0)  # (B,)
+            k = int(np.argmax(gain_k[:-1]))  # last bin = no split
+            if gain_k[k] > best[0]:
+                best = (float(gain_k[k]), int(f), k)
+        _, f, k = best
+        feats.append(f)
+        thrs.append(float(edges[f, k]))
+        leaf = 2 * leaf + (bins[:, f] > k)
+    # Newton leaf values
+    n_leaves = 1 << depth
+    gs = np.bincount(leaf, weights=grad, minlength=n_leaves)
+    hs = np.bincount(leaf, weights=hess, minlength=n_leaves)
+    values = gs / (hs + l2)
+    return np.asarray(feats), np.asarray(thrs), values
+
+
+def train_gbt(
+    x: np.ndarray,
+    y: np.ndarray,
+    n_trees: int = 500,
+    depth: int = 5,
+    lr: float = 0.1,
+    n_bins: int = 32,
+    l2: float = 1.0,
+    feature_subsample: float = 1.0,
+    seed: int = 0,
+    verbose: bool = False,
+) -> GBTParams:
+    """Boosted logistic-loss training (residual = y - p, Newton leaves)."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    n, d = x.shape
+    rng = np.random.default_rng(seed)
+    # quantile bin edges per feature
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    edges = np.quantile(x, qs, axis=0).T  # (D, B-1)
+    edges = np.concatenate([edges, x.max(0)[:, None] + 1.0], axis=1)  # (D, B)
+    bins = np.empty((n, d), dtype=np.int16)
+    for f in range(d):
+        bins[:, f] = np.searchsorted(edges[f], x[:, f], side="left")
+    bins = np.minimum(bins, n_bins - 1)
+
+    p0 = np.clip(y.mean(), 1e-6, 1 - 1e-6)
+    base = float(np.log(p0 / (1 - p0)))
+    s = np.full(n, base)
+    feats = np.zeros((n_trees, depth), dtype=np.int32)
+    thrs = np.zeros((n_trees, depth), dtype=np.float32)
+    leaves = np.zeros((n_trees, 1 << depth), dtype=np.float32)
+    for t in range(n_trees):
+        p = _sigmoid(s)
+        grad = y - p
+        hess = np.maximum(p * (1 - p), 1e-6)
+        f_t, thr_t, val_t = _fit_oblivious_tree(
+            x, grad, hess, bins, edges, depth, l2, rng, feature_subsample
+        )
+        feats[t], thrs[t] = f_t, thr_t
+        leaves[t] = lr * val_t
+        # update scores: evaluate the new tree on the binned data
+        leaf = np.zeros(n, dtype=np.int64)
+        for j in range(depth):
+            leaf = 2 * leaf + (x[:, f_t[j]] > thr_t[j])
+        s = s + leaves[t][leaf]
+        if verbose and (t + 1) % 50 == 0:
+            loss = -(y * np.log(_sigmoid(s)) + (1 - y) * np.log(1 - _sigmoid(s))).mean()
+            acc = ((s >= 0) == (y > 0.5)).mean()
+            print(f"[gbt] tree {t+1}/{n_trees} loss={loss:.4f} acc={acc:.4f}")
+    return GBTParams(feats=feats, thrs=thrs, leaves=leaves, base_score=base)
+
+
+def apply_gbt_scores(params: dict, x: jax.Array) -> jax.Array:
+    """Per-tree scores (N, T) — the QWYC ``F`` matrix.  Pure jnp (oracle for
+    the Pallas tree kernel)."""
+    feats, thrs, leaves = params["feats"], params["thrs"], params["leaves"]
+    xg = jnp.take(x, feats.reshape(-1), axis=1)  # (N, T*depth)
+    xg = xg.reshape(x.shape[0], *feats.shape)  # (N, T, depth)
+    bits = (xg > thrs[None]).astype(jnp.int32)
+    depth = feats.shape[1]
+    pow2 = 2 ** jnp.arange(depth - 1, -1, -1, dtype=jnp.int32)
+    idx = jnp.einsum("ntd,d->nt", bits, pow2)  # (N, T) leaf index per tree
+    return jnp.take_along_axis(leaves[None], idx[:, :, None], axis=2)[..., 0]
+
+
+def apply_gbt(params: dict, x: jax.Array, base_score: float = 0.0) -> jax.Array:
+    """Full-ensemble logit f(x)."""
+    return apply_gbt_scores(params, x).sum(axis=1) + base_score

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (ensemble eval).
+
+cascade_kernel: blocked early-exit cascade (the QWYC serving loop).
+lattice_kernel: multilinear lattice interpolation (real-world base models).
+tree_kernel:    oblivious-forest evaluation (benchmark GBT base models).
+
+All validated against pure-jnp oracles in ``ref.py`` via interpret=True.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.cascade_kernel import cascade_pallas
+from repro.kernels.lattice_kernel import lattice_scores_pallas
+from repro.kernels.tree_kernel import gbt_scores_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "cascade_pallas",
+    "lattice_scores_pallas",
+    "gbt_scores_pallas",
+]

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: blocked early-exit cascade ("quit when you can").
+
+TPU adaptation of the paper's per-example sequential early exit.  Examples
+are tiled into VMEM blocks of ``block_n`` rows; within a block the kernel
+walks the QWYC-ordered base models in chunks of ``chunk_t`` and *stops the
+walk for the whole block* once every lane has exited — per-BLOCK early exit,
+the SIMD-compatible analogue of the paper's per-example exit.  QWYC's
+ordering maximizes early-exit probability, which directly maximizes the
+chance an entire block retires after few chunks.
+
+The score tile for a block is DMA'd to VMEM up-front (BlockSpec), so the
+skip saves VPU compute, not HBM traffic; on real hardware a further win comes
+from `memory_space=ANY` + manual chunk DMA, which we document in
+EXPERIMENTS.md §Perf rather than emulate here.  When base models are *real*
+models (trees/lattices), the serving path composes this kernel's threshold
+logic with the tree/lattice kernels instead of a precomputed score matrix.
+
+Grid: (ceil(N / block_n),).  Block shapes: scores (block_n, T) in VMEM,
+thresholds (T,) replicated, outputs (block_n,) int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_CHUNK_T = 8
+
+__all__ = ["cascade_pallas"]
+
+
+def _cascade_kernel(
+    scores_ref,  # (block_n, T) VMEM
+    eps_pos_ref,  # (1, T)
+    eps_neg_ref,  # (1, T)
+    dec_ref,  # (block_n,) int32 out
+    exit_ref,  # (block_n,) int32 out
+    *,
+    T: int,
+    chunk_t: int,
+    beta: float,
+):
+    block_n = scores_ref.shape[0]
+    n_chunks = pl.cdiv(T, chunk_t)
+
+    def chunk_body(state):
+        c, g, active, decided_pos, exit_step = state
+
+        def step_body(j, inner):
+            g, active, decided_pos, exit_step = inner
+            t = c * chunk_t + j
+            in_range = t < T
+            tc = jnp.minimum(t, T - 1)
+            f_t = scores_ref[:, tc]
+            ep = eps_pos_ref[0, tc]
+            en = eps_neg_ref[0, tc]
+            live = active & in_range
+            g = g + jnp.where(live, f_t, 0.0)
+            out_neg = live & (g < en)  # negative exit priority
+            out_pos = live & (g > ep) & ~out_neg
+            newly = out_neg | out_pos
+            decided_pos = jnp.where(out_pos, True, decided_pos)
+            exit_step = jnp.where(newly, t + 1, exit_step)
+            active = active & ~newly
+            return g, active, decided_pos, exit_step
+
+        g, active, decided_pos, exit_step = jax.lax.fori_loop(
+            0, chunk_t, step_body, (g, active, decided_pos, exit_step)
+        )
+        return c + 1, g, active, decided_pos, exit_step
+
+    def chunk_cond(state):
+        c, _, active, _, _ = state
+        # quit when you can: the whole block stops once no lane is active
+        return (c < n_chunks) & jnp.any(active)
+
+    init = (
+        jnp.int32(0),
+        jnp.zeros((block_n,), scores_ref.dtype),
+        jnp.ones((block_n,), dtype=jnp.bool_),
+        jnp.zeros((block_n,), dtype=jnp.bool_),
+        jnp.full((block_n,), T, dtype=jnp.int32),
+    )
+    _, g, active, decided_pos, exit_step = jax.lax.while_loop(
+        chunk_cond, chunk_body, init
+    )
+    decisions = jnp.where(active, g >= beta, decided_pos)
+    dec_ref[...] = decisions.astype(jnp.int32)
+    exit_ref[...] = exit_step
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta", "block_n", "chunk_t", "interpret")
+)
+def cascade_pallas(
+    scores_ordered: jax.Array,
+    eps_pos: jax.Array,
+    eps_neg: jax.Array,
+    beta: float,
+    block_n: int = DEFAULT_BLOCK_N,
+    chunk_t: int = DEFAULT_CHUNK_T,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked early-exit cascade.  Returns (decisions int32, exit_step int32).
+
+    ``scores_ordered`` is (N, T), already permuted to QWYC order.  N is padded
+    to a multiple of ``block_n`` internally (padded lanes exit immediately via
+    a 0-score + wide-open thresholds trick and are sliced off).
+    """
+    n, T = scores_ordered.shape
+    n_pad = -n % block_n
+    if n_pad:
+        scores_ordered = jnp.pad(scores_ordered, ((0, n_pad), (0, 0)))
+    np_total = scores_ordered.shape[0]
+    eps_pos2 = eps_pos.reshape(1, T).astype(scores_ordered.dtype)
+    eps_neg2 = eps_neg.reshape(1, T).astype(scores_ordered.dtype)
+    grid = (np_total // block_n,)
+    kernel = functools.partial(
+        _cascade_kernel, T=T, chunk_t=chunk_t, beta=float(beta)
+    )
+    dec, exit_step = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, T), lambda i: (i, 0)),
+            pl.BlockSpec((1, T), lambda i: (0, 0)),
+            pl.BlockSpec((1, T), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_total,), jnp.int32),
+            jax.ShapeDtypeStruct((np_total,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores_ordered, eps_pos2, eps_neg2)
+    return dec[:n], exit_step[:n]

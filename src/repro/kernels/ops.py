@@ -1,0 +1,44 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op dispatches to the Pallas kernel (interpret=True on CPU — the kernel
+body executes in Python for bit-level validation; on TPU set
+``repro.kernels.INTERPRET = False`` / pass interpret=False) and is paired
+with a pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.cascade_kernel import cascade_pallas
+from repro.kernels.lattice_kernel import lattice_scores_pallas
+from repro.kernels.tree_kernel import gbt_scores_pallas
+
+__all__ = [
+    "cascade_decide",
+    "lattice_scores",
+    "gbt_scores",
+    "ref",
+]
+
+# Flip to False when running on real TPU hardware.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def cascade_decide(scores_ordered, eps_pos, eps_neg, beta, **kw):
+    """Early-exit cascade -> (decisions int32, exit_step int32)."""
+    kw.setdefault("interpret", INTERPRET)
+    return cascade_pallas(scores_ordered, eps_pos, eps_neg, beta, **kw)
+
+
+def lattice_scores(theta, feats, x, **kw):
+    """(N, T) lattice base-model scores."""
+    kw.setdefault("interpret", INTERPRET)
+    return lattice_scores_pallas(theta, feats, x, **kw)
+
+
+def gbt_scores(feats, thrs, leaves, x, **kw):
+    """(N, T) oblivious-tree base-model scores."""
+    kw.setdefault("interpret", INTERPRET)
+    return gbt_scores_pallas(feats, thrs, leaves, x, **kw)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-level semantics reference: tests sweep shapes and
+dtypes and assert the kernels (run with ``interpret=True`` on CPU) match
+these to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cascade_ref", "lattice_scores_ref", "gbt_scores_ref"]
+
+
+def cascade_ref(
+    scores_ordered: jax.Array,
+    eps_pos: jax.Array,
+    eps_neg: jax.Array,
+    beta: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Early-exit cascade over an ordered score matrix.
+
+    Returns (decisions int32 {0,1}, exit_step int32 1-based; T if no early
+    exit).  Negative exit has priority at a step (matches core/cascade.py).
+    """
+    n, T = scores_ordered.shape
+    g = jnp.cumsum(scores_ordered, axis=1)
+    hit_pos = g > eps_pos[None, :]
+    hit_neg = g < eps_neg[None, :]
+    hit = hit_pos | hit_neg
+    any_hit = hit.any(axis=1)
+    first = jnp.where(any_hit, jnp.argmax(hit, axis=1), T - 1)
+    exit_step = jnp.where(any_hit, first + 1, T).astype(jnp.int32)
+    rows = jnp.arange(n)
+    early_pos = hit_pos[rows, first] & ~hit_neg[rows, first]
+    full_pos = g[:, -1] >= beta
+    decisions = jnp.where(any_hit, early_pos, full_pos)
+    return decisions.astype(jnp.int32), exit_step
+
+
+def lattice_scores_ref(theta: jax.Array, feats: jax.Array, x: jax.Array) -> jax.Array:
+    """Multilinear lattice interpolation, (N, T) scores.
+
+    theta: (T, 2**S); feats: (T, S) int32; x: (N, D) in [0, 1].
+    """
+    S = feats.shape[1]
+
+    def one(th, fsub):
+        xs = jnp.take(x, fsub, axis=1)  # (N, S)
+        v = jnp.broadcast_to(th, (x.shape[0],) + th.shape).reshape(
+            (x.shape[0],) + (2,) * S
+        )
+        for j in range(S):
+            x_j = xs[:, j].reshape((-1,) + (1,) * (S - 1 - j))
+            v = v[:, 0] * (1.0 - x_j) + v[:, 1] * x_j
+        return v.reshape(x.shape[0])
+
+    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(theta, feats)
+
+
+def gbt_scores_ref(
+    feats: jax.Array, thrs: jax.Array, leaves: jax.Array, x: jax.Array
+) -> jax.Array:
+    """Oblivious-forest evaluation, (N, T) per-tree scores.
+
+    feats/thrs: (T, depth); leaves: (T, 2**depth); x: (N, D).
+    MSB-first bit order: idx = ((idx * 2) + bit_level) over levels.
+    """
+    depth = feats.shape[1]
+    xg = jnp.take(x, feats.reshape(-1), axis=1).reshape(x.shape[0], *feats.shape)
+    bits = (xg > thrs[None]).astype(jnp.int32)
+    pow2 = 2 ** jnp.arange(depth - 1, -1, -1, dtype=jnp.int32)
+    idx = jnp.einsum("ntd,d->nt", bits, pow2)
+    return jnp.take_along_axis(leaves[None], idx[:, :, None], axis=2)[..., 0]

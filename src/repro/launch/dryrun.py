@@ -1,0 +1,186 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, prove it fits, and extract roofline terms.
+
+MUST be the first jax-touching import in the process (XLA locks the device
+count on first init) — hence the os.environ lines above everything.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--resume]
+
+``--all`` runs each pair in a fresh subprocess (compile memory is released
+between pairs) and aggregates into benchmarks/results/dryrun_<mesh>.json.
+"""
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+
+def run_pair(arch: str, shape: str, multi_pod: bool, skip_cost: bool = False,
+             variants: tuple = ()) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import SHAPES, build_dryrun, cfg_for_pair
+    from repro.models.config import active_param_count, param_count
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    # production variant: scanned layers + microbatch accumulation.  This is
+    # the program that must compile and fit (memory proof).
+    step, abs_args, in_sh, _ = build_dryrun(cfg, shape, mesh, variants=variants)
+    t0 = time.time()
+    jitted = jax.jit(step, in_shardings=in_sh)
+    lowered = jitted.lower(*abs_args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = hlo_stats.memory_stats(compiled)
+
+    if skip_cost:
+        # multi-pod pass: lower+compile proof only (roofline is single-pod)
+        scale, t_cost = 1, 0.0
+        cost = hlo_stats.cost_stats(compiled)
+        coll = hlo_stats.collective_bytes(compiled.as_text())
+        coll_total = coll["total"]
+    else:
+        # cost variant: unrolled scans (trip-count-accurate flops/collectives),
+        # one microbatch lowered and scaled back up.
+        step_c, abs_c, in_sh_c, scale = build_dryrun(
+            cfg, shape, mesh, cost_variant=True, variants=variants
+        )
+        t0 = time.time()
+        compiled_c = jax.jit(step_c, in_shardings=in_sh_c).lower(*abs_c).compile()
+        t_cost = time.time() - t0
+        cost = hlo_stats.cost_stats(compiled_c)
+        coll = hlo_stats.collective_bytes(compiled_c.as_text())
+        cost = {k: v * scale for k, v in cost.items()}
+        coll_total = coll["total"] * scale
+    terms = hlo_stats.roofline_terms(cost["flops"], cost["bytes_accessed"], coll_total)
+
+    sh = SHAPES[shape]
+    n_active = active_param_count(cfg)
+    tokens = sh.global_batch * (sh.seq_len if sh.kind in ("train", "prefill") else 1)
+    mult = 6 if sh.kind == "train" else 2
+    model_flops_global = mult * n_active * tokens
+    model_flops_device = model_flops_global / n_chips
+    ratio = model_flops_device / cost["flops"] if cost["flops"] else 0.0
+
+    eff_cfg = cfg_for_pair(cfg, sh)
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "variants": list(variants),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "window_override": eff_cfg.serve_window_override,
+        "params": param_count(cfg),
+        "active_params": n_active,
+        "flops_per_device": cost["flops"],
+        "bytes_per_device": cost["bytes_accessed"],
+        "collective_bytes_per_device": coll_total,
+        "scan_scale": scale,
+        "collectives": {k: v * scale for k, v in coll["by_kind"].items()},
+        "collective_counts": coll["counts"],
+        "memory": mem,
+        "roofline": terms,
+        "dominant": hlo_stats.dominant_term(terms),
+        "model_flops_per_device": model_flops_device,
+        "useful_flops_ratio": ratio,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "cost_variant_compile_s": round(t_cost, 1),
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--json-out")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--variant", default="", help="comma-separated: bf16,absorb,nofsdp,micro<N>")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCHS  # light import (no jax device init)
+        from repro.launch.specs import SHAPES
+
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        out_path = pathlib.Path("benchmarks/results") / f"dryrun_{mesh_tag}.json"
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        results = {}
+        if args.resume and out_path.exists():
+            results = json.loads(out_path.read_text())
+        for arch in ARCHS:
+            for shape in SHAPES:
+                key = f"{arch}|{shape}"
+                if key in results and "error" not in results[key]:
+                    continue
+                cmd = [
+                    sys.executable,
+                    "-m",
+                    "repro.launch.dryrun",
+                    "--arch",
+                    arch,
+                    "--shape",
+                    shape,
+                    "--json-out",
+                    "/tmp/dryrun_pair.json",
+                ]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                if args.skip_cost or args.multi_pod:
+                    cmd.append("--skip-cost")
+                t0 = time.time()
+                try:
+                    proc = subprocess.run(
+                        cmd, capture_output=True, text=True, timeout=args.timeout
+                    )
+                    if proc.returncode == 0:
+                        results[key] = json.loads(
+                            pathlib.Path("/tmp/dryrun_pair.json").read_text()
+                        )
+                        print(
+                            f"[dryrun] {key} OK dominant={results[key]['dominant']} "
+                            f"({time.time()-t0:.0f}s)"
+                        )
+                    else:
+                        results[key] = {"error": proc.stderr[-2000:]}
+                        print(f"[dryrun] {key} FAILED ({time.time()-t0:.0f}s)")
+                except subprocess.TimeoutExpired:
+                    results[key] = {"error": f"timeout after {args.timeout}s"}
+                    print(f"[dryrun] {key} TIMEOUT")
+                out_path.write_text(json.dumps(results, indent=1))
+        n_ok = sum(1 for v in results.values() if "error" not in v)
+        print(f"[dryrun] {n_ok}/{len(results)} pairs OK -> {out_path}")
+        return
+
+    variants = tuple(v for v in args.variant.split(",") if v)
+    record = run_pair(args.arch, args.shape, args.multi_pod, args.skip_cost, variants)
+    print(json.dumps(record, indent=1))
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(record))
+
+
+if __name__ == "__main__":
+    main()

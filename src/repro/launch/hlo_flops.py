@@ -1,0 +1,63 @@
+"""Per-op flop attribution from compiled HLO text — the 'profiler' of the
+dry-run world.  Parses every ``dot`` / ``convolution`` line, computes
+2 * prod(output_shape) * contracted_size, and buckets by the op_name
+metadata (jax source traceback label) so the dominant compute sites are
+visible without real hardware.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_LINE = re.compile(
+    r"= (\w+)\[([\d,]*)\][^ ]* dot\((.*?)\)"
+)
+_OPERAND_SHAPE = re.compile(r"\w+\[([\d,]*)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_METype = re.compile(r'op_name="([^"]*)"')
+
+
+def _dims(s: str) -> list[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def dot_flops_by_site(hlo_text: str, top: int = 15) -> list[tuple[str, float]]:
+    """Returns [(op_name_prefix, flops)] for the top flop sites (per device)."""
+    sites: dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _LINE.search(line)
+        if not m:
+            continue
+        _, out_dims_s, operands = m.groups()
+        out_dims = _dims(out_dims_s)
+        mc = _CONTRACT.search(line)
+        # contracted size from the lhs operand shape
+        shapes = _OPERAND_SHAPE.findall(operands)
+        contracted = 1
+        if mc and shapes:
+            lhs = _dims(shapes[0])
+            for ci in _dims(mc.group(1)):
+                if ci < len(lhs):
+                    contracted *= lhs[ci]
+        out_size = 1
+        for d in out_dims:
+            out_size *= d
+        flops = 2.0 * out_size * contracted
+        mn = _METype.search(line)
+        name = mn.group(1) if mn else "<unknown>"
+        # bucket by a compact label: strip jit wrappers, keep the tail
+        label = "/".join(name.split("/")[-3:])
+        sites[label] += flops
+    ranked = sorted(sites.items(), key=lambda kv: -kv[1])
+    return ranked[:top]
+
+
+def summarize(hlo_text: str, top: int = 15) -> str:
+    rows = dot_flops_by_site(hlo_text, top)
+    total = sum(f for _, f in dot_flops_by_site(hlo_text, 10**6))
+    out = [f"total dot flops (per device, uncorrected for scans): {total:.3e}"]
+    for label, f in rows:
+        out.append(f"  {f:12.3e}  ({100*f/max(total,1):5.1f}%)  {label}")
+    return "\n".join(out)

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialization).
+
+Topology (TPU v5e target):
+  single pod:  (16, 16)      axes ("data", "model")        = 256 chips
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py sets this)"
+        )
+    # more devices than the mesh needs (e.g. 512 placeholders, single-pod 256)
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh for CPU smoke tests (1 real device)."""
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), SINGLE_POD_AXES)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes the batch dimension shards over (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,164 @@
+"""Rule-based parameter / cache / batch sharding policies.
+
+The policy is FSDP+TP hybrid:
+  * every weight matrix shards its input-ish dim over the data axes (FSDP,
+    so a 104B model + AdamW state fits 512 chips) and its output-ish dim
+    over the model axis (TP),
+  * MoE expert banks shard the expert dim over "model" (expert parallelism
+    — the dispatch boundary lowers to all-to-all),
+  * the (B, S, d) residual stream is pinned to (batch -> data, d -> model),
+  * KV caches shard batch over data and sequence over model for batched
+    decode; for long_500k (batch=1) the cache sequence shards over data.
+
+Any rule that does not divide evenly for a given architecture degrades to
+replication on that dim (``_fit``), so every config lowers.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+REPLICATED_NAMES = {
+    "ln1",
+    "ln2",
+    "final_norm",
+    "q_norm",
+    "k_norm",
+    "kv_norm",
+    "mu",
+    "w_base",
+    "u",
+    "lam",
+    "mix_b",
+    "w_b",
+    "conv_w",
+    "router",
+    "exit_heads",
+}
+IN_PROJ_NAMES = {
+    "wq",
+    "wk",
+    "wv",
+    "wi",
+    "wg",
+    "wq_a",
+    "wq_b",
+    "wkv_a",
+    "wk_b",
+    "wv_b",
+    "mix_a",
+    "w_a",
+    "w_x",
+    "w_y",
+    "wr",
+}
+OUT_PROJ_NAMES = {"wo", "w_o"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _is_scanned(path) -> bool:
+    return any(getattr(e, "key", None) == "layers" for e in path)
+
+
+def _fit(spec: tuple, shape: tuple, mesh: jax.sharding.Mesh) -> P:
+    """Drop axes that don't divide the dim evenly (degrade to replication)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        out.append(ax if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_pspec(path, leaf, mesh: jax.sharding.Mesh, data_ax) -> P:
+    """data_ax=None -> weights replicated over the data axes (TP only)."""
+    name = _leaf_name(path)
+    shape = leaf.shape
+    scan = 1 if _is_scanned(path) else 0
+    nd = len(shape) - scan
+    if name in REPLICATED_NAMES or nd <= 1:
+        spec = (None,) * nd
+    elif name == "tok":
+        spec = ("model", data_ax)
+    elif name == "unembed":
+        spec = (data_ax, "model")
+    elif name in IN_PROJ_NAMES and nd == 3:  # MoE expert bank (e, d, f)
+        spec = ("model", data_ax, None)
+    elif name in OUT_PROJ_NAMES and nd == 3:  # MoE (e, f, d)
+        spec = ("model", None, data_ax)
+    elif name in IN_PROJ_NAMES:
+        spec = (data_ax, "model")
+    elif name in OUT_PROJ_NAMES:
+        spec = ("model", data_ax)
+    else:
+        spec = (None,) * nd
+    full = (None,) * scan + tuple(spec)
+    return _fit(full, shape, mesh)
+
+
+def cache_pspec(path, leaf, mesh, batch_ax, seq_ax) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    scan = 1 if len(shape) > 0 and any(
+        getattr(e, "key", None) == "stack" for e in path
+    ) else 0
+    nd = len(shape) - scan
+    if name in ("k", "v"):  # (B, len, kv, hd)
+        spec = (batch_ax, seq_ax, None, None)
+    elif name == "pos":  # (B, len)
+        spec = (batch_ax, seq_ax)
+    elif name == "lat":  # (B, len, width)
+        spec = (batch_ax, seq_ax, None)
+    elif name == "state":  # (B, H, hd, hd)
+        spec = (batch_ax, "model", None, None)
+    elif name == "last_x":  # (B, d)
+        spec = (batch_ax, "model")
+    elif name == "h":  # (B, dr)
+        spec = (batch_ax, "model")
+    elif name == "conv":  # (B, cw-1, dr)
+        spec = (batch_ax, None, "model")
+    else:
+        spec = (None,) * nd
+    full = (None,) * scan + tuple(spec)
+    return _fit(full, shape, mesh)
+
+
+def tree_shardings(tree, mesh, pspec_fn) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, pspec_fn(path, leaf)), tree
+    )
+
+
+def param_shardings(abs_params, mesh, data_ax):
+    return tree_shardings(
+        abs_params, mesh, lambda p, l: param_pspec(p, l, mesh, data_ax)
+    )
+
+
+def cache_shardings(abs_cache, mesh, batch_ax, seq_ax):
+    return tree_shardings(
+        abs_cache, mesh, lambda p, l: cache_pspec(p, l, mesh, batch_ax, seq_ax)
+    )
+
+
+def batch_shardings(abs_batch, mesh, batch_ax):
+    def pspec(path, leaf):
+        nd = len(leaf.shape)
+        return _fit((batch_ax,) + (None,) * (nd - 1), leaf.shape, mesh)
+
+    return tree_shardings(abs_batch, mesh, pspec)

@@ -1,0 +1,194 @@
+"""Assigned input shapes and abstract argument builders for the dry-run.
+
+Every (architecture x input shape) pair resolves to a step function plus
+ShapeDtypeStruct stand-ins for all its inputs (weak-type-correct, shardable,
+no device allocation) and the matching NamedShardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import shardings as SH
+from repro.models.config import ModelConfig
+from repro.models.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.transformer import abstract_params, init_cache
+from repro.optim.adamw import adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+TRAIN_MICROBATCH = 32
+TRAIN_MICROBATCH_BIG = 16  # >50B params: halve the microbatch so the
+# per-device step footprint stays under the 16 GB v5e HBM budget
+
+
+def train_microbatch(cfg: ModelConfig) -> int:
+    from repro.models.config import param_count
+
+    return TRAIN_MICROBATCH_BIG if param_count(cfg) > 50e9 else TRAIN_MICROBATCH
+
+# long_500k: full-attention archs run a sliding-window serving variant
+# (window 8192) — documented deviation (DESIGN.md §Shape carve-outs).
+# MLA (deepseek) keeps full attention: its compressed latent cache IS the
+# long-context mechanism.  SSM/hybrid archs are natively sub-quadratic.
+LONG_WINDOW = 8192
+FULL_ATTN_NEEDS_WINDOW = {
+    "qwen3-1.7b",
+    "command-r-plus-104b",
+    "command-r-35b",
+    "internvl2-26b",
+    "qwen3-moe-30b-a3b",
+    "musicgen-large",
+}
+
+
+def cfg_for_pair(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if shape.name == "long_500k" and cfg.name in FULL_ATTN_NEEDS_WINDOW:
+        return cfg.scaled(serve_window_override=LONG_WINDOW)
+    return cfg
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _batch_abstract(cfg: ModelConfig, shape: InputShape) -> dict:
+    s_front = cfg.n_frontend_tokens
+    s_text = shape.seq_len - s_front
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, s_text), jnp.int32)
+    }
+    if s_front:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, s_front, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+def build_dryrun(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh: jax.sharding.Mesh,
+    cost_variant: bool = False,
+    variants: tuple[str, ...] = (),
+):
+    """Returns (step_fn, abstract_args tuple, in_shardings tuple, scale).
+
+    ``cost_variant=True`` builds the roofline accounting variant: layer
+    scans are UNROLLED (XLA's cost analysis counts loop bodies once, so the
+    production scanned program under-reports flops by the trip count) and
+    the train microbatch-accumulation scan is replaced by lowering a single
+    microbatch; the returned ``scale`` restores per-step totals
+    (flops/bytes/collective-bytes multiply by scale).  The production
+    (scanned) variant is what proves memory fit and compile-ability.
+    """
+    shape = SHAPES[shape_name]
+    cfg = cfg_for_pair(cfg, shape)
+    if "absorb" in variants:
+        cfg = cfg.scaled(mla_absorb=True)
+    data_ax = tuple(a for a in mesh.axis_names if a != "model")
+    data_ax = data_ax if len(data_ax) > 1 else data_ax[0]
+    batch_ax = data_ax if shape.global_batch > 1 else None
+    # "nofsdp": replicate weights over the data axes (pure tensor
+    # parallelism) — kills the per-microbatch FSDP weight all-gathers; only
+    # viable when params + optimizer state fit per-device (small models).
+    param_data_ax = None if "nofsdp" in variants else data_ax
+    compute_dtype = jnp.bfloat16 if "bf16" in variants else None
+    # "noresid": drop the residual-stream d->model sharding constraint.  For
+    # small models the constraint's per-layer activation all-gathers dominate
+    # the collective term; without it GSPMD keeps activations batch-sharded
+    # (viable when per-device activations fit, i.e. NOT for 50B+ models).
+    no_resid = "noresid" in variants
+    micro_override = next((int(v[5:]) for v in variants if v.startswith("micro")), 0)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        micro = micro_override or train_microbatch(cfg)
+        residual = None if no_resid else NamedSharding(mesh, P(batch_ax, None, "model"))
+        if cost_variant and shape.global_batch > micro:
+            scale = shape.global_batch // micro
+            shape = dataclasses.replace(shape, global_batch=micro)
+            step = make_train_step(
+                cfg, microbatch=0, remat=True, residual_sharding=residual,
+                unroll=True, compute_dtype=compute_dtype,
+            )
+        else:
+            scale = 1
+            step = make_train_step(
+                cfg,
+                microbatch=micro,
+                remat=True,
+                residual_sharding=residual,
+                unroll=cost_variant,
+                compute_dtype=compute_dtype,
+            )
+        # "bf16params": store the trained weights in bf16 outright (fp32
+        # AdamW moments) — the FSDP all-gathers then genuinely move bf16;
+        # casting fp32 masters proved futile (XLA hoists the convert past
+        # the gather: §Perf Pair 1 iterations 1-2).
+        train_dtype = jnp.bfloat16 if "bf16params" in variants else jnp.float32
+        abs_params = abstract_params(cfg, train_dtype)
+        abs_opt = jax.eval_shape(
+            lambda p: adamw_init(p, moment_dtype=jnp.float32), abs_params
+        )
+        abs_batch = _batch_abstract(cfg, shape)
+        sh_params = SH.param_shardings(abs_params, mesh, param_data_ax)
+        sh_opt = SH.param_shardings(abs_opt, mesh, param_data_ax)
+        sh_batch = SH.batch_shardings(abs_batch, mesh, batch_ax)
+        return step, (abs_params, abs_opt, abs_batch), (sh_params, sh_opt, sh_batch), scale
+
+    serve_dtype = jnp.bfloat16
+    abs_params = abstract_params(cfg, serve_dtype)
+    sh_params = SH.param_shardings(abs_params, mesh, param_data_ax)
+    # cache sharding: batched decode shards (batch->data, seq->model);
+    # batch=1 long-context shards the cache sequence over data instead.
+    seq_ax = "model" if shape.global_batch > 1 else data_ax
+    abs_cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, serve_dtype)
+    )
+    sh_cache = SH.cache_shardings(abs_cache, mesh, batch_ax, seq_ax)
+
+    if shape.kind == "prefill":
+        abs_batch = _batch_abstract(cfg, shape)
+        sh_batch = SH.batch_shardings(abs_batch, mesh, batch_ax)
+        residual = NamedSharding(mesh, P(batch_ax, None, "model"))
+        step = make_prefill_step(cfg, residual_sharding=residual, unroll=cost_variant)
+        return (
+            step,
+            (abs_params, abs_cache, abs_batch),
+            (sh_params, sh_cache, sh_batch),
+            1,
+        )
+
+    # decode: one token per sequence, cache length = seq_len
+    abs_tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    abs_pos = jax.ShapeDtypeStruct((), jnp.int32)
+    sh_tokens = NamedSharding(mesh, SH._fit((batch_ax, None), abs_tokens.shape, mesh))
+    step = make_decode_step(cfg, unroll=cost_variant)
+    return (
+        step,
+        (abs_params, abs_cache, abs_tokens, abs_pos),
+        (sh_params, sh_cache, sh_tokens, repl),
+        1,
+    )

@@ -1,0 +1,33 @@
+"""Model substrate: unified decoder over all assigned architecture families."""
+
+from repro.models.config import ModelConfig, active_param_count, param_count
+from repro.models.steps import (
+    init_train_state,
+    loss_fn,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.transformer import (
+    abstract_cache,
+    abstract_params,
+    forward,
+    init_cache,
+    init_params,
+)
+
+__all__ = [
+    "ModelConfig",
+    "abstract_cache",
+    "abstract_params",
+    "active_param_count",
+    "forward",
+    "init_cache",
+    "init_params",
+    "init_train_state",
+    "loss_fn",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+    "param_count",
+]

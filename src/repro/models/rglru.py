@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),   i_t = sigmoid(W_i x)
+
+wrapped in the Griffin recurrent block: linear in-projection to 2 branches,
+short temporal conv (width 4) on the recurrent branch, RG-LRU, gated merge,
+out-projection.  Train/prefill scan over time; decode carries (h, conv tail).
+
+Cache: RGLRUCache(h (B, dr), conv (B, conv_width-1, dr)).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense
+
+Params = dict[str, Any]
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    dr = d  # recurrent width = d_model (Griffin uses ~d)
+    keys = jax.random.split(key, 7)
+    return {
+        "w_x": init_dense(keys[0], d, dr, dtype),  # recurrent branch in-proj
+        "w_y": init_dense(keys[1], d, dr, dtype),  # gate branch in-proj
+        "conv_w": (jax.random.normal(keys[2], (cfg.conv_width, dr)) * 0.1).astype(dtype),
+        "w_a": init_dense(keys[3], dr, dr, dtype),  # recurrence gate
+        "w_i": init_dense(keys[4], dr, dr, dtype),  # input gate
+        "lam": (jax.random.uniform(keys[5], (dr,)) * 3.0 + 1.0).astype(dtype),
+        "w_o": init_dense(keys[6], dr, d, dtype),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    dr = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+    }
+
+
+def apply_rglru(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    b, s, d = x.shape
+    xb = x @ p["w_x"]  # recurrent branch (B, S, dr)
+    yb = jax.nn.gelu(x @ p["w_y"])  # gate branch
+
+    # short causal conv over time
+    tail = (
+        cache["conv"]
+        if cache is not None
+        else jnp.zeros((b, cfg.conv_width - 1, xb.shape[-1]), xb.dtype)
+    )
+    xc = jnp.concatenate([tail, xb], axis=1)  # (B, cw-1+S, dr)
+    conv = sum(
+        xc[:, j : j + s] * p["conv_w"][j][None, None] for j in range(cfg.conv_width)
+    )
+    new_tail = xc[:, -(cfg.conv_width - 1) :] if cache is not None else None
+
+    # RG-LRU
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a_exp = -cfg.rglru_c * lam[None, None] * jax.nn.sigmoid(
+        (conv @ p["w_a"]).astype(jnp.float32)
+    )
+    a = jnp.exp(a_exp)  # (B, S, dr)
+    gate_in = jax.nn.sigmoid((conv @ p["w_i"]).astype(jnp.float32))
+    drive = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0)) * gate_in * conv.astype(jnp.float32)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, conv.shape[-1]), jnp.float32)
+
+    def step(h, inp):
+        at, dt = inp
+        h = at * h + dt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), drive.swapaxes(0, 1)))
+    rec = hs.swapaxes(0, 1).astype(x.dtype)  # (B, S, dr)
+
+    out = (rec * yb) @ p["w_o"]
+    new_cache = {"h": h_last, "conv": new_tail} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,130 @@
+"""RWKV6 ("Finch") time-mix block — attention-free token mixing.
+
+Implements the v6 recurrence with data-dependent decay:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (per head, hd x hd state)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with data-dependent token-shift interpolation (ddlerp via a small LoRA) for
+the r/k/v/w/g projections, per-channel decay w_t = exp(-exp(ww_t)), and a
+gated output.  Train/prefill run a lax.scan over time (O(S) — the reason
+rwkv runs the long_500k shape natively); decode is a single recurrence step
+carrying (state, last_x).
+
+Cache: RWKVCache(state (B, H, hd, hd), last_x (B, d)).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+
+Params = dict[str, Any]
+
+LORA_R = 32
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    h = cfg.rnn_heads or cfg.n_heads
+    hd = d // h
+    keys = jax.random.split(key, 12)
+    p: Params = {
+        "wr": init_dense(keys[0], d, d, dtype),
+        "wk": init_dense(keys[1], d, d, dtype),
+        "wv": init_dense(keys[2], d, d, dtype),
+        "wg": init_dense(keys[3], d, d, dtype),
+        "wo": init_dense(keys[4], d, d, dtype),
+        # base token-shift mix coefficients per channel for r/k/v/w/g
+        "mu": (jax.random.uniform(keys[5], (5, d)) * 0.5 + 0.25).astype(dtype),
+        # ddlerp LoRA: delta-mix from the shifted input
+        "mix_a": init_dense(keys[6], d, LORA_R * 5, dtype),
+        "mix_b": (jax.random.normal(keys[7], (5, LORA_R, d)) * 0.01).astype(dtype),
+        # decay: base per-channel + data-dependent LoRA
+        "w_base": (jax.random.normal(keys[8], (d,)) * 0.5 - 5.0).astype(dtype),
+        "w_a": init_dense(keys[9], d, 64, dtype),
+        "w_b": (jax.random.normal(keys[10], (64, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(keys[11], (h, hd)) * 0.1).astype(dtype),  # bonus
+        "ln_x": jnp.ones((d,), dtype),
+    }
+    return p
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.rnn_heads or cfg.n_heads
+    hd = d // h
+    return {
+        "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "last_x": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _projections(p: Params, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """ddlerp token-shift + r/k/v/w/g projections.  x, x_prev: (B, S, d)."""
+    delta = x_prev - x
+    # data-dependent mix offsets (5 lanes via one fused LoRA)
+    lora = jnp.tanh(x @ p["mix_a"]).reshape(*x.shape[:-1], 5, LORA_R)
+    dd = jnp.einsum("bslr,lrd->bsld", lora, p["mix_b"])  # (B, S, 5, d)
+    mix = p["mu"][None, None] + dd  # (B, S, 5, d)
+    xs = x[:, :, None, :] + delta[:, :, None, :] * mix  # (B, S, 5, d)
+    xr, xk, xv, xw, xg = [xs[:, :, i] for i in range(5)]
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    ww = p["w_base"][None, None] + jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    w = jnp.exp(-jnp.exp(ww.astype(jnp.float32)))  # (B, S, d) decay in (0,1)
+    return r, k, v, g, w
+
+
+def apply_rwkv(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    b, s, d = x.shape
+    h = cfg.rnn_heads or cfg.n_heads
+    hd = d // h
+
+    if cache is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        x_prev = jnp.concatenate([cache["last_x"][:, None], x[:, :-1]], axis=1)
+        state0 = cache["state"]
+
+    r, k, v, g, w = _projections(p, x, x_prev, cfg)
+    rh = r.reshape(b, s, h, hd)
+    kh = k.reshape(b, s, h, hd)
+    vh = v.reshape(b, s, h, hd)
+    wh = w.reshape(b, s, h, hd)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # each (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt.astype(jnp.float32), state + p["u"][None, :, :, None] * kv
+        )
+        state = wt.astype(jnp.float32)[..., None] * state + kv
+        return state, out
+
+    xs = (
+        rh.swapaxes(0, 1),
+        kh.swapaxes(0, 1),
+        vh.swapaxes(0, 1),
+        wh.swapaxes(0, 1),
+    )
+    state, outs = jax.lax.scan(step, state0, xs)  # outs: (S, B, H, hd)
+    out = outs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    out = out @ p["wo"]
+    new_cache = {"state": state, "last_x": x[:, -1]} if cache is not None else None
+    return out, new_cache

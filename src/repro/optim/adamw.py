@@ -1,0 +1,99 @@
+"""Minimal pytree AdamW + schedules (no external optimizer dependency).
+
+Used by the ensemble substrate (lattice training), the LM training loop, and
+the examples.  State is a pytree mirroring the params, so it shards exactly
+like the params under pjit (optimizer state sharding falls out for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule", "clip_by_global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def adamw_init(params: Any, moment_dtype=None) -> AdamWState:
+    """moment_dtype: keep fp32 moments for bf16-weight training."""
+
+    def zeros(p):
+        dt = moment_dtype if (moment_dtype and jnp.issubdtype(p.dtype, jnp.floating)) else p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    lr: float | jax.Array = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        # update math in the moment dtype (fp32 for bf16-weight training),
+        # result cast back to the weight dtype
+        new_p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable[[jax.Array], jax.Array]:
+    def lr_at(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr_at

@@ -1,0 +1,3 @@
+from repro.serving.engine import QWYCServer, ServeStats
+
+__all__ = ["QWYCServer", "ServeStats"]

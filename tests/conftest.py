@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_scores(rng, n=400, t=20, signal=0.4):
+    """Random additive-ensemble score matrix with shared per-example signal
+    (so base models correlate with the full score, as in real ensembles)."""
+    z = rng.normal(size=(n, 1))
+    return (rng.normal(size=(n, t)) * 0.7 + signal * z).astype(np.float64)

@@ -1,0 +1,37 @@
+"""Fan et al. (2002) dynamic-scheduling baseline (Appendix C)."""
+
+import numpy as np
+
+from conftest import make_scores
+from repro.core import evaluate_fan, fit_fan
+
+
+def test_fan_runs_and_is_faithful_at_high_gamma(rng):
+    F = make_scores(rng, n=600, t=30)
+    m = fit_fan(F, np.arange(30), lam=0.05, gamma=6.0)
+    ev = evaluate_fan(m, F)
+    assert ev["diff_rate"] <= 0.01  # wide thresholds: near-faithful
+    assert 1.0 <= ev["mean_models"] <= 30
+
+
+def test_gamma_monotone_tradeoff(rng):
+    """Larger gamma -> wider (more conservative) bins -> more models
+    evaluated and fewer classification differences."""
+    F = make_scores(rng, n=600, t=30)
+    m = fit_fan(F, np.arange(30), lam=0.05, gamma=1.0)
+    models, diffs = [], []
+    for gamma in (0.5, 1.0, 2.0, 4.0):
+        ev = evaluate_fan(m, F, gamma=gamma)
+        models.append(ev["mean_models"])
+        diffs.append(ev["diff_rate"])
+    assert all(a <= b + 1e-12 for a, b in zip(models, models[1:]))
+    assert all(a >= b - 1e-12 for a, b in zip(diffs, diffs[1:]))
+
+
+def test_unseen_bins_fall_back_to_full_eval(rng):
+    F = make_scores(rng, n=200, t=10)
+    m = fit_fan(F, np.arange(10), lam=0.01, gamma=2.0)
+    # shift test scores far outside the training bin range
+    ev = evaluate_fan(m, F + 1000.0)
+    assert ev["mean_models"] == 10.0  # nothing exits early
+    assert ev["diff_rate"] == 0.0

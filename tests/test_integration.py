@@ -1,0 +1,149 @@
+"""End-to-end system tests: ensemble training -> QWYC -> serving engine,
+early-exit transformers, MoE-expert QWYC, checkpoint roundtrip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    calibrate_early_exit,
+    evaluate_cascade,
+    evaluate_early_exit,
+    evaluate_fan,
+    exit_scores,
+    expert_contributions,
+    fit_fan,
+    fit_moe_qwyc,
+    fit_qwyc,
+    individual_mse_order,
+    report_moe_qwyc,
+)
+from repro.data.synthetic import make_dataset
+from repro.ensembles.gbt import train_gbt
+from repro.kernels import ops
+from repro.serving.engine import QWYCServer
+
+
+def test_gbt_qwyc_serving_end_to_end():
+    ds = make_dataset("adult", scale=0.4)
+    gbt = train_gbt(ds.x_train, ds.y_train, n_trees=150, depth=4)
+    st = gbt.stacked()
+
+    def score_fn(x):
+        return ops.gbt_scores(st["feats"], st["thrs"], st["leaves"], jnp.asarray(x))
+
+    beta = -gbt.base_score
+    F_tr = np.asarray(score_fn(ds.x_train))
+    qwyc = fit_qwyc(F_tr, beta=beta, alpha=0.01)
+    assert qwyc.train_diff_rate <= 0.01
+
+    server = QWYCServer(qwyc, score_fn, batch_size=128, backend="sorted-kernel")
+    for row in ds.x_test:
+        server.submit(row)
+    results = server.drain()
+    assert len(results) == len(ds.y_test)
+    st_ = server.stats
+    assert st_.speedup > 2.0  # paper: 2x-4x speedups
+    assert st_.diff_rate < 0.10
+    acc = np.mean([r["decision"] == bool(y) for r, y in zip(results, ds.y_test)])
+    full_acc = np.mean((F_tr.sum(1) >= beta) == (ds.y_train > 0.5))
+    assert acc > 0.65 and full_acc > 0.7
+
+
+def test_qwyc_beats_fan_on_benchmark_style_data():
+    ds = make_dataset("nomao", scale=0.4)
+    gbt = train_gbt(ds.x_train, ds.y_train, n_trees=120, depth=4)
+    st = gbt.stacked()
+    F_tr = np.asarray(ops.gbt_scores(st["feats"], st["thrs"], st["leaves"],
+                                     jnp.asarray(ds.x_train)))
+    F_te = np.asarray(ops.gbt_scores(st["feats"], st["thrs"], st["leaves"],
+                                     jnp.asarray(ds.x_test)))
+    beta = -gbt.base_score
+    q = fit_qwyc(F_tr, beta=beta, alpha=0.005)
+    qe = evaluate_cascade(q, F_te)
+    fan = fit_fan(F_tr, individual_mse_order(F_tr, ds.y_train), lam=0.01,
+                  gamma=3.0, beta=beta)
+    fe = evaluate_fan(fan, F_te)
+    # paper: QWYC* evaluates fewer base models at comparable faithfulness
+    assert qe["mean_models"] < fe["mean_models"]
+
+
+def test_early_exit_transformer():
+    from repro.models.config import ModelConfig
+    from repro.models.transformer import init_params
+
+    cfg = ModelConfig(
+        name="ee", arch_type="dense", n_layers=8, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64, exit_interval=2,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (256, 12), 0, 64)
+    s = np.asarray(exit_scores(params, cfg, toks))
+    assert s.shape == (256, 4)
+    m = calibrate_early_exit(s[:128], cfg, alpha=0.05)
+    rep = evaluate_early_exit(m, s[128:], cfg)
+    assert rep.mean_layers <= cfg.n_layers
+    assert rep.speedup >= 1.0
+
+
+def test_moe_expert_qwyc():
+    from repro.models.config import ModelConfig
+    from repro.models.moe import init_moe
+
+    cfg = ModelConfig(
+        name="mq", arch_type="moe", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=1, head_dim=16, d_ff=64, vocab_size=64, n_experts=8,
+        top_k=3, moe_d_ff=32,
+    )
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, 32))
+    readout = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    C = expert_contributions(p, x, readout, cfg)
+    assert C.shape == (512, 8)
+    # at most top_k experts contribute per token
+    assert (np.count_nonzero(C, axis=1) <= 3).all()
+    m = fit_moe_qwyc(C[:256], alpha=0.02)
+    rep = report_moe_qwyc(m, C[256:])
+    assert rep["mean_experts"] <= 8
+    assert rep["diff_rate"] <= 0.25
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint, latest_step
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="c", arch_type="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64, vocab_size=64)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    save_checkpoint(tmp_path, 42, params)
+    assert latest_step(tmp_path) == 42
+    restored = restore_checkpoint(tmp_path, 42, params)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        params, restored,
+    )
+
+
+def test_cascade_apply_counts_cost():
+    """cascade_apply: lazily-evaluated base models, masked accounting."""
+    from repro.core import cascade_apply, cascade_from_scores, fit_qwyc, pack_model
+
+    rng = np.random.default_rng(0)
+    n, t, d = 200, 10, 4
+    W = rng.normal(size=(t, d)).astype(np.float32)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    F = X @ W.T
+    m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.01)
+    stacked = {"w": jnp.asarray(W)}
+    ordered = pack_model(stacked, m.order)
+    out = cascade_apply(
+        ordered, lambda p, x: x @ p["w"], jnp.asarray(X),
+        jnp.asarray(m.eps_pos), jnp.asarray(m.eps_neg), m.beta,
+    )
+    ref = cascade_from_scores(
+        jnp.asarray(F[:, m.order]), jnp.asarray(m.eps_pos),
+        jnp.asarray(m.eps_neg), m.beta,
+    )
+    np.testing.assert_array_equal(np.asarray(out.decisions), np.asarray(ref.decisions))
+    np.testing.assert_array_equal(np.asarray(out.exit_step), np.asarray(ref.exit_step))

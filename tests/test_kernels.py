@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evaluate_cascade, fit_qwyc
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 300])
+@pytest.mark.parametrize("t", [1, 5, 37])
+@pytest.mark.parametrize("block_n", [8, 64])
+@pytest.mark.parametrize("chunk_t", [1, 4])
+def test_cascade_kernel_sweep(rng, n, t, block_n, chunk_t):
+    F = jnp.asarray(rng.normal(size=(n, t)).astype(np.float32))
+    ep = jnp.asarray((np.abs(rng.normal(size=t)) * 2 + 0.5).astype(np.float32))
+    en = -ep
+    d1, e1 = ops.cascade_decide(F, ep, en, 0.2, block_n=block_n, chunk_t=chunk_t)
+    d2, e2 = ref.cascade_ref(F, ep, en, 0.2)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_cascade_kernel_matches_qwyc_evaluator(rng):
+    """Kernel agrees with the host-side QWYC cascade on a real fitted model."""
+    F = rng.normal(size=(400, 24)) + 0.4 * rng.normal(size=(400, 1))
+    m = fit_qwyc(F, beta=0.0, alpha=0.01)
+    ev = evaluate_cascade(m, F)
+    d, e = ops.cascade_decide(
+        jnp.asarray(F[:, m.order].astype(np.float32)),
+        jnp.asarray(m.eps_pos.astype(np.float32)),
+        jnp.asarray(m.eps_neg.astype(np.float32)),
+        m.beta,
+        block_n=64,
+    )
+    np.testing.assert_array_equal(np.asarray(d).astype(bool), ev["decisions"])
+    np.testing.assert_array_equal(np.asarray(e), ev["exit_step"])
+
+
+@pytest.mark.parametrize("s", [1, 2, 5, 8])
+@pytest.mark.parametrize("t", [1, 6])
+@pytest.mark.parametrize("n", [4, 130])
+def test_lattice_kernel_sweep(rng, s, t, n):
+    d = max(s, 9)
+    theta = jnp.asarray(rng.normal(size=(t, 1 << s)).astype(np.float32))
+    feats = jnp.asarray(
+        np.stack([rng.choice(d, s, replace=False) for _ in range(t)]).astype(np.int32)
+    )
+    x = jnp.asarray(rng.uniform(size=(n, d)).astype(np.float32))
+    got = ops.lattice_scores(theta, feats, x, block_n=64)
+    want = ref.lattice_scores_ref(theta, feats, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_lattice_kernel_corners(rng):
+    """At hypercube corners the interpolation must return theta exactly."""
+    s, d = 4, 6
+    theta = jnp.asarray(rng.normal(size=(1, 1 << s)).astype(np.float32))
+    feats = jnp.asarray(np.arange(s, dtype=np.int32)[None])
+    corners = np.zeros((1 << s, d), np.float32)
+    for c in range(1 << s):
+        for j in range(s):
+            corners[c, j] = (c >> (s - 1 - j)) & 1
+    got = ops.lattice_scores(theta, feats, jnp.asarray(corners), block_n=16)
+    np.testing.assert_allclose(np.asarray(got)[:, 0], np.asarray(theta)[0], atol=1e-6)
+
+
+@pytest.mark.parametrize("depth", [1, 4, 6])
+@pytest.mark.parametrize("t", [1, 9])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_tree_kernel_sweep(rng, depth, t, dtype):
+    d, n = 11, 200
+    feats = jnp.asarray(rng.integers(0, d, size=(t, depth)).astype(np.int32))
+    thrs = jnp.asarray(rng.uniform(size=(t, depth)).astype(dtype))
+    leaves = jnp.asarray(rng.normal(size=(t, 1 << depth)).astype(dtype))
+    x = jnp.asarray(rng.uniform(size=(n, d)).astype(dtype))
+    got = ops.gbt_scores(feats, thrs, leaves, x, block_n=64)
+    want = ref.gbt_scores_ref(feats, thrs, leaves, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_tree_kernel_matches_training_eval(rng):
+    """Kernel agrees with the numpy leaf-walk used during GBT training."""
+    from repro.data.synthetic import make_dataset
+    from repro.ensembles.gbt import train_gbt
+
+    ds = make_dataset("nomao", scale=0.05)
+    gbt = train_gbt(ds.x_train, ds.y_train, n_trees=20, depth=4)
+    st = gbt.stacked()
+    got = np.asarray(ops.gbt_scores(st["feats"], st["thrs"], st["leaves"],
+                                    jnp.asarray(ds.x_test)))
+    # numpy walk
+    n = ds.x_test.shape[0]
+    want = np.zeros((n, 20), np.float32)
+    for t in range(20):
+        leaf = np.zeros(n, np.int64)
+        for j in range(gbt.depth):
+            leaf = 2 * leaf + (ds.x_test[:, gbt.feats[t, j]] > gbt.thrs[t, j])
+        want[:, t] = gbt.leaves[t][leaf]
+    np.testing.assert_allclose(got, want, atol=1e-6)

@@ -1,0 +1,50 @@
+"""Multi-class QWYC extension (paper §6 'straightforward to extend')."""
+
+import numpy as np
+import pytest
+
+from repro.core.multiclass import evaluate_multiclass, fit_qwyc_multiclass
+
+
+def make_mc_scores(rng, n=300, t=12, k=4, signal=0.6):
+    cls = rng.integers(0, k, size=n)
+    base = rng.normal(size=(n, t, k)) * 0.5
+    boost = np.zeros((n, t, k))
+    boost[np.arange(n), :, cls] = signal
+    return base + boost
+
+
+def test_alpha_zero_exact(rng):
+    F = make_mc_scores(rng)
+    m = fit_qwyc_multiclass(F, alpha=0.0)
+    ev = evaluate_multiclass(m, F)
+    assert ev["diff_rate"] == 0.0
+    assert ev["mean_models"] < 12  # some examples must exit early
+    assert abs(ev["mean_models"] - m.train_mean_models) < 1e-12
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.01, 0.05])
+def test_constraint(rng, alpha):
+    F = make_mc_scores(rng, n=400)
+    m = fit_qwyc_multiclass(F, alpha=alpha)
+    assert m.train_diff_rate <= alpha + 1e-12
+    assert (m.eps[np.isfinite(m.eps)] >= 0).all()
+
+
+def test_binary_reduces_to_sign_consistency(rng):
+    """K=2 multiclass margin exit must also satisfy its constraint and
+    degenerate gracefully."""
+    F = make_mc_scores(rng, k=2)
+    m = fit_qwyc_multiclass(F, alpha=0.02)
+    ev = evaluate_multiclass(m, F)
+    assert ev["diff_rate"] <= 0.02 + 1e-12
+
+
+def test_ordering_helps(rng):
+    """One base model is made decisive: QWYC should schedule it first."""
+    F = make_mc_scores(rng, t=8, signal=0.1)
+    cls = F.sum(axis=1).argmax(axis=1)
+    F[np.arange(F.shape[0]), 5, cls] += 5.0  # model 5 nails the decision
+    m = fit_qwyc_multiclass(F, alpha=0.0)
+    assert m.order[0] == 5
+    assert m.train_mean_models < 3.0

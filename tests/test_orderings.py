@@ -1,0 +1,48 @@
+"""Pre-selected orderings (Appendix B)."""
+
+import numpy as np
+
+from conftest import make_scores
+from repro.core import (
+    gbt_order,
+    greedy_mse_order,
+    individual_mse_order,
+    random_order,
+)
+
+
+def test_orders_are_permutations(rng):
+    F = make_scores(rng, n=100, t=12)
+    y = (rng.uniform(size=100) < 0.5).astype(int)
+    for order in (
+        gbt_order(12),
+        random_order(12, seed=3),
+        individual_mse_order(F, y),
+        greedy_mse_order(F, y),
+    ):
+        assert sorted(order.tolist()) == list(range(12))
+
+
+def test_individual_mse_picks_best_single_model(rng):
+    y = (rng.uniform(size=300) < 0.5).astype(float)
+    yy = 2 * y - 1
+    F = rng.normal(size=(300, 5))
+    F[:, 3] = yy + 0.01 * rng.normal(size=300)  # near-perfect model
+    order = individual_mse_order(F, y)
+    assert order[0] == 3
+
+
+def test_greedy_mse_diversifies(rng):
+    """Two duplicated strong models: greedy should NOT pick the duplicate
+    second (it adds nothing to the partial-ensemble MSE)."""
+    y = (rng.uniform(size=400) < 0.5).astype(float)
+    yy = 2 * y - 1
+    F = rng.normal(size=(400, 4)) * 0.3
+    F[:, 0] = yy  # already matches the target on its own
+    F[:, 1] = yy  # duplicate: adding it OVERSHOOTS the +-1 target
+    F[:, 2] = 0.1 * rng.normal(size=400)  # near-zero model: harmless addition
+    ind = individual_mse_order(F, y)
+    assert set(ind[:2]) == {0, 1}  # individual MSE ranks the twins together
+    greedy = greedy_mse_order(F, y)
+    assert greedy[0] in (0, 1)
+    assert greedy[1] not in (0, 1)  # greedy skips the overshooting twin

@@ -1,0 +1,87 @@
+"""QWYC optimizer (Algorithm 1): paper's worked example + invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_scores
+from repro.core import evaluate_cascade, fit_qwyc, fit_thresholds_for_order
+
+
+def pipeline_example():
+    """Appendix A.1: 8 examples, 3 base models, c=1, beta=0."""
+    F = np.zeros((8, 3))
+    F[0, 0], F[1, 0] = 1, -1
+    F[2, 1], F[3, 1], F[4, 1] = 1, 1, -1
+    F[4, 2], F[5, 2], F[6, 2], F[7, 2] = -1, 1, -1, -1
+    return F
+
+
+def test_pipeline_example_order_and_cost():
+    m = fit_qwyc(pipeline_example(), beta=0.0, alpha=0.0)
+    # f3 must go first (paper: optimal order pi = [3, 2, 1]).
+    assert m.order[0] == 2
+    # The paper's OPT under the S_t(i)=S_t(1) restriction is 7/4; the actual
+    # greedy exploits position effects (S_1(2) > S_1(1)) and does better.
+    assert m.train_mean_cost <= 7 / 4 + 1e-9
+    assert m.train_diff_rate == 0.0
+
+
+def test_alpha_zero_is_exact(rng):
+    F = make_scores(rng, n=300, t=15)
+    m = fit_qwyc(F, beta=0.0, alpha=0.0)
+    ev = evaluate_cascade(m, F)
+    assert ev["diff_rate"] == 0.0
+    assert ev["mean_models"] <= 15
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.005, 0.02, 0.1])
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_train_constraint_satisfied(rng, alpha, mode):
+    F = make_scores(rng, n=500, t=25)
+    m = fit_qwyc(F, beta=0.1, alpha=alpha, mode=mode)
+    assert m.train_diff_rate <= alpha + 1e-12
+    ev = evaluate_cascade(m, F)  # same data -> identical accounting
+    assert abs(ev["diff_rate"] - m.train_diff_rate) < 1e-12
+    assert abs(ev["mean_models"] - m.train_mean_models) < 1e-12
+    assert (m.eps_neg <= m.eps_pos).all()
+
+
+def test_joint_beats_or_ties_identity_order(rng):
+    """QWYC* (Algorithm 1) should not do worse on TRAIN cost than
+    Algorithm 2 on the identity ordering (greedy picks identity if best)."""
+    F = make_scores(rng, n=400, t=20)
+    joint = fit_qwyc(F, beta=0.0, alpha=0.01)
+    fixed = fit_thresholds_for_order(F, np.arange(20), beta=0.0, alpha=0.01)
+    assert joint.train_mean_cost <= fixed.train_mean_cost + 1e-9
+
+
+def test_costs_respected(rng):
+    """With one base model made very expensive, QWYC* should not put it
+    first when a competitive cheap model exists."""
+    F = make_scores(rng, n=400, t=10)
+    costs = np.ones(10)
+    costs[3] = 1000.0
+    m = fit_qwyc(F, costs=costs, beta=0.0, alpha=0.01)
+    assert m.order[0] != 3
+
+
+def test_neg_only_never_early_positive(rng):
+    F = make_scores(rng, n=300, t=12)
+    m = fit_qwyc(F, beta=0.0, alpha=0.02, mode="neg_only")
+    assert (m.eps_pos == np.inf).all()
+    ev = evaluate_cascade(m, F)
+    # every positively-classified example paid the full ensemble
+    full_pos = F.sum(1) >= 0.0
+    assert (ev["exit_step"][ev["decisions"]] == 12).all()
+
+
+@given(seed=st.integers(0, 50), t=st.integers(2, 12), alpha=st.floats(0, 0.1))
+@settings(max_examples=25, deadline=None)
+def test_property_constraint_and_shapes(seed, t, alpha):
+    rng = np.random.default_rng(seed)
+    F = make_scores(rng, n=120, t=t)
+    m = fit_qwyc(F, beta=0.0, alpha=alpha)
+    assert sorted(m.order.tolist()) == list(range(t))
+    assert m.train_diff_rate <= alpha + 1e-12
+    assert 1.0 <= m.train_mean_models <= t + 1e-9

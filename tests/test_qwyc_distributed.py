@@ -1,0 +1,27 @@
+"""On-device (shardable) QWYC candidate sweep vs the numpy optimizer."""
+
+import numpy as np
+
+from conftest import make_scores
+from repro.core import evaluate_cascade, fit_qwyc
+from repro.core.qwyc_distributed import fit_qwyc_sharded
+
+
+def test_sharded_matches_numpy_constraints(rng):
+    F = make_scores(rng, n=300, t=15).astype(np.float32).astype(np.float64)
+    for alpha in (0.0, 0.01, 0.05):
+        a = fit_qwyc(F, beta=0.0, alpha=alpha)
+        b = fit_qwyc_sharded(F, beta=0.0, alpha=alpha)
+        # both satisfy the constraint and land within a hair of each other
+        # (fp32 on-device sums vs fp64 host sums can flip exact ties)
+        assert b.train_diff_rate <= alpha + 1e-12
+        assert abs(a.train_mean_models - b.train_mean_models) < 0.75
+        ev = evaluate_cascade(b, F)
+        assert abs(ev["mean_models"] - b.train_mean_models) < 1e-9
+
+
+def test_sharded_neg_only(rng):
+    F = make_scores(rng, n=200, t=10)
+    m = fit_qwyc_sharded(F, beta=0.0, alpha=0.02, mode="neg_only")
+    assert (m.eps_pos == np.inf).all()
+    assert m.train_diff_rate <= 0.02 + 1e-12

@@ -1,0 +1,82 @@
+"""Sharding policy: every param/cache spec must divide evenly on the
+production mesh for every architecture (mocked mesh — no 256 devices here)."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch.shardings import cache_pspec, param_pspec
+from repro.launch.specs import SHAPES, cfg_for_pair
+from repro.models.transformer import abstract_params, init_cache
+
+
+def mock_mesh(shape=(16, 16), axes=("data", "model")):
+    return types.SimpleNamespace(axis_names=axes, devices=np.empty(shape))
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _check_divisible(spec, shape, mesh):
+    sizes = _axis_sizes(mesh)
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        assert dim % total == 0, (spec, shape)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh_cfg", [((16, 16), ("data", "model")),
+                                      ((2, 16, 16), ("pod", "data", "model"))])
+def test_param_specs_divide(arch, mesh_cfg):
+    mesh = mock_mesh(*mesh_cfg)
+    data_ax = tuple(a for a in mesh.axis_names if a != "model")
+    data_ax = data_ax if len(data_ax) > 1 else data_ax[0]
+    abs_params = abstract_params(ARCHS[arch])
+    flat, _ = jax.tree_util.tree_flatten_with_path(abs_params)
+    n_sharded = 0
+    for path, leaf in flat:
+        spec = param_pspec(path, leaf, mesh, data_ax)
+        _check_divisible(tuple(spec), leaf.shape, mesh)
+        if any(s is not None for s in spec):
+            n_sharded += 1
+    # the big weights must actually shard (policy sanity, not just fallback)
+    assert n_sharded >= len(flat) // 3
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, shape_name):
+    mesh = mock_mesh()
+    shape = SHAPES[shape_name]
+    cfg = cfg_for_pair(ARCHS[arch], shape)
+    abs_cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+    )
+    batch_ax = "data" if shape.global_batch > 1 else None
+    seq_ax = "model" if shape.global_batch > 1 else "data"
+    flat, _ = jax.tree_util.tree_flatten_with_path(abs_cache)
+    for path, leaf in flat:
+        spec = cache_pspec(path, leaf, mesh, batch_ax, seq_ax)
+        _check_divisible(tuple(spec), leaf.shape, mesh)
+
+
+def test_moe_expert_dim_shards():
+    mesh = mock_mesh()
+    abs_params = abstract_params(ARCHS["qwen3-moe-30b-a3b"])
+    flat, _ = jax.tree_util.tree_flatten_with_path(abs_params)
+    found = False
+    for path, leaf in flat:
+        name = [getattr(e, "key", "") for e in path]
+        if "moe" in name and name[-1] == "wi":
+            spec = param_pspec(path, leaf, mesh, "data")
+            assert spec[1] == "model"  # expert dim (after scan dim) on model
+            found = True
+    assert found

@@ -1,0 +1,87 @@
+"""Algorithm 2 threshold optimizer: exact sort-based == literal binary search,
+plus budget/constraint invariants (hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.thresholds import (
+    optimize_step_thresholds,
+    optimize_threshold_bisect,
+    optimize_threshold_sorted,
+)
+
+
+def _exits_errors(g, fp, thr, side):
+    if side == "neg":
+        m = g < thr
+        return int(m.sum()), int((m & fp).sum())
+    m = g > thr
+    return int(m.sum()), int((m & ~fp).sum())
+
+
+@given(
+    data=st.data(),
+    n=st.integers(1, 120),
+    budget=st.integers(0, 20),
+    side=st.sampled_from(["neg", "pos"]),
+)
+@settings(max_examples=200, deadline=None)
+def test_sorted_matches_bisect(data, n, budget, side):
+    g = np.asarray(
+        data.draw(
+            st.lists(
+                st.floats(-100, 100, allow_nan=False), min_size=n, max_size=n
+            )
+        )
+    )
+    fp = np.asarray(data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    a = optimize_threshold_sorted(g, fp, budget, side)
+    b = optimize_threshold_bisect(g, fp, budget, side)
+    # both must be feasible and exit the same (maximal) number of examples
+    assert a.n_errors <= budget and b.n_errors <= budget
+    assert a.n_exited >= b.n_exited  # sorted is exact; bisect can only tie/lose
+    ea, ra = _exits_errors(g, fp, a.threshold, side)
+    assert ea == a.n_exited and ra == a.n_errors
+
+
+@given(
+    data=st.data(),
+    n=st.integers(2, 100),
+    budget=st.integers(0, 10),
+)
+@settings(max_examples=100, deadline=None)
+def test_step_thresholds_budget_and_order(data, n, budget):
+    g = np.asarray(
+        data.draw(st.lists(st.floats(-50, 50, allow_nan=False), min_size=n, max_size=n))
+    )
+    fp = np.asarray(data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    neg, pos = optimize_step_thresholds(g, fp, budget, mode="both")
+    assert neg.n_errors + pos.n_errors <= budget
+    # neg exits only full-negatives beyond its budget; exits are disjoint
+    neg_mask = g < neg.threshold if np.isfinite(neg.threshold) else np.zeros(n, bool)
+    pos_mask = (g > pos.threshold) & ~neg_mask if np.isfinite(pos.threshold) else np.zeros(n, bool)
+    assert not (neg_mask & pos_mask).any()
+
+
+def test_budget_monotonicity(rng):
+    g = rng.normal(size=500)
+    fp = rng.uniform(size=500) < 0.4
+    prev = -1
+    for budget in (0, 2, 5, 10, 50):
+        r = optimize_threshold_sorted(g, fp, budget, "neg")
+        assert r.n_exited >= prev
+        prev = r.n_exited
+
+
+def test_neg_only_mode(rng):
+    g = rng.normal(size=200)
+    fp = rng.uniform(size=200) < 0.3
+    neg, pos = optimize_step_thresholds(g, fp, 5, mode="neg_only")
+    assert pos.threshold == np.inf and pos.n_exited == 0
+    assert neg.n_errors <= 5
+
+
+def test_empty_input():
+    neg, pos = optimize_step_thresholds(np.array([]), np.array([], bool), 3)
+    assert neg.n_exited == 0 and pos.n_exited == 0
