@@ -1,0 +1,144 @@
+"""Eager full-matrix vs lazy chunked execution (DESIGN.md §4).
+
+The paper's cost model says early-exited examples skip the remaining base
+models; this benchmark measures whether the serving path actually does.
+For a trained GBT ensemble across exit-rate regimes (alpha sweep):
+
+  * eager: Pallas tree kernel scores the full (N, T) matrix, then the
+    blocked cascade kernel walks the thresholds — the historical path,
+    which pays for every score whether or not the cascade reads it.
+  * lazy:  ``ops.score_and_decide`` — per stage, the tree kernel is invoked
+    with a model range and a survivor row gather, the chunk-decide kernel
+    tests thresholds, and the active set is compacted.
+
+Reported: wall seconds (interpret-mode, RELATIVE only — EXPERIMENTS.md
+§Perf), base-model scores actually computed, and a FLOP proxy
+(scores x per-tree eval cost).  The acceptance property — scores_lazy <
+N*T whenever the exit rate is nonzero — is checked here and surfaced as a
+row field so ``benchmarks/run.py`` can report it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gbt_ensemble_for, save_rows
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.kernels import ops
+
+ALPHAS = (0.0, 0.005, 0.02, 0.1)
+
+
+def _tree_flops(depth: int) -> int:
+    """Per-(example, tree) eval cost: depth compares + one-hot @ LUT."""
+    return depth + 2 * (1 << depth)
+
+
+def run(
+    dataset: str = "adult",
+    T: int = 100,
+    depth: int = 5,
+    scale: float = 0.25,
+    chunk_t: int = 8,
+    block_n: int = 64,
+    max_n: int = 512,
+    alphas=ALPHAS,
+) -> list[dict]:
+    gbt, F_tr, F_te, beta, ds = gbt_ensemble_for(dataset, T, depth, scale)
+    st = gbt.stacked()
+    x_te = np.asarray(ds.x_test[:max_n], dtype=np.float32)
+    n = x_te.shape[0]
+    rows = []
+    for alpha in alphas:
+        m = fit_qwyc(F_tr, beta=beta, alpha=alpha)
+        plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+        F_sub = np.asarray(F_te[:max_n], dtype=np.float64)
+        ev = evaluate_cascade(m, F_sub)
+        exit_rate = float((ev["exit_step"] < T).mean())
+
+        # cascade-ordered stacked params, permuted once at plan build
+        of = jnp.asarray(np.asarray(st["feats"])[m.order])
+        ot = jnp.asarray(np.asarray(st["thrs"])[m.order])
+        ol = jnp.asarray(np.asarray(st["leaves"])[m.order])
+        xj = jnp.asarray(x_te)
+
+        def eager():
+            scores = ops.gbt_scores(
+                st["feats"], st["thrs"], st["leaves"], xj, block_n=block_n
+            )
+            ordered = jnp.take(scores, jnp.asarray(m.order), axis=1)
+            dec, ex = ops.cascade_decide(
+                ordered.astype(jnp.float32),
+                jnp.asarray(m.eps_pos.astype(np.float32)),
+                jnp.asarray(m.eps_neg.astype(np.float32)),
+                m.beta,
+                block_n=block_n,
+            )
+            return np.asarray(dec), np.asarray(ex)
+
+        def producer(rows_, t0, t1):
+            return np.asarray(
+                ops.gbt_scores(
+                    of, ot, ol, xj, block_n=block_n,
+                    t0=t0, t1=t1, rows=jnp.asarray(np.asarray(rows_)),
+                )
+            )
+
+        def lazy():
+            return ops.score_and_decide(producer, plan, n, block_n=block_n)
+
+        eager()  # warmup/compile both paths before timing
+        lazy()
+        t0 = time.time()
+        dec_e, ex_e = eager()
+        eager_s = time.time() - t0
+        t0 = time.time()
+        res = lazy()
+        lazy_s = time.time() - t0
+
+        # both paths must agree with the host oracle
+        assert np.array_equal(res.decisions, ev["decisions"])
+        assert np.array_equal(res.exit_step, ev["exit_step"])
+        assert np.array_equal(dec_e.astype(bool), ev["decisions"])
+
+        scores_eager = n * T
+        fl = _tree_flops(depth)
+        rows.append(
+            {
+                "experiment": f"executor_{dataset}",
+                "alpha": alpha,
+                "exit_rate": exit_rate,
+                "mean_models": float(ev["exit_step"].mean()),
+                "T": T,
+                "n": n,
+                "chunk_t": chunk_t,
+                "eager_s": eager_s,
+                "lazy_s": lazy_s,
+                "scores_eager": scores_eager,
+                "scores_lazy": res.scores_computed,
+                "compute_fraction": res.scores_computed / scores_eager,
+                "flops_eager": scores_eager * fl,
+                "flops_lazy": res.scores_computed * fl,
+                "survivors": res.survivors_per_chunk,
+                # acceptance: lazy provably skips work the eager path does
+                "lazy_skips_work": bool(
+                    exit_rate == 0.0 or res.scores_computed < scores_eager
+                ),
+            }
+        )
+    save_rows(f"executor_{dataset}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(
+            f"alpha={r['alpha']:<6} exit_rate={r['exit_rate']:.2f} "
+            f"scores {r['scores_lazy']}/{r['scores_eager']} "
+            f"({r['compute_fraction']:.1%}) "
+            f"eager={r['eager_s']:.2f}s lazy={r['lazy_s']:.2f}s "
+            f"skips_work={r['lazy_skips_work']}"
+        )

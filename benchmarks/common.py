@@ -21,8 +21,10 @@ RESULTS.mkdir(exist_ok=True)
 _CACHE: dict = {}
 
 
-def gbt_scores_for(dataset: str, T: int, depth: int, scale: float):
-    """(F_train, F_test, beta, dataset) for a trained GBT ensemble (cached)."""
+def gbt_ensemble_for(dataset: str, T: int, depth: int, scale: float):
+    """(gbt, F_train, F_test, beta, dataset) for a trained GBT ensemble
+    (cached — the model object rides along so benchmarks that need the
+    stacked params don't retrain)."""
     key = ("gbt", dataset, T, depth, scale)
     if key not in _CACHE:
         ds = make_dataset(dataset, scale=scale)
@@ -34,8 +36,13 @@ def gbt_scores_for(dataset: str, T: int, depth: int, scale: float):
         F_te = np.asarray(
             ops.gbt_scores(st["feats"], st["thrs"], st["leaves"], jnp.asarray(ds.x_test))
         )
-        _CACHE[key] = (F_tr, F_te, -gbt.base_score, ds)
+        _CACHE[key] = (gbt, F_tr, F_te, -gbt.base_score, ds)
     return _CACHE[key]
+
+
+def gbt_scores_for(dataset: str, T: int, depth: int, scale: float):
+    """(F_train, F_test, beta, dataset) for a trained GBT ensemble (cached)."""
+    return gbt_ensemble_for(dataset, T, depth, scale)[1:]
 
 
 def lattice_scores_for(dataset: str, T: int, S: int, training: str, scale: float):

@@ -34,6 +34,7 @@ def main() -> None:
     T_lat = 100 if args.quick else 500
 
     from benchmarks import (
+        bench_executor,
         bench_gbt_tradeoff,
         bench_histograms,
         bench_lattice_rw,
@@ -101,6 +102,25 @@ def main() -> None:
     )
     q = next(r for r in rows if r["method"] == "qwyc_star")
     print(f"fig5_histogram,,qwyc mean={q['mean']:.1f} first_bucket={q['hist'][0]}")
+
+    # Lazy chunked executor vs eager full-matrix (DESIGN.md §4)
+    rows = _cached(
+        "executor_adult",
+        lambda: bench_executor.run(
+            "adult", T=min(100, T_big), scale=min(scale, 0.25)
+        ),
+        args.recompute,
+    )
+    for r in rows:
+        if r["exit_rate"] > 0:
+            assert r["lazy_skips_work"], "lazy path failed to skip work"
+    busiest = min(rows, key=lambda r: r["compute_fraction"])
+    print(
+        f"executor_lazy,,scores {busiest['scores_lazy']}/{busiest['scores_eager']}"
+        f" ({busiest['compute_fraction']:.0%} of eager) at alpha="
+        f"{busiest['alpha']} exit_rate={busiest['exit_rate']:.2f}"
+        f" wall eager={busiest['eager_s']:.2f}s lazy={busiest['lazy_s']:.2f}s"
+    )
 
     # Roofline (from the dry-run grid, if present)
     from benchmarks import roofline

@@ -7,6 +7,14 @@ from repro.core.early_exit import (
     evaluate_early_exit,
     exit_scores,
 )
+from repro.core.executor import (
+    CascadePlan,
+    ChunkedExecutor,
+    ChunkStat,
+    ExecutorResult,
+    decide_chunk_reference,
+    matrix_producer,
+)
 from repro.core.fan import FanModel, evaluate_fan, fit_fan
 from repro.core.moe_qwyc import expert_contributions, fit_moe_qwyc, report_moe_qwyc
 from repro.core.multiclass import (
@@ -29,6 +37,12 @@ from repro.core.qwyc import (
 
 __all__ = [
     "CascadeOut",
+    "CascadePlan",
+    "ChunkStat",
+    "ChunkedExecutor",
+    "ExecutorResult",
+    "decide_chunk_reference",
+    "matrix_producer",
     "EarlyExitReport",
     "calibrate_early_exit",
     "evaluate_early_exit",

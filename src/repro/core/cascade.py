@@ -34,7 +34,9 @@ class CascadeOut(NamedTuple):
     g_final: jax.Array  # (N,) partial score at exit (full score if no exit)
 
 
-def _step(beta, carry, xs):
+def _step(carry, xs):
+    # step semantics mirrored by kernels/cascade_kernel._threshold_step and
+    # core/executor.decide_chunk_reference — keep the three in sync
     g, active, decided_pos, exit_step, step_idx = carry
     f_t, eps_pos_t, eps_neg_t = xs
     g = g + jnp.where(active, f_t, 0.0)
@@ -70,9 +72,7 @@ def cascade_from_scores(
         jnp.int32(0),
     )
     xs = (scores_ordered.T, eps_pos.astype(scores_ordered.dtype), eps_neg.astype(scores_ordered.dtype))
-    (g, active, decided_pos, exit_step, _), _ = jax.lax.scan(
-        functools.partial(_step, beta), init, xs
-    )
+    (g, active, decided_pos, exit_step, _), _ = jax.lax.scan(_step, init, xs)
     decisions = jnp.where(active, g >= beta, decided_pos)
     return CascadeOut(decisions, exit_step, exit_step, g)
 
@@ -99,7 +99,7 @@ def cascade_apply(
     def step(carry, xs):
         params_t, ep, en = xs
         f_t = apply_fn(params_t, x)  # all lanes compute; mask gates accounting
-        return _step(beta, carry, (f_t, ep, en))
+        return _step(carry, (f_t, ep, en))
 
     init = (
         jnp.zeros(n, jnp.result_type(float)),

@@ -8,7 +8,7 @@ All validated against pure-jnp oracles in ``ref.py`` via interpret=True.
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.cascade_kernel import cascade_pallas
+from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
@@ -16,6 +16,7 @@ __all__ = [
     "ops",
     "ref",
     "cascade_pallas",
+    "cascade_chunk_pallas",
     "lattice_scores_pallas",
     "gbt_scores_pallas",
 ]

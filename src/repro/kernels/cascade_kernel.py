@@ -30,7 +30,24 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_N = 256
 DEFAULT_CHUNK_T = 8
 
-__all__ = ["cascade_pallas"]
+__all__ = ["cascade_pallas", "cascade_chunk_pallas"]
+
+
+def _threshold_step(g, active, decided_pos, exit_step, f_t, ep, en, step_1b):
+    """One cascade threshold test — the single source of the step semantics
+    for both Pallas kernels.  Mirrored (bit-identically) by
+    ``core/cascade._step`` and ``core/executor.decide_chunk_reference``;
+    a semantics change here must be replayed there, and the parity tests
+    in tests/test_executor.py / tests/test_kernels.py will catch a skew.
+    """
+    g = g + jnp.where(active, f_t, 0.0)
+    out_neg = active & (g < en)  # negative exit priority (matches fit)
+    out_pos = active & (g > ep) & ~out_neg
+    newly = out_neg | out_pos
+    decided_pos = jnp.where(out_pos, True, decided_pos)
+    exit_step = jnp.where(newly, step_1b, exit_step)
+    active = active & ~newly
+    return g, active, decided_pos, exit_step
 
 
 def _cascade_kernel(
@@ -59,13 +76,12 @@ def _cascade_kernel(
             ep = eps_pos_ref[0, tc]
             en = eps_neg_ref[0, tc]
             live = active & in_range
-            g = g + jnp.where(live, f_t, 0.0)
-            out_neg = live & (g < en)  # negative exit priority
-            out_pos = live & (g > ep) & ~out_neg
-            newly = out_neg | out_pos
-            decided_pos = jnp.where(out_pos, True, decided_pos)
-            exit_step = jnp.where(newly, t + 1, exit_step)
-            active = active & ~newly
+            g, live, decided_pos, exit_step = _threshold_step(
+                g, live, decided_pos, exit_step, f_t, ep, en, t + 1
+            )
+            # out-of-range padding steps must not deactivate lanes: a lane
+            # still active at T is decided by g >= beta, not decided_pos
+            active = jnp.where(in_range, live, active)
             return g, active, decided_pos, exit_step
 
         g, active, decided_pos, exit_step = jax.lax.fori_loop(
@@ -141,3 +157,119 @@ def cascade_pallas(
         interpret=interpret,
     )(scores_ordered, eps_pos2, eps_neg2)
     return dec[:n], exit_step[:n]
+
+
+def _cascade_chunk_kernel(
+    g0_ref,  # (block_n,) carried partial scores
+    scores_ref,  # (block_n, ct) this chunk's scores, VMEM
+    eps_pos_ref,  # (1, ct)
+    eps_neg_ref,  # (1, ct)
+    valid_ref,  # (block_n,) int32: 1 = real row, 0 = padding lane
+    g_ref,  # (block_n,) out
+    active_ref,  # (block_n,) int32 out
+    dec_ref,  # (block_n,) int32 out (1 = exited positive)
+    exit_ref,  # (block_n,) int32 out (absolute 1-based step; 0 = no exit)
+    *,
+    ct: int,
+    t0: int,
+):
+
+    def step_cond(state):
+        j, _, active, _, _ = state
+        # per-block early exit inside the chunk: stop once every lane is out
+        return (j < ct) & jnp.any(active)
+
+    def step_body(state):
+        j, g, active, decided_pos, exit_step = state
+        f_t = scores_ref[:, j]
+        ep = eps_pos_ref[0, j]
+        en = eps_neg_ref[0, j]
+        g, active, decided_pos, exit_step = _threshold_step(
+            g, active, decided_pos, exit_step, f_t, ep, en, t0 + j + 1
+        )
+        return j + 1, g, active, decided_pos, exit_step
+
+    block_n = scores_ref.shape[0]
+    init = (
+        jnp.int32(0),
+        g0_ref[...],
+        # padding lanes start inactive, or a padded block could never
+        # satisfy the all-lanes-exited early-stop condition
+        valid_ref[...] != 0,
+        jnp.zeros((block_n,), dtype=jnp.bool_),
+        jnp.zeros((block_n,), dtype=jnp.int32),
+    )
+    _, g, active, decided_pos, exit_step = jax.lax.while_loop(
+        step_cond, step_body, init
+    )
+    g_ref[...] = g
+    active_ref[...] = active.astype(jnp.int32)
+    dec_ref[...] = decided_pos.astype(jnp.int32)
+    exit_ref[...] = exit_step
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t0", "block_n", "interpret")
+)
+def cascade_chunk_pallas(
+    g0: jax.Array,
+    chunk_scores: jax.Array,
+    eps_pos: jax.Array,
+    eps_neg: jax.Array,
+    t0: int,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Threshold tests for ONE cascade stage (the chunked-executor decide).
+
+    Unlike ``cascade_pallas`` this consumes no precomputed (N, T) matrix:
+    the executor feeds it just the surviving rows' carried partial sums
+    ``g0`` (m,) and the freshly produced ``chunk_scores`` (m, ct) for
+    cascade positions [t0, t0 + ct).  Rows are padded to a ``block_n``
+    multiple (padded take) and the padding sliced off the outputs.
+
+    Returns (g, active int32, decided_pos int32, exit_step int32) each (m,);
+    ``exit_step`` is the absolute 1-based step, 0 where the row survived.
+    """
+    m, ct = chunk_scores.shape
+    # fixed block size (pad up, never shrink to fit): survivor counts vary
+    # per stage, and quantizing shapes to block_n multiples keeps the number
+    # of distinct traces bounded across a serving session
+    bn = block_n
+    m_pad = -m % bn
+    if m_pad:
+        g0 = jnp.pad(g0, (0, m_pad))
+        chunk_scores = jnp.pad(chunk_scores, ((0, m_pad), (0, 0)))
+    m_total = g0.shape[0]
+    valid = (jnp.arange(m_total, dtype=jnp.int32) < m).astype(jnp.int32)
+    dt = chunk_scores.dtype
+    g0 = g0.astype(dt)
+    eps_pos2 = eps_pos.reshape(1, ct).astype(dt)
+    eps_neg2 = eps_neg.reshape(1, ct).astype(dt)
+    grid = (m_total // bn,)
+    kernel = functools.partial(_cascade_chunk_kernel, ct=ct, t0=t0)
+    g, active, dec, exit_step = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, ct), lambda i: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i: (0, 0)),
+            pl.BlockSpec((1, ct), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_total,), dt),
+            jax.ShapeDtypeStruct((m_total,), jnp.int32),
+            jax.ShapeDtypeStruct((m_total,), jnp.int32),
+            jax.ShapeDtypeStruct((m_total,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(g0, chunk_scores, eps_pos2, eps_neg2, valid)
+    return g[:m], active[:m], dec[:m], exit_step[:m]

@@ -30,8 +30,8 @@ DEFAULT_BLOCK_N = 256
 __all__ = ["lattice_scores_pallas"]
 
 
-def _lattice_kernel(feats_ref, x_ref, theta_ref, out_ref, *, S: int):
-    t = pl.program_id(0)
+def _lattice_kernel(feats_ref, x_ref, theta_ref, out_ref, *, S: int, t0: int):
+    t = t0 + pl.program_id(0)  # absolute lattice index within the model range
     bn = x_ref.shape[0]
     w = jnp.ones((bn, 1), dtype=x_ref.dtype)
     for j in range(S):
@@ -44,39 +44,55 @@ def _lattice_kernel(feats_ref, x_ref, theta_ref, out_ref, *, S: int):
     out_ref[0, :] = w @ theta
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "t0", "t1")
+)
 def lattice_scores_pallas(
     theta: jax.Array,
     feats: jax.Array,
     x: jax.Array,
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = True,
+    t0: int = 0,
+    t1: int | None = None,
+    rows: jax.Array | None = None,
 ) -> jax.Array:
-    """Evaluate T lattices on N examples -> (N, T) scores.
+    """Evaluate lattices [t0, t1) on N examples -> (N, t1 - t0) scores.
 
     theta: (T, 2**S) float; feats: (T, S) int32; x: (N, D) in [0, 1].
+
+    ``t0``/``t1`` restrict the model axis to one cascade chunk (only those
+    lattices' theta blocks are DMA'd) and ``rows`` gathers surviving
+    examples before blocking — the lazy chunked execution hooks of
+    DESIGN.md §4.  Defaults preserve the eager full-matrix behaviour.
     """
     T, p = theta.shape
     S = feats.shape[1]
     assert p == 1 << S
+    if t1 is None:
+        t1 = T
+    assert 0 <= t0 < t1 <= T
+    tk = t1 - t0
+    if rows is not None:
+        x = jnp.take(x, jnp.asarray(rows, dtype=jnp.int32), axis=0)
     n, d = x.shape
     n_pad = -n % block_n
     if n_pad:
         x = jnp.pad(x, ((0, n_pad), (0, 0)))
     np_total = x.shape[0]
-    grid = (T, np_total // block_n)
+    grid = (tk, np_total // block_n)
     out = pl.pallas_call(
-        functools.partial(_lattice_kernel, S=S),
+        functools.partial(_lattice_kernel, S=S, t0=t0),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_n, d), lambda t, i, feats: (i, 0)),
-                pl.BlockSpec((1, p), lambda t, i, feats: (t, 0)),
+                pl.BlockSpec((1, p), lambda t, i, feats: (t0 + t, 0)),
             ],
             out_specs=pl.BlockSpec((1, block_n), lambda t, i, feats: (t, i)),
         ),
-        out_shape=jax.ShapeDtypeStruct((T, np_total), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((tk, np_total), x.dtype),
         interpret=interpret,
     )(feats.astype(jnp.int32), x, theta.astype(x.dtype))
     return out[:, :n].T

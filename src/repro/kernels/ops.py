@@ -9,14 +9,20 @@ with a pure-jnp oracle in ``ref.py``.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.core.executor import CascadePlan, ChunkedExecutor, ExecutorResult
 from repro.kernels import ref
-from repro.kernels.cascade_kernel import cascade_pallas
+from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
 __all__ = [
     "cascade_decide",
+    "cascade_chunk",
+    "kernel_decide_fn",
+    "score_and_decide",
     "lattice_scores",
     "gbt_scores",
     "ref",
@@ -32,13 +38,106 @@ def cascade_decide(scores_ordered, eps_pos, eps_neg, beta, **kw):
     return cascade_pallas(scores_ordered, eps_pos, eps_neg, beta, **kw)
 
 
-def lattice_scores(theta, feats, x, **kw):
-    """(N, T) lattice base-model scores."""
+def cascade_chunk(g0, chunk_scores, eps_pos, eps_neg, t0, **kw):
+    """One-stage threshold tests -> (g, active, decided_pos, exit_step)."""
     kw.setdefault("interpret", INTERPRET)
-    return lattice_scores_pallas(theta, feats, x, **kw)
+    return cascade_chunk_pallas(g0, chunk_scores, eps_pos, eps_neg, t0, **kw)
+
+
+def kernel_decide_fn(block_n: int = 256, interpret: bool | None = None):
+    """Adapt the Pallas chunk kernel to the ``ChunkedExecutor`` decide hook.
+
+    The executor carries float64 host state; the kernel runs at the score
+    dtype (float32 on TPU).  QWYC thresholds sit strictly between observed
+    partial sums, so decisions/exit steps are unaffected (same contract the
+    eager ``cascade_decide`` path has always relied on).
+    """
+    it = INTERPRET if interpret is None else interpret
+
+    def decide(g0, chunk, eps_pos, eps_neg, t0):
+        dt = jnp.asarray(chunk).dtype
+        if not jnp.issubdtype(dt, jnp.floating):
+            dt = jnp.float32
+        g, active, dec, ex = cascade_chunk(
+            jnp.asarray(g0, dtype=dt),
+            jnp.asarray(chunk, dtype=dt),
+            jnp.asarray(eps_pos, dtype=dt),
+            jnp.asarray(eps_neg, dtype=dt),
+            int(t0),
+            block_n=block_n,
+            interpret=it,
+        )
+        return (
+            np.asarray(g, dtype=np.float64),
+            np.asarray(active).astype(bool),
+            np.asarray(dec).astype(bool),
+            np.asarray(ex, dtype=np.int64),
+        )
+
+    return decide
+
+
+def score_and_decide(
+    producer,
+    plan: CascadePlan,
+    n: int,
+    block_n: int = 256,
+    row_order=None,
+    interpret: bool | None = None,
+    bill_block: int | None = None,
+) -> ExecutorResult:
+    """Fused lazy path: chunked scoring composed with the threshold kernel.
+
+    Instead of consuming a precomputed (N, T) matrix, each stage scores
+    only the surviving rows for only that stage's models (``producer`` —
+    typically a closure over ``gbt_scores``/``lattice_scores`` with
+    ``t0``/``t1``/``rows``) and immediately runs the Pallas chunk-decide
+    kernel; survivors are compacted before the next stage.
+
+    ``bill_block`` defaults to ``block_n``: a kernel producer using the
+    same block size really computes ceil(m / block_n) * block_n rows per
+    stage, and scores_computed bills that, not the rows requested.
+    """
+    ex = ChunkedExecutor(
+        plan,
+        producer,
+        decide_fn=kernel_decide_fn(block_n=block_n, interpret=interpret),
+        bill_block=block_n if bill_block is None else bill_block,
+    )
+    return ex.run(n, row_order=row_order)
+
+
+def _bucket_rows(kw):
+    """Pad a ``rows`` gather up to a block_n multiple (repeat a valid index).
+
+    The score kernels are jit'd, so a survivor-count-dependent rows shape
+    would retrace/recompile at every stage of every batch; quantizing to
+    block multiples bounds the distinct traces per (t0, t1) to O(N/block_n).
+    Returns the unpadded row count (slice the output back to it), or None.
+    """
+    rows = kw.get("rows")
+    if rows is None:
+        return None
+    rows = np.asarray(rows)
+    mult = kw.get("block_n", 256)
+    pad = -rows.shape[0] % mult
+    if pad:
+        rows = np.concatenate([rows, np.full(pad, rows[0], dtype=rows.dtype)])
+    kw["rows"] = jnp.asarray(rows, dtype=jnp.int32)
+    return rows.shape[0] - pad
+
+
+def lattice_scores(theta, feats, x, **kw):
+    """(N, T) lattice base-model scores (or a t0/t1/rows-restricted slab)."""
+    kw.setdefault("interpret", INTERPRET)
+    m = _bucket_rows(kw)
+    out = lattice_scores_pallas(theta, feats, x, **kw)
+    return out if m is None else out[:m]
 
 
 def gbt_scores(feats, thrs, leaves, x, **kw):
-    """(N, T) oblivious-tree base-model scores."""
+    """(N, T) oblivious-tree base-model scores (or a t0/t1/rows slab)."""
     kw.setdefault("interpret", INTERPRET)
-    return gbt_scores_pallas(feats, thrs, leaves, x, **kw)
+    m = _bucket_rows(kw)
+    out = gbt_scores_pallas(feats, thrs, leaves, x, **kw)
+    return out if m is None else out[:m]

@@ -26,8 +26,10 @@ DEFAULT_BLOCK_N = 256
 __all__ = ["gbt_scores_pallas"]
 
 
-def _tree_kernel(feats_ref, x_ref, thrs_ref, leaves_ref, out_ref, *, depth: int):
-    t = pl.program_id(0)
+def _tree_kernel(
+    feats_ref, x_ref, thrs_ref, leaves_ref, out_ref, *, depth: int, t0: int
+):
+    t = t0 + pl.program_id(0)  # absolute tree index within the model range
     bn = x_ref.shape[0]
     idx = jnp.zeros((bn,), dtype=jnp.int32)
     for j in range(depth):
@@ -42,7 +44,9 @@ def _tree_kernel(feats_ref, x_ref, thrs_ref, leaves_ref, out_ref, *, depth: int)
     out_ref[0, :] = onehot @ leaves_ref[0, :]
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "t0", "t1")
+)
 def gbt_scores_pallas(
     feats: jax.Array,
     thrs: jax.Array,
@@ -50,30 +54,47 @@ def gbt_scores_pallas(
     x: jax.Array,
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = True,
+    t0: int = 0,
+    t1: int | None = None,
+    rows: jax.Array | None = None,
 ) -> jax.Array:
-    """Evaluate T oblivious trees on N examples -> (N, T) per-tree scores."""
+    """Evaluate trees [t0, t1) on N examples -> (N, t1 - t0) scores.
+
+    Lazy chunked execution hooks (DESIGN.md §4): ``t0``/``t1`` restrict the
+    model axis to one cascade chunk — the grid shrinks to ``t1 - t0`` and
+    only those trees' parameter blocks are DMA'd; ``rows`` (int indices)
+    gathers the surviving examples before blocking, so the kernel never
+    touches retired rows.  Defaults preserve the eager full-matrix
+    behaviour (all T trees, all rows).
+    """
     T, depth = feats.shape
     n_leaves = leaves.shape[1]
     assert n_leaves == 1 << depth
+    if t1 is None:
+        t1 = T
+    assert 0 <= t0 < t1 <= T
+    tk = t1 - t0
+    if rows is not None:
+        x = jnp.take(x, jnp.asarray(rows, dtype=jnp.int32), axis=0)
     n, d = x.shape
     n_pad = -n % block_n
     if n_pad:
         x = jnp.pad(x, ((0, n_pad), (0, 0)))
     np_total = x.shape[0]
-    grid = (T, np_total // block_n)
+    grid = (tk, np_total // block_n)
     out = pl.pallas_call(
-        functools.partial(_tree_kernel, depth=depth),
+        functools.partial(_tree_kernel, depth=depth, t0=t0),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_n, d), lambda t, i, feats: (i, 0)),
-                pl.BlockSpec((1, depth), lambda t, i, feats: (t, 0)),
-                pl.BlockSpec((1, n_leaves), lambda t, i, feats: (t, 0)),
+                pl.BlockSpec((1, depth), lambda t, i, feats: (t0 + t, 0)),
+                pl.BlockSpec((1, n_leaves), lambda t, i, feats: (t0 + t, 0)),
             ],
             out_specs=pl.BlockSpec((1, block_n), lambda t, i, feats: (t, i)),
         ),
-        out_shape=jax.ShapeDtypeStruct((T, np_total), leaves.dtype),
+        out_shape=jax.ShapeDtypeStruct((tk, np_total), leaves.dtype),
         interpret=interpret,
     )(feats.astype(jnp.int32), x.astype(leaves.dtype), thrs.astype(leaves.dtype), leaves)
     return out[:, :n].T

@@ -22,6 +22,11 @@ from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensembl
 from repro.kernels import ops
 from repro.serving.engine import QWYCServer
 
+# row-block size for the lazy chunked score kernels: survivors are padded
+# up to a multiple of this, so smaller blocks waste less late-stage compute
+# (billed honestly via score_block_n below)
+SCORE_BLOCK_N = 64
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -35,6 +40,18 @@ def main() -> None:
                     choices=["cascade-scan", "kernel", "sorted-kernel"])
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--chunk-t", type=int, default=8)
+    ap.add_argument(
+        "--eager", action="store_true",
+        help="precompute the full (N, T) score matrix per batch instead of "
+        "the lazy chunked producer (DESIGN.md §4)",
+    )
+    ap.add_argument(
+        "--audit", action="store_true",
+        help="recompute early-exited rows' full scores to measure diff vs "
+        "full ensemble (extra work that can exceed the lazy savings; off "
+        "by default so the CLI reflects production serving cost)",
+    )
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset, scale=args.scale)
@@ -50,6 +67,21 @@ def main() -> None:
                 stacked["feats"], stacked["thrs"], stacked["leaves"], jnp.asarray(x)
             )
 
+        def make_chunk_score_fn(order):
+            # stacked params permuted to cascade order once, so a cascade
+            # range is a contiguous slab for the model-range kernel
+            of = jnp.asarray(np.asarray(stacked["feats"])[order])
+            ot = jnp.asarray(np.asarray(stacked["thrs"])[order])
+            ol = jnp.asarray(np.asarray(stacked["leaves"])[order])
+
+            def chunk_score_fn(x, rows, t0, t1):
+                return ops.gbt_scores(
+                    of, ot, ol, x, t0=t0, t1=t1, rows=jnp.asarray(rows),
+                    block_n=SCORE_BLOCK_N,
+                )
+
+            return chunk_score_fn
+
     else:
         lat = init_lattice_ensemble(args.T, ds.D, S=min(8, ds.D), seed=0)
         lat = train_lattice_ensemble(lat, ds.x_train, ds.y_train, mode="joint", steps=300)
@@ -58,6 +90,18 @@ def main() -> None:
         def score_fn(x):
             return ops.lattice_scores(lat["theta"], lat["feats"], jnp.asarray(x))
 
+        def make_chunk_score_fn(order):
+            th = jnp.asarray(np.asarray(lat["theta"])[order])
+            fe = jnp.asarray(np.asarray(lat["feats"])[order])
+
+            def chunk_score_fn(x, rows, t0, t1):
+                return ops.lattice_scores(
+                    th, fe, x, t0=t0, t1=t1, rows=jnp.asarray(rows),
+                    block_n=SCORE_BLOCK_N,
+                )
+
+            return chunk_score_fn
+
     F_train = np.asarray(score_fn(ds.x_train))
     qwyc = fit_qwyc(F_train, beta=beta, alpha=args.alpha, mode=args.mode)
     print(
@@ -65,8 +109,16 @@ def main() -> None:
         f"diff {qwyc.train_diff_rate:.4f}"
     )
 
+    producer_kw = (
+        {"score_fn": score_fn}
+        if args.eager
+        else {"chunk_score_fn": make_chunk_score_fn(qwyc.order)}
+    )
     server = QWYCServer(
-        qwyc, score_fn, batch_size=args.batch_size, backend=args.backend
+        qwyc, batch_size=args.batch_size, backend=args.backend,
+        chunk_t=args.chunk_t, audit_full_scores=args.audit or args.eager,
+        score_block_n=1 if args.eager else SCORE_BLOCK_N,
+        **producer_kw,
     )
     for i in range(len(ds.y_test)):
         server.submit(ds.x_test[i])
@@ -78,11 +130,18 @@ def main() -> None:
     )
     print(
         f"[serve] {st.n_requests} requests in {st.n_batches} batches "
-        f"({args.backend})\n"
+        f"({args.backend}, {'eager' if args.eager else 'lazy'})\n"
         f"        mean models {st.mean_models:.2f}/{args.T}  "
         f"modeled speedup {st.speedup:.2f}x\n"
-        f"        diff vs full {st.diff_rate:.4f} (alpha={args.alpha})  "
-        f"test acc {acc:.4f}"
+        f"        scores computed {st.scores_computed}/{st.scores_possible} "
+        f"({st.compute_fraction:.1%} of eager; +{st.audit_scores} audit)\n"
+        f"        diff vs full "
+        + (
+            f"{st.diff_rate:.4f}"
+            if (args.audit or args.eager)
+            else "n/a (pass --audit)"
+        )
+        + f" (alpha={args.alpha})  test acc {acc:.4f}"
     )
 
 

@@ -1,21 +1,41 @@
 """Batched-request QWYC serving engine — the paper's production use-case.
 
 Requests (feature vectors) arrive one at a time; the engine micro-batches
-them, evaluates base models in QWYC order with early exit, and returns the
-classification plus per-request cost accounting.  Three execution backends:
+them and runs the cascade through the **chunked lazy executor**
+(``repro.core.executor``, DESIGN.md §4): the QWYC plan is split into
+``chunk_t``-sized stages, and between stages the surviving rows are
+compacted and only the next stage's base models are evaluated — early-exited
+requests genuinely skip the remaining base-model work.
 
-  * "cascade-scan":   masked lax.scan over ordered base models — evaluates
-                      the base model itself (tree/lattice) inside the scan;
-                      semantics oracle + what a real host loop would run.
-  * "kernel":         precompute-free blocked Pallas cascade over scores
-                      produced by the tree/lattice kernels (TPU target).
-  * "sorted-kernel":  beyond-paper — requests inside a batch are sorted by
-                      the first base model's score before blocking, so easy
-                      examples cluster into blocks that retire early
-                      (per-block early exit; see DESIGN.md §3).
+Three execution backends, differing ONLY in batching/sorting policy and the
+per-stage decide implementation (the executor owns all control flow):
+
+  * "cascade-scan":   reference numpy decide per stage; semantics oracle +
+                      what a real host loop would run.
+  * "kernel":         Pallas chunk-decide kernel per stage (TPU target).
+  * "sorted-kernel":  beyond-paper — rows are sorted by the first cascade
+                      model's score before execution, so easy examples
+                      cluster into VMEM blocks that retire early inside a
+                      chunk (per-block early exit; see DESIGN.md §3).
+                      Results are scattered back to submission order (the
+                      inverse-permutation guarantee tested in
+                      tests/test_serving.py).
+
+Score producers:
+
+  * ``chunk_score_fn(x, rows, t0, t1)`` — the lazy path: scores of cascade
+    positions [t0, t1) for the given row indices only (wire it to
+    ``ops.gbt_scores``/``ops.lattice_scores`` with their ``t0``/``t1``/
+    ``rows`` arguments over order-permuted stacked params).
+  * ``score_fn(x) -> (N, T)`` in ORIGINAL model order — eager back-compat
+    fallback: the matrix is materialized once per batch and the executor
+    reads from it (no base-model work is skipped; ``ServeStats``
+    scores_computed records the difference).
 
 Filter-and-Score mode (neg_only): positively classified requests get the
-full ensemble score attached, matching the paper's production setting.
+full ensemble score attached, matching the paper's production setting —
+lazily, since a neg_only positive by construction ran the whole cascade
+(its ``g_final`` IS the full score).
 """
 
 from __future__ import annotations
@@ -24,25 +44,37 @@ import dataclasses
 import time
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qwyc import QWYCModel, evaluate_cascade
+from repro.core.executor import (
+    CascadePlan,
+    ChunkedExecutor,
+    matrix_producer,
+)
+from repro.core.qwyc import QWYCModel
 from repro.kernels import ops
 
 __all__ = ["ServeStats", "QWYCServer"]
+
+BACKENDS = ("cascade-scan", "kernel", "sorted-kernel")
 
 
 @dataclasses.dataclass
 class ServeStats:
     n_requests: int = 0
     n_batches: int = 0
-    models_evaluated: int = 0
+    models_evaluated: int = 0  # sum of exit steps (paper's modeled count)
     full_cost: float = 0.0
-    actual_cost: float = 0.0
+    actual_cost: float = 0.0  # modeled cost at the paper's accounting
     diffs_vs_full: int = 0
     wall_s: float = 0.0
+    # lazy-execution accounting: what was ACTUALLY computed, vs modeled
+    scores_computed: int = 0  # base-model scores produced on the serving path
+    scores_possible: int = 0  # N * T — the eager full-matrix bill
+    audit_scores: int = 0  # extra scores for diff auditing (not serving work)
+    chunk_survivors: list[int] = dataclasses.field(default_factory=list)
+    # chunk_survivors[k] = total rows that entered stage k, summed over batches
 
     @property
     def mean_models(self) -> float:
@@ -56,23 +88,53 @@ class ServeStats:
     def diff_rate(self) -> float:
         return self.diffs_vs_full / max(self.n_requests, 1)
 
+    @property
+    def compute_fraction(self) -> float:
+        """Scores actually produced / scores the eager path would produce."""
+        return self.scores_computed / max(self.scores_possible, 1)
+
 
 class QWYCServer:
     def __init__(
         self,
         qwyc: QWYCModel,
-        score_fn: Callable[[np.ndarray], np.ndarray],
+        score_fn: Callable[[np.ndarray], np.ndarray] | None = None,
         batch_size: int = 256,
         backend: str = "sorted-kernel",
         block_n: int = 64,
+        chunk_t: int = 8,
+        chunk_score_fn: Callable | None = None,
+        audit_full_scores: bool = True,
+        score_block_n: int = 1,
     ):
-        """score_fn(x) -> (N, T) base-model scores in ORIGINAL model order
-        (tree/lattice kernels); the engine reorders by the QWYC permutation."""
+        """At least one of ``score_fn`` (eager, ORIGINAL model order) or
+        ``chunk_score_fn`` (lazy, cascade order — see module docstring) is
+        required; when both are given the lazy producer serves and
+        ``score_fn`` is unused.  ``audit_full_scores`` controls whether
+        early-exited rows' full scores are recomputed for diff-vs-full
+        accounting (audit work, tracked separately from serving work;
+        without it ``diff_rate`` only covers rows that ran the full
+        cascade).  ``score_block_n`` is the row-quantization granularity of
+        ``chunk_score_fn`` (a blocked kernel pads survivors up to a block
+        multiple, so actual compute exceeds rows requested); billing uses
+        it so ``ServeStats.scores_computed`` reflects real work — set it to
+        the block_n your producer passes to the score kernels, or leave at
+        1 for exact producers.
+        """
+        if score_fn is None and chunk_score_fn is None:
+            raise ValueError("need score_fn or chunk_score_fn")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
         self.qwyc = qwyc
         self.score_fn = score_fn
+        self.chunk_score_fn = chunk_score_fn
         self.batch_size = batch_size
         self.backend = backend
         self.block_n = block_n
+        self.chunk_t = chunk_t
+        self.audit_full_scores = audit_full_scores
+        self.score_block_n = max(1, int(score_block_n))
+        self.plan = CascadePlan.from_qwyc(qwyc, chunk_t=chunk_t)
         self.stats = ServeStats()
         self._queue: list[np.ndarray] = []
         self._results: list[dict] = []
@@ -82,63 +144,127 @@ class QWYCServer:
         if len(self._queue) >= self.batch_size:
             self.flush()
 
+    def _producers(self, xb: np.ndarray):
+        """(producer, ordered_matrix|None) for this batch.
+
+        Lazy billing happens in the executor (block-quantized via
+        ``score_block_n``); the eager path bills the whole materialized
+        matrix in ``flush``.  ``producer`` doubles as the audit access path.
+        """
+        m = self.qwyc
+        if self.chunk_score_fn is not None:
+            xb_j = jnp.asarray(xb)
+
+            def producer(rows, t0, t1):
+                return np.asarray(
+                    self.chunk_score_fn(xb_j, np.asarray(rows), t0, t1)
+                )
+
+            return producer, None
+
+        scores = np.asarray(self.score_fn(xb))  # (N, T) original order
+        ordered = scores[:, m.order]
+        return matrix_producer(ordered), ordered
+
     def flush(self) -> list[dict]:
         if not self._queue:
             return []
-        t0 = time.time()
+        t_start = time.time()
         xb = np.stack(self._queue)
         self._queue.clear()
+        n = xb.shape[0]
         m = self.qwyc
-        scores = np.asarray(self.score_fn(xb))  # (N, T) original order
-        ordered = scores[:, m.order]
+        T = m.T
+        plan = self.plan
 
-        if self.backend in ("kernel", "sorted-kernel"):
-            perm = None
-            if self.backend == "sorted-kernel":
-                perm = np.argsort(ordered[:, 0], kind="stable")
-                ordered_in = ordered[perm]
-            else:
-                ordered_in = ordered
-            dec, exit_step = ops.cascade_decide(
-                jnp.asarray(ordered_in),
-                jnp.asarray(m.eps_pos),
-                jnp.asarray(m.eps_neg),
-                m.beta,
-                block_n=min(self.block_n, max(8, xb.shape[0])),
-            )
-            dec = np.asarray(dec).astype(bool)
-            exit_step = np.asarray(exit_step)
-            if perm is not None:
-                inv = np.argsort(perm)
-                dec, exit_step = dec[inv], exit_step[inv]
+        producer, ordered = self._producers(xb)
+        audit_read = producer  # unbilled access path for diff auditing
+
+        # backends differ only in sorting policy + decide implementation
+        row_order = None
+        if self.backend == "sorted-kernel":
+            # the first model is its own leading stage (plan.lead_t=1): its
+            # scores double as the sort key.  The memo below serves the
+            # executor's (0, 1) stage, so the key compute is billed exactly
+            # once — as that stage.
+            plan = dataclasses.replace(plan, lead_t=1)
+            col0 = producer(np.arange(n), 0, 1)
+            row_order = np.argsort(col0[:, 0], kind="stable")
+            inner = producer
+
+            def producer(rows, t0, t1, _col0=col0, _inner=inner):
+                if t0 == 0 and t1 == 1:
+                    return _col0[np.asarray(rows)]
+                return _inner(rows, t0, t1)
+
+        decide_fn = (
+            ops.kernel_decide_fn(block_n=self.block_n)
+            if self.backend in ("kernel", "sorted-kernel")
+            else None
+        )
+        res = ChunkedExecutor(
+            plan,
+            producer,
+            decide_fn=decide_fn,
+            bill_block=self.score_block_n if ordered is None else 1,
+        ).run(n, row_order=row_order)
+        dec, exit_step = res.decisions, res.exit_step
+
+        # full-ensemble score: free for rows that ran the whole cascade;
+        # early-exited rows need an audit read (accounted separately).
+        audit_scores = 0
+        if ordered is not None:
+            full_score = ordered.sum(axis=1)
+        elif self.audit_full_scores:
+            full_score = res.g_final.copy()
+            exited = np.nonzero(exit_step < T)[0]
+            if exited.size:
+                full_score[exited] = audit_read(exited, 0, T).sum(axis=1)
+                audit_scores = int(exited.size) * T
         else:
-            ev = evaluate_cascade(m, scores)
-            dec, exit_step = ev["decisions"], ev["exit_step"]
+            full_score = None
 
-        full_score = scores.sum(axis=1)
-        full_dec = full_score >= m.beta
-        cum_cost = np.cumsum(m.ordered_costs())
+        cum_cost = plan.cum_costs()
         batch_cost = float(cum_cost[exit_step - 1].sum())
 
         out = []
-        for i in range(xb.shape[0]):
+        for i in range(n):
             r = {
                 "decision": bool(dec[i]),
                 "models_evaluated": int(exit_step[i]),
             }
             if m.mode == "neg_only" and dec[i]:
-                r["full_score"] = float(full_score[i])  # Filter-and-Score
+                # Filter-and-Score: a neg_only positive never exited early,
+                # so its carried partial sum is the full ensemble score.
+                r["full_score"] = float(
+                    full_score[i] if full_score is not None else res.g_final[i]
+                )
             out.append(r)
         self._results.extend(out)
 
         st = self.stats
-        st.n_requests += xb.shape[0]
+        st.n_requests += n
         st.n_batches += 1
         st.models_evaluated += int(exit_step.sum())
-        st.full_cost += float(cum_cost[-1]) * xb.shape[0]
+        st.full_cost += float(cum_cost[-1]) * n
         st.actual_cost += batch_cost
-        st.diffs_vs_full += int((dec != full_dec).sum())
-        st.wall_s += time.time() - t0
+        # eager bills the materialized matrix; lazy bills what the executor
+        # actually drew through the producer (block-quantized)
+        st.scores_computed += n * T if ordered is not None else res.scores_computed
+        st.scores_possible += n * T
+        st.audit_scores += audit_scores
+        for k, s in enumerate(res.chunk_stats):
+            if k >= len(st.chunk_survivors):
+                st.chunk_survivors.append(0)
+            st.chunk_survivors[k] += s.n_in
+        if full_score is not None:
+            full_dec = full_score >= m.beta
+            st.diffs_vs_full += int((dec != full_dec).sum())
+        else:
+            # unaudited: survivors' decision IS the full decision (0 diffs);
+            # early-exit rows are unknown and intentionally not guessed at
+            pass
+        st.wall_s += time.time() - t_start
         return out
 
     def drain(self) -> list[dict]:

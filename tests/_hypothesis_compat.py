@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the package
+is absent (it is an extra, not a hard dependency — see pyproject.toml).
+
+Usage in test modules::
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is installed these are the real objects.  When it is not,
+``given`` replaces the test with a skip marker and ``st``/``settings`` are
+inert stand-ins (strategy expressions evaluate to None placeholders, which
+is fine because the wrapped test body never runs).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed (optional extra)")
+            def skipped():
+                pass  # pragma: no cover
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Any strategy constructor -> None placeholder (never executed)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

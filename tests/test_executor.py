@@ -1,0 +1,176 @@
+"""Chunked lazy executor: parity with the host cascade oracle + laziness.
+
+The load-bearing guarantee: for every serving backend and both modes, the
+executor's (decisions, exit_step) are bit-identical to
+``core.qwyc.evaluate_cascade`` — while provably requesting fewer scores
+than the eager N*T matrix whenever anything exits early.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import (
+    CascadePlan,
+    ChunkedExecutor,
+    evaluate_cascade,
+    fit_qwyc,
+    matrix_producer,
+)
+from repro.kernels import ops
+
+
+def _fit(rng, n=400, t=24, mode="both", alpha=0.01, beta=0.0):
+    F = make_scores(rng, n=n, t=t)
+    m = fit_qwyc(F, beta=beta, alpha=alpha, mode=mode)
+    return F, m
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+@pytest.mark.parametrize("chunk_t", [1, 3, 8, 100])
+def test_reference_decide_parity(rng, mode, chunk_t):
+    F, m = _fit(rng, mode=mode)
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+    res = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    # g_final of rows that ran the whole cascade is the full ensemble score
+    never = res.exit_step == m.T
+    np.testing.assert_allclose(res.g_final[never], F[never].sum(axis=1))
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_kernel_decide_parity(rng, mode):
+    F, m = _fit(rng, mode=mode)
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=6)
+    prod = matrix_producer(F[:, m.order].astype(np.float32))
+    res = ops.score_and_decide(prod, plan, F.shape[0], block_n=64)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+
+
+def test_lazy_skips_base_model_work(rng):
+    """Acceptance: scores_computed < N*T whenever the exit rate is nonzero."""
+    F, m = _fit(rng)
+    ev = evaluate_cascade(m, F)
+    assert (ev["exit_step"] < m.T).any()  # nonzero exit rate on this data
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    res = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    assert res.scores_computed < res.scores_possible
+    # exact accounting: each stage bills survivors * stage width
+    assert res.scores_computed == sum(
+        s.n_in * (s.t1 - s.t0) for s in res.chunk_stats
+    )
+    # and never less than the paper's modeled count (chunk granularity can
+    # only round exit steps UP to a stage boundary)
+    assert res.scores_computed >= ev["exit_step"].sum()
+
+
+def test_survivors_monotone_and_compaction_stable(rng):
+    F, m = _fit(rng, t=20)
+    plan = CascadePlan.from_qwyc(m, chunk_t=2)
+    seen_rows = []
+
+    base = matrix_producer(F[:, m.order])
+
+    def spy(rows, t0, t1):
+        seen_rows.append(np.array(rows))
+        return base(rows, t0, t1)
+
+    res = ChunkedExecutor(plan, spy).run(F.shape[0])
+    surv = res.survivors_per_chunk
+    assert surv == sorted(surv, reverse=True)
+    for rows in seen_rows:
+        # stable gather: the active set stays sorted by submission index
+        assert (np.diff(rows) > 0).all()
+
+
+def test_row_order_scatters_back(rng):
+    """row_order only changes execution order, never the result layout."""
+    F, m = _fit(rng, t=16)
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    prod = matrix_producer(F[:, m.order])
+    n = F.shape[0]
+    base = ChunkedExecutor(plan, prod).run(n)
+    perm = np.random.default_rng(7).permutation(n)
+    shuffled = ChunkedExecutor(plan, prod).run(n, row_order=perm)
+    np.testing.assert_array_equal(base.decisions, shuffled.decisions)
+    np.testing.assert_array_equal(base.exit_step, shuffled.exit_step)
+
+
+def test_plan_stages_cover_all_models(rng):
+    import dataclasses
+
+    _, m = _fit(rng, t=25)
+    for chunk_t in (1, 4, 7, 25, 40):
+        for lead_t in (0, 1, 3):
+            plan = dataclasses.replace(
+                CascadePlan.from_qwyc(m, chunk_t=chunk_t), lead_t=lead_t
+            )
+            stages = plan.stages
+            assert stages[0][0] == 0 and stages[-1][1] == m.T
+            for (a0, a1), (b0, b1) in zip(stages, stages[1:]):
+                assert a1 == b0  # contiguous, no overlap, no gap
+            assert all(
+                t1 - t0 <= max(chunk_t, lead_t) for t0, t1 in stages
+            )
+            if lead_t:
+                assert stages[0] == (0, lead_t)
+
+
+def test_lead_stage_parity(rng):
+    """lead_t only regroups stages; decisions/exit steps are unchanged."""
+    import dataclasses
+
+    F, m = _fit(rng, t=20)
+    ev = evaluate_cascade(m, F)
+    plan = dataclasses.replace(
+        CascadePlan.from_qwyc(m, chunk_t=4), lead_t=1
+    )
+    res = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+
+
+def test_fused_tree_kernel_producer(rng):
+    """score_and_decide over the REAL tree kernel with model-range + row
+    gather: the lazy path computes scores with Pallas, not from a matrix."""
+    t, depth, d, n = 16, 3, 8, 150
+    feats = rng.integers(0, d, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    x = rng.uniform(size=(n, d)).astype(np.float32)
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=64,
+        )
+    )
+    m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+
+    # pre-permute stacked params to cascade order once (pack_model style)
+    of, ot, ol = feats[m.order], thrs[m.order], leaves[m.order]
+    xj = jnp.asarray(x)
+    calls = []
+
+    def producer(rows, t0, t1):
+        calls.append((len(rows), t0, t1))
+        return np.asarray(
+            ops.gbt_scores(
+                jnp.asarray(of), jnp.asarray(ot), jnp.asarray(ol), xj,
+                block_n=64, t0=t0, t1=t1, rows=jnp.asarray(np.asarray(rows)),
+            )
+        )
+
+    res = ops.score_and_decide(producer, plan, n, block_n=64)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    # the kernel was never asked for the full matrix in one go
+    assert all(t1 - t0 <= 4 for _, t0, t1 in calls)
+    if (ev["exit_step"] < m.T).any():
+        assert res.scores_computed < n * t

@@ -2,8 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hypothesis_compat import given, settings, st
 from conftest import make_scores
 from repro.core import evaluate_cascade, fit_qwyc, fit_thresholds_for_order
 

@@ -1,0 +1,164 @@
+"""QWYCServer: backend parity, sorted-kernel permutation round-trip,
+Filter-and-Score full_score attachment, and lazy-execution stats."""
+
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import evaluate_cascade, fit_qwyc
+from repro.serving.engine import BACKENDS, QWYCServer
+
+
+def _linear_setup(rng, n=300, t=20, d=6, mode="both", alpha=0.01, beta=0.0):
+    """Tiny linear 'ensemble' so lazy chunk scoring is exact and cheap."""
+    W = rng.normal(size=(t, d))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    F = (X @ W.T).astype(np.float64)
+    m = fit_qwyc(F, beta=beta, alpha=alpha, mode=mode)
+    Wo = W[m.order]  # cascade-ordered params, permuted once at plan build
+
+    def chunk_score_fn(x, rows, t0, t1):
+        return np.asarray(x)[rows] @ Wo[t0:t1].T
+
+    def score_fn(x):
+        return np.asarray(x) @ W.T
+
+    return X, F, m, chunk_score_fn, score_fn
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+@pytest.mark.parametrize("producer", ["lazy", "eager"])
+def test_backend_parity_with_cascade_oracle(rng, backend, mode, producer):
+    """Acceptance: every backend x mode, lazy and eager producers, returns
+    (decision, models_evaluated) bit-identical to evaluate_cascade."""
+    X, F, m, chunk_score_fn, score_fn = _linear_setup(rng, mode=mode)
+    ev = evaluate_cascade(m, F)
+    kw = (
+        {"chunk_score_fn": chunk_score_fn}
+        if producer == "lazy"
+        else {"score_fn": score_fn}
+    )
+    srv = QWYCServer(m, batch_size=128, backend=backend, chunk_t=4, **kw)
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    assert len(res) == X.shape[0]
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    np.testing.assert_array_equal(
+        np.array([r["models_evaluated"] for r in res]), ev["exit_step"]
+    )
+
+
+def test_sorted_kernel_permutation_roundtrip(rng):
+    """sorted-kernel reorders rows internally (easy examples cluster into
+    blocks) but results must come back in SUBMISSION order — the inverse
+    permutation is exercised with a batch whose sort is maximally
+    non-trivial (first-model scores strictly decreasing)."""
+    X, F, m, chunk_score_fn, _ = _linear_setup(rng, n=200)
+    first = F[:, m.order[0]]
+    desc = np.argsort(-first, kind="stable")  # submission order = reverse sort
+    Xd, Fd = X[desc], F[desc]
+    ev = evaluate_cascade(m, Fd)
+    srv = QWYCServer(
+        m, batch_size=1000, backend="sorted-kernel", chunk_t=4,
+        chunk_score_fn=chunk_score_fn,
+    )
+    for row in Xd:
+        srv.submit(row)
+    res = srv.drain()
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    np.testing.assert_array_equal(
+        np.array([r["models_evaluated"] for r in res]), ev["exit_step"]
+    )
+
+
+@pytest.mark.parametrize("producer", ["lazy", "eager", "lazy-unaudited"])
+def test_filter_and_score_full_score_attachment(rng, producer):
+    """neg_only (Filter-and-Score): every positive decision carries the
+    exact full-ensemble score; negatives carry none."""
+    X, F, m, chunk_score_fn, score_fn = _linear_setup(
+        rng, mode="neg_only", alpha=0.02
+    )
+    kw = {
+        "lazy": {"chunk_score_fn": chunk_score_fn},
+        "eager": {"score_fn": score_fn},
+        "lazy-unaudited": {
+            "chunk_score_fn": chunk_score_fn,
+            "audit_full_scores": False,
+        },
+    }[producer]
+    srv = QWYCServer(m, batch_size=128, backend="kernel", chunk_t=4, **kw)
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    full = F.sum(axis=1)
+    n_pos = 0
+    for i, r in enumerate(res):
+        if r["decision"]:
+            n_pos += 1
+            # a neg_only positive ran the full cascade, so the attached
+            # score is the full ensemble sum (float32 scoring tolerance)
+            assert r["models_evaluated"] == m.T
+            np.testing.assert_allclose(r["full_score"], full[i], rtol=1e-4)
+        else:
+            assert "full_score" not in r
+    assert n_pos > 0  # the check above actually ran
+
+
+def test_lazy_stats_accounting(rng):
+    X, F, m, chunk_score_fn, score_fn = _linear_setup(rng)
+    ev = evaluate_cascade(m, F)
+    lazy = QWYCServer(
+        m, batch_size=100, backend="kernel", chunk_t=4,
+        chunk_score_fn=chunk_score_fn, audit_full_scores=False,
+    )
+    eager = QWYCServer(m, score_fn, batch_size=100, backend="kernel", chunk_t=4)
+    for row in X:
+        lazy.submit(row)
+        eager.submit(row)
+    lazy.drain(), eager.drain()
+    n, T = F.shape
+    for st in (lazy.stats, eager.stats):
+        assert st.n_requests == n
+        assert st.scores_possible == n * T
+        assert st.models_evaluated == ev["exit_step"].sum()
+        assert st.chunk_survivors[0] == n
+        assert st.chunk_survivors == sorted(st.chunk_survivors, reverse=True)
+    # the lazy producer provably skipped base-model work the eager one paid
+    assert (ev["exit_step"] < T).any()
+    assert lazy.stats.scores_computed < n * T
+    assert lazy.stats.audit_scores == 0
+    assert eager.stats.scores_computed == n * T
+    assert lazy.stats.compute_fraction < 1.0 <= eager.stats.compute_fraction
+    # modeled-cost accounting (the paper's metric) is producer-independent
+    assert lazy.stats.actual_cost == eager.stats.actual_cost
+    assert lazy.stats.speedup == eager.stats.speedup
+
+
+def test_diff_audit_matches_fit(rng):
+    """With auditing on, the lazy path reports the same diff-vs-full rate
+    the calibration promised (train data, so exact)."""
+    X, F, m, chunk_score_fn, _ = _linear_setup(rng, alpha=0.02)
+    srv = QWYCServer(
+        m, batch_size=64, backend="sorted-kernel", chunk_t=4,
+        chunk_score_fn=chunk_score_fn,
+    )
+    for row in X:
+        srv.submit(row)
+    srv.drain()
+    assert srv.stats.diff_rate <= 0.02 + 1e-12
+    assert abs(srv.stats.diff_rate - m.train_diff_rate) < 1e-12
+    assert srv.stats.audit_scores > 0  # early exits existed and were audited
+
+
+def test_constructor_validation(rng):
+    _, _, m, _, score_fn = _linear_setup(rng)
+    with pytest.raises(ValueError):
+        QWYCServer(m)  # no producer at all
+    with pytest.raises(ValueError):
+        QWYCServer(m, score_fn, backend="warp-drive")

@@ -3,8 +3,8 @@ plus budget/constraint invariants (hypothesis property tests)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hypothesis_compat import given, settings, st
 from repro.core.thresholds import (
     optimize_step_thresholds,
     optimize_threshold_bisect,
