@@ -1,0 +1,192 @@
+"""Host-looped lazy executor vs the on-device executor — WALL-CLOCK.
+
+``bench_executor.py`` established that the lazy path computes a fraction
+of the eager path's scores.  This benchmark measures what the score count
+cannot: the host stage loop's orchestration tax — one device->host sync,
+one host compaction and one fresh gather upload PER STAGE — versus
+``DeviceExecutor``, which fuses the whole stage loop (scoring, decide,
+compaction, early exit) into one jit'd ``lax.while_loop`` (DESIGN.md §5).
+
+Both paths run the identical Pallas kernels at the identical block size,
+so the delta is orchestration, not kernel arithmetic.  Per (batch size,
+alpha) cell we report steady-state wall seconds (compiles excluded; best
+of ``repeats``), the scores each path computed, and the jit trace count
+of the device program (the static-shape design promises exactly 1).
+
+Timing protocol: EXPERIMENTS.md §Wall-clock.  Outputs land in
+``benchmarks/results/device_executor_<dataset>.json`` and — as the start
+of the repo's perf trajectory — ``BENCH_executor.json`` at the repo root.
+
+Acceptance: the on-device executor beats the host loop at batch >= 1024.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gbt_ensemble_for, save_rows
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    tree_stage_scorer,
+)
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+ALPHAS = (0.005, 0.02, 0.1)
+BATCH_SIZES = (256, 1024, 2048)
+
+
+def _tile_rows(x: np.ndarray, n: int) -> np.ndarray:
+    reps = -(-n // x.shape[0])
+    return np.tile(x, (reps, 1))[:n]
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(
+    dataset: str = "adult",
+    T: int = 100,
+    depth: int = 5,
+    scale: float = 0.25,
+    chunk_t: int = 8,
+    block_n: int = 128,
+    alphas=ALPHAS,
+    batch_sizes=BATCH_SIZES,
+    repeats: int = 3,
+) -> list[dict]:
+    gbt, F_tr, F_te, beta, ds = gbt_ensemble_for(dataset, T, depth, scale)
+    st = gbt.stacked()
+    rows = []
+    for alpha in alphas:
+        m = fit_qwyc(F_tr, beta=beta, alpha=alpha)
+        plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+        dplan = DevicePlan.from_plan(plan)
+
+        # cascade-ordered stacked params, permuted once at plan build
+        of = np.asarray(st["feats"])[m.order]
+        ot = np.asarray(st["thrs"])[m.order]
+        ol = np.asarray(st["leaves"])[m.order]
+        of_j, ot_j, ol_j = jnp.asarray(of), jnp.asarray(ot), jnp.asarray(ol)
+
+        executors: dict[int, DeviceExecutor] = {}
+
+        for n in batch_sizes:
+            # block size scales with batch (same value for BOTH paths):
+            # bigger batches amortize per-block dispatch over wider blocks
+            bn = min(256, max(block_n, n // 8))
+            if bn not in executors:
+                scorer = tree_stage_scorer(dplan, of, ot, ol, block_n=bn)
+                executors[bn] = (DeviceExecutor(dplan, scorer, block_n=bn), set())
+            dex, shapes_seen = executors[bn]
+            shapes_seen.add(-(-n // bn) * bn)  # buffer capacity for this batch
+            x_np = _tile_rows(
+                np.asarray(ds.x_test, dtype=np.float32), n
+            )
+            F_sub = _tile_rows(np.asarray(F_te, dtype=np.float64), n)
+            ev = evaluate_cascade(m, F_sub)
+            exit_rate = float((ev["exit_step"] < T).mean())
+            xj = jnp.asarray(x_np)
+
+            def producer(rows_, t0, t1, _bn=bn):
+                return np.asarray(
+                    ops.gbt_scores(
+                        of_j, ot_j, ol_j, xj, block_n=_bn,
+                        t0=t0, t1=t1, rows=jnp.asarray(np.asarray(rows_)),
+                    )
+                )
+
+            def host(_bn=bn):
+                return ops.score_and_decide(producer, plan, n, block_n=_bn)
+
+            def device():
+                return dex.run(x_np, n)
+
+            res_h = host()  # warmup/compile both paths before timing
+            res_d = device()
+            # both paths must agree with the host cascade oracle
+            assert np.array_equal(res_h.decisions, ev["decisions"])
+            assert np.array_equal(res_h.exit_step, ev["exit_step"])
+            assert np.array_equal(res_d.decisions, ev["decisions"])
+            assert np.array_equal(res_d.exit_step, ev["exit_step"])
+
+            host_s = _best_of(host, repeats)
+            device_s = _best_of(device, repeats)
+
+            rows.append(
+                {
+                    "experiment": f"device_executor_{dataset}",
+                    "alpha": alpha,
+                    "n": n,
+                    "T": T,
+                    "chunk_t": chunk_t,
+                    "block_n": bn,
+                    "exit_rate": exit_rate,
+                    "mean_models": float(ev["exit_step"].mean()),
+                    "host_s": host_s,
+                    "device_s": device_s,
+                    "speedup": host_s / max(device_s, 1e-12),
+                    "host_stages": len(res_h.chunk_stats),
+                    "device_stages": len(res_d.chunk_stats),
+                    "scores_host": res_h.scores_computed,
+                    "scores_device": res_d.scores_computed,
+                    # exactly one jit trace per (N, T, chunk_t): the
+                    # executor's trace count must equal the number of
+                    # distinct batch shapes it has served
+                    "device_traces": dex.traces,
+                    "device_shapes": len(shapes_seen),
+                    # acceptance: on-device wins wall-clock at batch >= 1024
+                    "device_wins": bool(device_s < host_s),
+                }
+            )
+    save_rows(f"device_executor_{dataset}", rows)
+    _write_root_summary(dataset, rows)
+    return rows
+
+
+def _write_root_summary(dataset: str, rows: list[dict]) -> None:
+    """BENCH_executor.json — the repo-root perf-trajectory artifact."""
+    big = [r for r in rows if r["n"] >= 1024]
+    summary = {
+        "bench": "device_executor",
+        "dataset": dataset,
+        "protocol": "EXPERIMENTS.md §Wall-clock",
+        "rows": rows,
+        "headline": {
+            "batch>=1024_device_wins": bool(all(r["device_wins"] for r in big)),
+            "batch>=1024_median_speedup": float(
+                np.median([r["speedup"] for r in big])
+            )
+            if big
+            else None,
+            "one_trace_per_batch_shape": bool(
+                all(r["device_traces"] == r["device_shapes"] for r in rows)
+            ),
+        },
+    }
+    (REPO_ROOT / "BENCH_executor.json").write_text(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(
+            f"alpha={r['alpha']:<6} n={r['n']:<5} exit_rate={r['exit_rate']:.2f} "
+            f"host={r['host_s']*1e3:7.1f}ms device={r['device_s']*1e3:7.1f}ms "
+            f"speedup={r['speedup']:.2f}x "
+            f"traces={r['device_traces']}/{r['device_shapes']} "
+            f"wins={r['device_wins']}"
+        )

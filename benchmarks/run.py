@@ -34,6 +34,7 @@ def main() -> None:
     T_lat = 100 if args.quick else 500
 
     from benchmarks import (
+        bench_device_executor,
         bench_executor,
         bench_gbt_tradeoff,
         bench_histograms,
@@ -120,6 +121,33 @@ def main() -> None:
         f" ({busiest['compute_fraction']:.0%} of eager) at alpha="
         f"{busiest['alpha']} exit_rate={busiest['exit_rate']:.2f}"
         f" wall eager={busiest['eager_s']:.2f}s lazy={busiest['lazy_s']:.2f}s"
+    )
+
+    # Host-looped lazy vs on-device executor — wall-clock (DESIGN.md §5)
+    rows = _cached(
+        "device_executor_adult",
+        lambda: bench_device_executor.run(
+            "adult", T=min(100, T_big), scale=min(scale, 0.25)
+        ),
+        args.recompute,
+    )
+    big = [r for r in rows if r["n"] >= 1024]
+    # wall-clock is nondeterministic: report losses, don't abort the driver
+    # (tests/test_bench_device.py is the asserting gate, and a cached loss
+    # here would otherwise re-fail every run until --recompute)
+    for r in big:
+        if not r["device_wins"]:
+            print(
+                f"executor_device,,WARNING host loop won at n={r['n']} "
+                f"alpha={r['alpha']} — rerun with --recompute to re-measure"
+            )
+    import numpy as _np
+
+    print(
+        f"executor_device,,batch>=1024 median speedup "
+        f"{_np.median([r['speedup'] for r in big]):.2f}x over host loop "
+        f"(one trace per batch shape: "
+        f"{all(r['device_traces'] == r['device_shapes'] for r in rows)})"
     )
 
     # Roofline (from the dry-run grid, if present)

@@ -233,7 +233,16 @@ class ChunkedExecutor:
         T = plan.T
         decisions = np.zeros(n, dtype=bool)
         exit_step = np.full(n, T, dtype=np.int64)
-        g = np.zeros(n, dtype=np.float64)
+        # carried partial sums live at the decide implementation's dtype
+        # (float32 for the Pallas kernel over device scores, float64 for
+        # the numpy reference) so per-stage state is handed over without a
+        # down/up conversion round-trip of the whole vector.  The decide's
+        # true dtype can depend on the chunk dtype, so the carry also
+        # adopts the first stage's output dtype below.  Accumulation
+        # happens inside the decide either way — no bits change, only the
+        # copies.
+        carry_dtype = getattr(self.decide_fn, "carry_dtype", np.float64)
+        g = np.zeros(n, dtype=carry_dtype)
         if row_order is None:
             rows = np.arange(n, dtype=np.int64)
         else:
@@ -254,6 +263,11 @@ class ChunkedExecutor:
             g_new, active, decided_pos, ex = self.decide_fn(
                 g[rows], chunk, plan.eps_pos[t0:t1], plan.eps_neg[t0:t1], t0
             )
+            g_new = np.asarray(g_new)
+            if g_new.dtype != g.dtype:
+                # adopt the decide's dtype once (stage-1 zeros widen/narrow
+                # exactly); later stages hand state over conversion-free
+                g = g.astype(g_new.dtype)
             g[rows] = g_new
             newly = ~np.asarray(active, dtype=bool)
             exited = rows[newly]

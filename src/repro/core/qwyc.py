@@ -55,7 +55,7 @@ class QWYCModel:
 def _candidate_side(
     G: np.ndarray,
     err_flag: np.ndarray,
-    budget: int,
+    budget: int | np.ndarray,
     descending: bool,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized one-side threshold optimization for K candidates at once.
@@ -66,13 +66,16 @@ def _candidate_side(
         side) and can never exit on this side.
       err_flag: (n_active, K) bool — exiting this example on this side is an
         error.
-      budget: per-candidate error budget (same for all, they are alternatives).
+      budget: per-candidate error budget — a scalar (the candidates are
+        alternatives sharing one budget) or a (K,) vector (the positive
+        side's budget is whatever the negative side left each candidate).
       descending: True for the positive side (exit set g > eps), False for
         the negative side (exit set g < eps).
 
     Returns (thr, n_exited, n_errors), each (K,).
     """
     n, k = G.shape
+    budget = np.broadcast_to(np.asarray(budget, dtype=np.int64), (k,))
     # 'disabled' sentinel: +inf for the positive side (nothing is > +inf),
     # -inf for the negative side (nothing is < -inf).
     disabled_fill = POS_INF if descending else NEG_INF
@@ -87,7 +90,7 @@ def _candidate_side(
     distinct_next = np.empty((n, k), dtype=bool)
     distinct_next[:-1] = g_sorted[1:] != g_sorted[:-1]
     distinct_next[-1] = True
-    ok = (cum_err <= budget) & distinct_next & np.isfinite(g_sorted)
+    ok = (cum_err <= budget[None, :]) & distinct_next & np.isfinite(g_sorted)
     # deepest valid cut per column: last True along axis 0
     rev_arg = np.argmax(ok[::-1], axis=0)
     any_ok = ok.any(axis=0)
@@ -131,18 +134,14 @@ def _eval_candidates(
         exited_neg = G < thr_neg[None, :]
         G_pos = np.where(exited_neg, -POS_INF, G)
         err_pos = (~fp) & ~exited_neg
-        # per-candidate remaining budget differs; _candidate_side takes a
-        # scalar, so run grouped by remaining budget value (few distinct).
+        # per-candidate remaining budget: one grouped sweep (vector budget)
+        # instead of one _candidate_side call per distinct budget value,
+        # which degraded to K sorts of the full matrix when budgets were
+        # all distinct.
         remaining = budget - nerr_neg
-        thr_pos = np.full(k, POS_INF)
-        nex_pos = np.zeros(k, dtype=np.int64)
-        nerr_pos = np.zeros(k, dtype=np.int64)
-        for b in np.unique(remaining):
-            sel = remaining == b
-            t, e, r = _candidate_side(
-                G_pos[:, sel], err_pos[:, sel], int(b), descending=True
-            )
-            thr_pos[sel], nex_pos[sel], nerr_pos[sel] = t, e, r
+        thr_pos, nex_pos, nerr_pos = _candidate_side(
+            G_pos, err_pos, remaining, descending=True
+        )
     return {
         "thr_neg": thr_neg,
         "thr_pos": thr_pos,

@@ -1,22 +1,39 @@
 """Pallas TPU kernels for the paper's compute hot-spots (ensemble eval).
 
-cascade_kernel: blocked early-exit cascade (the QWYC serving loop).
-lattice_kernel: multilinear lattice interpolation (real-world base models).
-tree_kernel:    oblivious-forest evaluation (benchmark GBT base models).
+cascade_kernel:  blocked early-exit cascade (the QWYC serving loop).
+lattice_kernel:  multilinear lattice interpolation (real-world base models).
+tree_kernel:     oblivious-forest evaluation (benchmark GBT base models).
+device_executor: the whole cascade stage loop as ONE jit'd device program
+                 (DESIGN.md §5).
 
 All validated against pure-jnp oracles in ``ref.py`` via interpret=True.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import device_executor, ops, ref
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    StageScorer,
+    lattice_stage_scorer,
+    matrix_stage_scorer,
+    tree_stage_scorer,
+)
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
 __all__ = [
     "ops",
     "ref",
+    "device_executor",
     "cascade_pallas",
     "cascade_chunk_pallas",
     "lattice_scores_pallas",
     "gbt_scores_pallas",
+    "DeviceExecutor",
+    "DevicePlan",
+    "StageScorer",
+    "matrix_stage_scorer",
+    "tree_stage_scorer",
+    "lattice_stage_scorer",
 ]

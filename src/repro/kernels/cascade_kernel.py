@@ -219,6 +219,7 @@ def cascade_chunk_pallas(
     t0: int,
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = True,
+    n_valid: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Threshold tests for ONE cascade stage (the chunked-executor decide).
 
@@ -227,6 +228,12 @@ def cascade_chunk_pallas(
     ``g0`` (m,) and the freshly produced ``chunk_scores`` (m, ct) for
     cascade positions [t0, t0 + ct).  Rows are padded to a ``block_n``
     multiple (padded take) and the padding sliced off the outputs.
+
+    ``n_valid`` (optional, traced scalar) marks only the first ``n_valid``
+    rows as live — the on-device executor (``kernels/device_executor.py``)
+    keeps survivors compacted at the front of a fixed-capacity buffer, so
+    the live count is data, not shape, and blocks past it retire instantly
+    via the all-lanes-inactive early exit.
 
     Returns (g, active int32, decided_pos int32, exit_step int32) each (m,);
     ``exit_step`` is the absolute 1-based step, 0 where the row survived.
@@ -241,7 +248,12 @@ def cascade_chunk_pallas(
         g0 = jnp.pad(g0, (0, m_pad))
         chunk_scores = jnp.pad(chunk_scores, ((0, m_pad), (0, 0)))
     m_total = g0.shape[0]
-    valid = (jnp.arange(m_total, dtype=jnp.int32) < m).astype(jnp.int32)
+    lim = (
+        jnp.int32(m)
+        if n_valid is None
+        else jnp.minimum(jnp.int32(m), jnp.asarray(n_valid, dtype=jnp.int32))
+    )
+    valid = (jnp.arange(m_total, dtype=jnp.int32) < lim).astype(jnp.int32)
     dt = chunk_scores.dtype
     g0 = g0.astype(dt)
     eps_pos2 = eps_pos.reshape(1, ct).astype(dt)

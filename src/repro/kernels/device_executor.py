@@ -1,0 +1,439 @@
+"""On-device cascade executor: the whole stage loop as ONE jit'd program.
+
+``core.executor.ChunkedExecutor`` made the paper's early-exit savings real
+in score-count terms, but its stage loop lives on the host: every stage
+pays a device->host sync (the decide outputs are converted to numpy), a
+host-side survivor compaction (``nonzero`` + ``take``) and a fresh gather
+upload for the next stage's producer call.  Under heavy traffic that
+orchestration — not scoring — dominates wall-clock latency, the failure
+mode the query-level interleaved-traversal literature warns about
+(Lucchese et al. 2020; Busolin et al. 2021 — PAPERS.md).
+
+``DeviceExecutor`` runs the entire ``CascadePlan`` inside one
+``jax.jit``-compiled ``lax.while_loop`` over stages, with zero per-stage
+host round-trips (DESIGN.md §5):
+
+* **Fixed-capacity survivor buffers.**  The active row-index set lives in
+  a ``(cap,)`` buffer (``cap`` = batch padded to ``block_n``), survivors
+  packed at the front and the live count carried as data, not shape — so
+  every stage of every batch runs the SAME traced program: exactly one
+  trace per (N, T, chunk_t), asserted by ``DeviceExecutor.traces``.
+* **On-device compaction.**  The host path's ``nonzero`` + ``take`` is
+  replaced by a cumsum-prefix scatter: ``pos = cumsum(keep) - 1`` ranks
+  the survivors (stable — relative order preserved, same guarantee the
+  host executor gives), and a masked scatter packs them to the front.
+  Retired lanes scatter to index ``cap`` which is out of bounds and
+  dropped (``mode="drop"``).
+* **Fused stage body.**  Score production (tree/lattice Pallas kernels on
+  a ``dynamic_slice``'d slab of cascade-ordered params + row gather) and
+  the ``cascade_chunk_pallas`` decide run back-to-back inside the loop
+  body.  Stage start ``t0`` is a traced scalar; the decide kernel runs at
+  relative positions and the exit steps are rebased outside it.
+* **Early exit.**  The ``while_loop`` condition is
+  ``(s < S) & (n_active > 0)`` — the program quits as soon as every row
+  has exited, the whole-batch analogue of the paper's per-example quit.
+
+Stages are uniformized to the plan's maximum width ``W`` (the lead stage
+and the final partial stage are narrower): padded columns carry
+wide-open thresholds (+/-inf) and zeroed scores, so they can never
+change a partial sum or trigger an exit.  Semantics are therefore
+bit-identical to ``core.qwyc.evaluate_cascade`` — asserted per backend
+and mode in ``tests/test_executor.py`` / ``tests/test_serving.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
+from repro.kernels.cascade_kernel import cascade_chunk_pallas
+from repro.kernels.lattice_kernel import lattice_scores_pallas
+from repro.kernels.tree_kernel import gbt_scores_pallas
+
+__all__ = [
+    "DevicePlan",
+    "StageScorer",
+    "DeviceExecutor",
+    "matrix_stage_scorer",
+    "tree_stage_scorer",
+    "lattice_stage_scorer",
+]
+
+# Mirrors repro.kernels.ops.INTERPRET (not imported: ops imports us).
+INTERPRET = jax.default_backend() != "tpu"
+
+DEFAULT_BLOCK_N = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlan:
+    """A ``CascadePlan`` lowered to static-shape stage arrays.
+
+    All stages are padded to the maximum stage width ``W`` so the loop
+    body is shape-uniform; padded columns get wide-open thresholds and a
+    False ``col_valid`` (their scores are zeroed), so they are inert.
+    """
+
+    plan: CascadePlan
+    stage_t0: np.ndarray  # (S,) int32 — first cascade position per stage
+    widths: np.ndarray  # (S,) int32 — true (unpadded) stage widths
+    eps_pos: np.ndarray  # (S, W) float32, +inf on padded columns
+    eps_neg: np.ndarray  # (S, W) float32, -inf on padded columns
+    col_valid: np.ndarray  # (S, W) bool
+    W: int  # uniform stage width
+    T_pad: int  # model-axis pad target: every [t0, t0 + W) slab is in range
+
+    @property
+    def S(self) -> int:
+        return int(self.stage_t0.shape[0])
+
+    @classmethod
+    def from_plan(cls, plan: CascadePlan) -> "DevicePlan":
+        stages = plan.stages
+        S = len(stages)
+        W = max(t1 - t0 for t0, t1 in stages)
+        stage_t0 = np.array([t0 for t0, _ in stages], dtype=np.int32)
+        widths = np.array([t1 - t0 for t0, t1 in stages], dtype=np.int32)
+        eps_pos = np.full((S, W), np.inf, dtype=np.float32)
+        eps_neg = np.full((S, W), -np.inf, dtype=np.float32)
+        col_valid = np.zeros((S, W), dtype=bool)
+        for s, (t0, t1) in enumerate(stages):
+            w = t1 - t0
+            eps_pos[s, :w] = plan.eps_pos[t0:t1].astype(np.float32)
+            eps_neg[s, :w] = plan.eps_neg[t0:t1].astype(np.float32)
+            col_valid[s, :w] = True
+        return cls(
+            plan=plan,
+            stage_t0=stage_t0,
+            widths=widths,
+            eps_pos=eps_pos,
+            eps_neg=eps_neg,
+            col_valid=col_valid,
+            W=W,
+            T_pad=int(stage_t0.max()) + W,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StageScorer:
+    """A traceable score producer for the device loop body.
+
+    ``fn(x, rows, t0, n_valid) -> (cap, W)``: scores of cascade positions
+    [t0, t0 + W) for the given (fixed-capacity, front-packed) row buffer.
+    ``t0`` and ``n_valid`` are TRACED scalars — implementations
+    ``dynamic_slice`` their cascade-ordered parameter slabs rather than
+    specializing on ``t0``, and may use ``n_valid`` (live rows are
+    compacted at the front) to skip whole row-blocks past the live count
+    (the Pallas kernels' block guard).
+    ``prepare(batch) -> x``: one host-side call per batch producing the
+    operand ``fn`` closes the loop over (params stay baked into the
+    trace; only ``x`` streams through).
+    ``block_n``: the scorer's OWN kernel row-block size — the granularity
+    its block guard really computes at, which the executor uses for
+    ``scores_computed`` billing (None = exact producer; billed at the
+    executor's block size).
+    """
+
+    fn: Callable
+    prepare: Callable
+    width: int
+    block_n: int | None = None
+
+
+def matrix_stage_scorer(dplan: DevicePlan) -> StageScorer:
+    """Scorer over a precomputed cascade-ORDERED (n, T) matrix.
+
+    The device-loop analogue of ``core.executor.matrix_producer`` — used
+    by tests/oracles and by the server's eager ``score_fn`` fallback
+    (scoring stays eager; control flow still moves on device).
+    """
+    W, T, T_pad = dplan.W, dplan.plan.T, dplan.T_pad
+
+    def prepare(ordered: np.ndarray) -> jax.Array:
+        F = jnp.asarray(ordered, dtype=jnp.float32)
+        assert F.shape[1] == T
+        return jnp.pad(F, ((0, 0), (0, T_pad - T)))
+
+    def fn(x: jax.Array, rows: jax.Array, t0: jax.Array, n_valid) -> jax.Array:
+        xr = jnp.take(x, rows, axis=0)  # OOB (trash) indices clamp
+        return jax.lax.dynamic_slice(xr, (0, t0), (xr.shape[0], W))
+
+    return StageScorer(fn=fn, prepare=prepare, width=W)
+
+
+def tree_stage_scorer(
+    dplan: DevicePlan,
+    feats_ordered: np.ndarray,
+    thrs_ordered: np.ndarray,
+    leaves_ordered: np.ndarray,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool | None = None,
+) -> StageScorer:
+    """Oblivious-forest scorer: per stage, ``dynamic_slice`` the (W, ...)
+    slab of cascade-ordered stacked tree params and run the Pallas tree
+    kernel on the gathered survivor rows.  Padded models have zero leaves
+    (inert even before the executor masks their columns)."""
+    W, T_pad = dplan.W, dplan.T_pad
+    it = INTERPRET if interpret is None else interpret
+    T, depth = np.asarray(feats_ordered).shape
+    n_leaves = np.asarray(leaves_ordered).shape[1]
+    pad = ((0, T_pad - T), (0, 0))
+    feats_p = jnp.asarray(np.pad(np.asarray(feats_ordered), pad))
+    thrs_p = jnp.asarray(np.pad(np.asarray(thrs_ordered), pad))
+    leaves_p = jnp.asarray(np.pad(np.asarray(leaves_ordered), pad))
+
+    def prepare(x: np.ndarray) -> jax.Array:
+        return jnp.asarray(x, dtype=jnp.float32)
+
+    def fn(x: jax.Array, rows: jax.Array, t0: jax.Array, n_valid) -> jax.Array:
+        f = jax.lax.dynamic_slice(feats_p, (t0, 0), (W, depth))
+        th = jax.lax.dynamic_slice(thrs_p, (t0, 0), (W, depth))
+        lv = jax.lax.dynamic_slice(leaves_p, (t0, 0), (W, n_leaves))
+        return gbt_scores_pallas(
+            f, th, lv, x, block_n=block_n, interpret=it, rows=rows,
+            n_valid=n_valid,
+        )
+
+    return StageScorer(fn=fn, prepare=prepare, width=W, block_n=block_n)
+
+
+def lattice_stage_scorer(
+    dplan: DevicePlan,
+    theta_ordered: np.ndarray,
+    feats_ordered: np.ndarray,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool | None = None,
+) -> StageScorer:
+    """Lattice scorer: same slab scheme as ``tree_stage_scorer`` over the
+    cascade-ordered (theta, feats) stacks."""
+    W, T_pad = dplan.W, dplan.T_pad
+    it = INTERPRET if interpret is None else interpret
+    T, S_feats = np.asarray(feats_ordered).shape
+    p = np.asarray(theta_ordered).shape[1]
+    theta_p = jnp.asarray(np.pad(np.asarray(theta_ordered), ((0, T_pad - T), (0, 0))))
+    feats_p = jnp.asarray(np.pad(np.asarray(feats_ordered), ((0, T_pad - T), (0, 0))))
+
+    def prepare(x: np.ndarray) -> jax.Array:
+        return jnp.asarray(x, dtype=jnp.float32)
+
+    def fn(x: jax.Array, rows: jax.Array, t0: jax.Array, n_valid) -> jax.Array:
+        th = jax.lax.dynamic_slice(theta_p, (t0, 0), (W, p))
+        f = jax.lax.dynamic_slice(feats_p, (t0, 0), (W, S_feats))
+        return lattice_scores_pallas(
+            th, f, x, block_n=block_n, interpret=it, rows=rows,
+            n_valid=n_valid,
+        )
+
+    return StageScorer(fn=fn, prepare=prepare, width=W, block_n=block_n)
+
+
+class DeviceExecutor:
+    """Runs a ``CascadePlan`` as one compiled device program.
+
+    The host ``ChunkedExecutor`` stays as the semantics oracle and the
+    escape hatch for arbitrary (host-side) producer injection; this class
+    is the serving fast path.  ``traces`` counts jit traces — the static
+    fixed-capacity design keeps it at 1 per (N, T, chunk_t), which
+    ``tests/test_executor.py`` asserts.
+
+    Billing: an executed stage computes ``ceil(n_in / block_n) * block_n``
+    rows of its W-wide slab — the score kernels' live-count block guard
+    skips row-blocks past the compacted survivors, so even at static
+    shapes per-stage compute (and the bill) tracks the live count at
+    block granularity, exactly like the host path's ``bill_block``
+    accounting.  ``benchmarks/bench_device_executor.py`` measures both
+    this and wall-clock.
+    """
+
+    def __init__(
+        self,
+        plan: CascadePlan | DevicePlan,
+        scorer: StageScorer,
+        block_n: int = DEFAULT_BLOCK_N,
+        interpret: bool | None = None,
+    ):
+        self.dplan = plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
+        if scorer.width != self.dplan.W:
+            raise ValueError(
+                f"scorer width {scorer.width} != plan stage width {self.dplan.W}"
+            )
+        self.scorer = scorer
+        self.block_n = max(1, int(block_n))
+        self.interpret = INTERPRET if interpret is None else interpret
+        self.traces = 0
+        self._jit = jax.jit(self._program)
+
+    def _cap(self, n: int) -> int:
+        b = self.block_n
+        return -(-max(n, 1) // b) * b
+
+    def _program(self, x, rows_init, n0):
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        dp = self.dplan
+        S, W, T = dp.S, dp.W, dp.plan.T
+        cap = rows_init.shape[0]
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        eps_pos = jnp.asarray(dp.eps_pos)
+        eps_neg = jnp.asarray(dp.eps_neg)
+        col_valid = jnp.asarray(dp.col_valid)
+        lane = jnp.arange(cap, dtype=jnp.int32)
+
+        def body(carry):
+            s, rows, n_active, g, dec, ex, n_in_log = carry
+            n_in_log = n_in_log.at[s].set(n_active)
+            t0 = stage_t0[s]
+            # fused stage: score the survivor buffer, then decide.  The
+            # scorer may skip whole blocks past n_active (survivors are
+            # front-packed); padded columns are zeroed so they cannot move
+            # a partial sum.
+            scores = self.scorer.fn(x, rows, t0, n_active)
+            scores = jnp.where(col_valid[s][None, :], scores, 0.0)
+            g_rows = jnp.take(g, rows, axis=0)  # trash indices clamp
+            g_new, active, dpos, ex_rel = cascade_chunk_pallas(
+                g_rows,
+                scores,
+                eps_pos[s],
+                eps_neg[s],
+                0,
+                block_n=self.block_n,
+                interpret=self.interpret,
+                n_valid=n_active,
+            )
+            active_b = active.astype(bool)
+            lane_valid = lane < n_active
+            newly = lane_valid & (ex_rel > 0)
+            # scatter exits by absolute row index; retired/padding lanes
+            # aim at index cap, which is out of bounds and dropped
+            scat = jnp.where(newly, rows, cap)
+            dec = dec.at[scat].set(dpos.astype(bool), mode="drop")
+            ex = ex.at[scat].set(ex_rel + t0, mode="drop")
+            g = g.at[jnp.where(lane_valid, rows, cap)].set(g_new, mode="drop")
+            # cumsum-prefix compaction: rank survivors (stable) and pack
+            # them at the front of the fixed-capacity buffer
+            keep = active_b & lane_valid
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            rows = (
+                jnp.full((cap,), cap, dtype=jnp.int32)
+                .at[jnp.where(keep, pos, cap)]
+                .set(rows, mode="drop")
+            )
+            return (
+                s + 1,
+                rows,
+                keep.sum(dtype=jnp.int32),
+                g,
+                dec,
+                ex,
+                n_in_log,
+            )
+
+        def cond(carry):
+            s, _, n_active, _, _, _, _ = carry
+            # quit when you can: stop as soon as every row has exited
+            return (s < S) & (n_active > 0)
+
+        init = (
+            jnp.int32(0),
+            rows_init,
+            jnp.asarray(n0, dtype=jnp.int32),
+            jnp.zeros((cap,), dtype=jnp.float32),
+            jnp.zeros((cap,), dtype=jnp.bool_),
+            jnp.full((cap,), T, dtype=jnp.int32),
+            jnp.zeros((S,), dtype=jnp.int32),
+        )
+        s_f, rows_f, n_f, g, dec, ex, n_in_log = jax.lax.while_loop(
+            cond, body, init
+        )
+        # rows that never exited: classified by the full ensemble score
+        lane_valid = lane < n_f
+        dec = dec.at[jnp.where(lane_valid, rows_f, cap)].set(
+            jnp.take(g, rows_f, axis=0) >= jnp.float32(self.dplan.plan.beta),
+            mode="drop",
+        )
+        return dec, ex, g, s_f, n_f, n_in_log
+
+    def run(
+        self,
+        batch,
+        n: int,
+        row_order=None,
+        capacity: int | None = None,
+        prepared: bool = False,
+    ) -> ExecutorResult:
+        """Execute the cascade for ``n`` rows of ``batch`` on device.
+
+        ``batch`` is whatever the scorer's ``prepare`` consumes (feature
+        matrix for the tree/lattice scorers, a cascade-ordered score
+        matrix for the matrix scorer).  ``row_order`` is the initial
+        active-set ordering (the sorted backend's sort permutation);
+        results always come back scattered to absolute row indices.
+        ``capacity`` pins the buffer size: a caller flushing variable
+        batch sizes (the server's final partial flush) passes its max
+        batch size so every flush reuses the one compiled trace.
+        ``prepared=True`` means ``batch`` is ALREADY the scorer-prepared
+        operand (a caller that needed it earlier, e.g. for a sort key,
+        avoids a second prepare + upload).
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        if n == 0:
+            return ExecutorResult(
+                decisions=np.zeros(0, dtype=bool),
+                exit_step=np.zeros(0, dtype=np.int64),
+                g_final=np.zeros(0, dtype=np.float32),
+                chunk_stats=[],
+                scores_computed=0,
+                scores_possible=0,
+            )
+        cap = self._cap(max(n, capacity or 0))
+        x = batch if prepared else self.scorer.prepare(batch)
+        if x.shape[0] < cap:
+            x = jnp.pad(x, ((0, cap - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+        rows = (
+            np.arange(n, dtype=np.int32)
+            if row_order is None
+            else np.asarray(row_order, dtype=np.int32)
+        )
+        assert rows.shape == (n,)
+        rows_init = np.full(cap, cap, dtype=np.int32)
+        rows_init[:n] = rows
+        dec, ex, g, s_f, n_f, n_in_log = self._jit(
+            x, jnp.asarray(rows_init), n
+        )
+        dec = np.asarray(dec)[:n]
+        ex = np.asarray(ex, dtype=np.int64)[:n]
+        g = np.asarray(g)[:n]
+        s_f, n_f = int(s_f), int(n_f)
+        n_in_log = np.asarray(n_in_log)
+        stages = plan.stages
+        # bill at the SCORER's kernel block size (the granularity its
+        # block guard really computes at), not the executor's buffer block
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        chunk_stats = []
+        for s in range(s_f):
+            n_in = int(n_in_log[s])
+            n_next = int(n_in_log[s + 1]) if s + 1 < s_f else n_f
+            # block-guard billing: the score kernel computed the live
+            # blocks of the W-wide slab, not the whole capacity
+            chunk_stats.append(
+                ChunkStat(
+                    t0=stages[s][0],
+                    t1=stages[s][1],
+                    n_in=n_in,
+                    n_exited=n_in - n_next,
+                    scores_computed=-(-n_in // bn) * bn * W,
+                )
+            )
+        return ExecutorResult(
+            decisions=dec.astype(bool),
+            exit_step=ex,
+            g_final=g,
+            chunk_stats=chunk_stats,
+            scores_computed=sum(c.scores_computed for c in chunk_stats),
+            scores_possible=n * T,
+        )

@@ -30,18 +30,28 @@ DEFAULT_BLOCK_N = 256
 __all__ = ["lattice_scores_pallas"]
 
 
-def _lattice_kernel(feats_ref, x_ref, theta_ref, out_ref, *, S: int, t0: int):
+def _lattice_kernel(feats_ref, nv_ref, x_ref, theta_ref, out_ref, *, S: int, t0: int):
     t = t0 + pl.program_id(0)  # absolute lattice index within the model range
     bn = x_ref.shape[0]
-    w = jnp.ones((bn, 1), dtype=x_ref.dtype)
-    for j in range(S):
-        f = feats_ref[t, j]
-        xj = pl.load(x_ref, (slice(None), pl.dslice(f, 1)))  # (bn, 1)
-        # interleaved doubling keeps bit j of the corner index MSB-first,
-        # matching theta's reshape((2,)*S) layout.
-        w = jnp.stack([w * (1.0 - xj), w * xj], axis=-1).reshape(bn, -1)
-    theta = theta_ref[0, :]  # (2**S,)
-    out_ref[0, :] = w @ theta
+    block_start = pl.program_id(1) * bn
+
+    # live-count block guard (DESIGN.md §5): blocks past the compacted
+    # live rows skip the interpolation and emit zeros.
+    @pl.when(block_start >= nv_ref[0])
+    def _skip():
+        out_ref[0, :] = jnp.zeros((bn,), dtype=out_ref.dtype)
+
+    @pl.when(block_start < nv_ref[0])
+    def _eval():
+        w = jnp.ones((bn, 1), dtype=x_ref.dtype)
+        for j in range(S):
+            f = feats_ref[t, j]
+            xj = pl.load(x_ref, (slice(None), pl.dslice(f, 1)))  # (bn, 1)
+            # interleaved doubling keeps bit j of the corner index MSB-first,
+            # matching theta's reshape((2,)*S) layout.
+            w = jnp.stack([w * (1.0 - xj), w * xj], axis=-1).reshape(bn, -1)
+        theta = theta_ref[0, :]  # (2**S,)
+        out_ref[0, :] = w @ theta
 
 
 @functools.partial(
@@ -56,6 +66,7 @@ def lattice_scores_pallas(
     t0: int = 0,
     t1: int | None = None,
     rows: jax.Array | None = None,
+    n_valid: jax.Array | None = None,
 ) -> jax.Array:
     """Evaluate lattices [t0, t1) on N examples -> (N, t1 - t0) scores.
 
@@ -64,7 +75,10 @@ def lattice_scores_pallas(
     ``t0``/``t1`` restrict the model axis to one cascade chunk (only those
     lattices' theta blocks are DMA'd) and ``rows`` gathers surviving
     examples before blocking — the lazy chunked execution hooks of
-    DESIGN.md §4.  Defaults preserve the eager full-matrix behaviour.
+    DESIGN.md §4.  ``n_valid`` (traced scalar) makes row-blocks past the
+    live count skip compute and emit zeros — the device executor's
+    fixed-capacity hook (DESIGN.md §5).  Defaults preserve the eager
+    full-matrix behaviour.
     """
     T, p = theta.shape
     S = feats.shape[1]
@@ -80,19 +94,24 @@ def lattice_scores_pallas(
     if n_pad:
         x = jnp.pad(x, ((0, n_pad), (0, 0)))
     np_total = x.shape[0]
+    nv = jnp.full(
+        (1,),
+        np_total if n_valid is None else n_valid,
+        dtype=jnp.int32,
+    )
     grid = (tk, np_total // block_n)
     out = pl.pallas_call(
         functools.partial(_lattice_kernel, S=S, t0=t0),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((block_n, d), lambda t, i, feats: (i, 0)),
-                pl.BlockSpec((1, p), lambda t, i, feats: (t0 + t, 0)),
+                pl.BlockSpec((block_n, d), lambda t, i, feats, nv: (i, 0)),
+                pl.BlockSpec((1, p), lambda t, i, feats, nv: (t0 + t, 0)),
             ],
-            out_specs=pl.BlockSpec((1, block_n), lambda t, i, feats: (t, i)),
+            out_specs=pl.BlockSpec((1, block_n), lambda t, i, feats, nv: (t, i)),
         ),
         out_shape=jax.ShapeDtypeStruct((tk, np_total), x.dtype),
         interpret=interpret,
-    )(feats.astype(jnp.int32), x, theta.astype(x.dtype))
+    )(feats.astype(jnp.int32), nv, x, theta.astype(x.dtype))
     return out[:, :n].T

@@ -15,6 +15,7 @@ import numpy as np
 from repro.core.executor import CascadePlan, ChunkedExecutor, ExecutorResult
 from repro.kernels import ref
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
+from repro.kernels.device_executor import DeviceExecutor, StageScorer
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
@@ -47,10 +48,14 @@ def cascade_chunk(g0, chunk_scores, eps_pos, eps_neg, t0, **kw):
 def kernel_decide_fn(block_n: int = 256, interpret: bool | None = None):
     """Adapt the Pallas chunk kernel to the ``ChunkedExecutor`` decide hook.
 
-    The executor carries float64 host state; the kernel runs at the score
-    dtype (float32 on TPU).  QWYC thresholds sit strictly between observed
-    partial sums, so decisions/exit steps are unaffected (same contract the
-    eager ``cascade_decide`` path has always relied on).
+    The kernel runs at the score dtype (float32 on TPU), and the executor
+    carries state at the same dtype (``carry_dtype`` attribute) — the
+    kernel's float32 outputs used to be widened to float64 on host only to
+    be cast straight back to float32 at the next stage's kernel call, a
+    per-stage double conversion of the whole carried vector.  QWYC
+    thresholds sit strictly between observed partial sums, so decisions /
+    exit steps are unaffected (same contract the eager ``cascade_decide``
+    path has always relied on).
     """
     it = INTERPRET if interpret is None else interpret
 
@@ -68,13 +73,24 @@ def kernel_decide_fn(block_n: int = 256, interpret: bool | None = None):
             interpret=it,
         )
         return (
-            np.asarray(g, dtype=np.float64),
+            np.asarray(g),
             np.asarray(active).astype(bool),
             np.asarray(dec).astype(bool),
             np.asarray(ex, dtype=np.int64),
         )
 
+    decide.carry_dtype = np.float32
     return decide
+
+
+# device-dispatch executor cache: one compiled DeviceExecutor per
+# (scorer, plan, block_n, interpret) — strong refs on purpose, so repeat
+# calls with the same plan/scorer objects reuse the single compiled
+# trace.  Bounded (FIFO) so a long-lived process building fresh
+# plans/scorers per request cannot leak executors + param slabs without
+# limit; evicting an entry only costs a recompile on the next reuse.
+_DEVICE_EXECUTORS: dict = {}
+_DEVICE_EXECUTORS_MAX = 32
 
 
 def score_and_decide(
@@ -85,19 +101,48 @@ def score_and_decide(
     row_order=None,
     interpret: bool | None = None,
     bill_block: int | None = None,
+    device: bool = False,
+    x=None,
 ) -> ExecutorResult:
     """Fused lazy path: chunked scoring composed with the threshold kernel.
 
-    Instead of consuming a precomputed (N, T) matrix, each stage scores
-    only the surviving rows for only that stage's models (``producer`` —
-    typically a closure over ``gbt_scores``/``lattice_scores`` with
-    ``t0``/``t1``/``rows``) and immediately runs the Pallas chunk-decide
-    kernel; survivors are compacted before the next stage.
+    Host mode (default): instead of consuming a precomputed (N, T) matrix,
+    each stage scores only the surviving rows for only that stage's models
+    (``producer`` — typically a closure over ``gbt_scores``/
+    ``lattice_scores`` with ``t0``/``t1``/``rows``) and immediately runs
+    the Pallas chunk-decide kernel; survivors are compacted on host
+    before the next stage.
+
+    Device mode (``device=True``): ``producer`` must be a
+    ``device_executor.StageScorer`` and ``x`` the batch operand its
+    ``prepare`` consumes; the entire stage loop — scoring, decide,
+    compaction, early exit — runs as one jit'd ``lax.while_loop`` with no
+    per-stage host round-trips (DESIGN.md §5).  Pass the SAME plan and
+    scorer objects across calls to reuse the compiled program.
 
     ``bill_block`` defaults to ``block_n``: a kernel producer using the
     same block size really computes ceil(m / block_n) * block_n rows per
     stage, and scores_computed bills that, not the rows requested.
     """
+    if device:
+        if not isinstance(producer, StageScorer):
+            raise TypeError(
+                "device=True requires a device_executor.StageScorer producer"
+            )
+        if x is None:
+            raise ValueError("device=True requires the batch operand x")
+        key = (id(producer), id(plan), block_n, interpret)
+        entry = _DEVICE_EXECUTORS.get(key)
+        if entry is None:
+            while len(_DEVICE_EXECUTORS) >= _DEVICE_EXECUTORS_MAX:
+                _DEVICE_EXECUTORS.pop(next(iter(_DEVICE_EXECUTORS)))
+            entry = (
+                DeviceExecutor(plan, producer, block_n=block_n, interpret=interpret),
+                producer,
+                plan,
+            )
+            _DEVICE_EXECUTORS[key] = entry
+        return entry[0].run(x, n, row_order=row_order)
     ex = ChunkedExecutor(
         plan,
         producer,

@@ -27,21 +27,33 @@ __all__ = ["gbt_scores_pallas"]
 
 
 def _tree_kernel(
-    feats_ref, x_ref, thrs_ref, leaves_ref, out_ref, *, depth: int, t0: int
+    feats_ref, nv_ref, x_ref, thrs_ref, leaves_ref, out_ref, *, depth: int, t0: int
 ):
     t = t0 + pl.program_id(0)  # absolute tree index within the model range
     bn = x_ref.shape[0]
-    idx = jnp.zeros((bn,), dtype=jnp.int32)
-    for j in range(depth):
-        f = feats_ref[t, j]
-        xj = pl.load(x_ref, (slice(None), pl.dslice(f, 1)))[:, 0]  # (bn,)
-        bit = (xj > thrs_ref[0, j]).astype(jnp.int32)
-        idx = 2 * idx + bit  # MSB-first, matches training layout
-    n_leaves = 1 << depth
-    onehot = (idx[:, None] == jnp.arange(n_leaves, dtype=jnp.int32)[None, :]).astype(
-        leaves_ref.dtype
-    )
-    out_ref[0, :] = onehot @ leaves_ref[0, :]
+    block_start = pl.program_id(1) * bn
+
+    # live-count block guard: callers that keep live rows compacted at the
+    # front of a fixed-capacity buffer (the device executor) pass n_valid;
+    # whole row-blocks past the live count skip the tree walk and emit
+    # zeros, so per-stage compute tracks survivors even at static shapes.
+    @pl.when(block_start >= nv_ref[0])
+    def _skip():
+        out_ref[0, :] = jnp.zeros((bn,), dtype=out_ref.dtype)
+
+    @pl.when(block_start < nv_ref[0])
+    def _eval():
+        idx = jnp.zeros((bn,), dtype=jnp.int32)
+        for j in range(depth):
+            f = feats_ref[t, j]
+            xj = pl.load(x_ref, (slice(None), pl.dslice(f, 1)))[:, 0]  # (bn,)
+            bit = (xj > thrs_ref[0, j]).astype(jnp.int32)
+            idx = 2 * idx + bit  # MSB-first, matches training layout
+        n_leaves = 1 << depth
+        onehot = (
+            idx[:, None] == jnp.arange(n_leaves, dtype=jnp.int32)[None, :]
+        ).astype(leaves_ref.dtype)
+        out_ref[0, :] = onehot @ leaves_ref[0, :]
 
 
 @functools.partial(
@@ -57,6 +69,7 @@ def gbt_scores_pallas(
     t0: int = 0,
     t1: int | None = None,
     rows: jax.Array | None = None,
+    n_valid: jax.Array | None = None,
 ) -> jax.Array:
     """Evaluate trees [t0, t1) on N examples -> (N, t1 - t0) scores.
 
@@ -64,8 +77,13 @@ def gbt_scores_pallas(
     model axis to one cascade chunk — the grid shrinks to ``t1 - t0`` and
     only those trees' parameter blocks are DMA'd; ``rows`` (int indices)
     gathers the surviving examples before blocking, so the kernel never
-    touches retired rows.  Defaults preserve the eager full-matrix
-    behaviour (all T trees, all rows).
+    touches retired rows.  ``n_valid`` (traced scalar, DESIGN.md §5) rides
+    in as a scalar-prefetch argument: row-blocks at or past the live count
+    skip the tree walk and emit zeros — the device executor keeps
+    survivors compacted at the front of a fixed-capacity buffer, so this
+    makes per-stage compute track the live count at static shapes.
+    Defaults preserve the eager full-matrix behaviour (all T trees, all
+    rows, every block evaluated).
     """
     T, depth = feats.shape
     n_leaves = leaves.shape[1]
@@ -81,20 +99,31 @@ def gbt_scores_pallas(
     if n_pad:
         x = jnp.pad(x, ((0, n_pad), (0, 0)))
     np_total = x.shape[0]
+    nv = jnp.full(
+        (1,),
+        np_total if n_valid is None else n_valid,
+        dtype=jnp.int32,
+    )
     grid = (tk, np_total // block_n)
     out = pl.pallas_call(
         functools.partial(_tree_kernel, depth=depth, t0=t0),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((block_n, d), lambda t, i, feats: (i, 0)),
-                pl.BlockSpec((1, depth), lambda t, i, feats: (t0 + t, 0)),
-                pl.BlockSpec((1, n_leaves), lambda t, i, feats: (t0 + t, 0)),
+                pl.BlockSpec((block_n, d), lambda t, i, feats, nv: (i, 0)),
+                pl.BlockSpec((1, depth), lambda t, i, feats, nv: (t0 + t, 0)),
+                pl.BlockSpec((1, n_leaves), lambda t, i, feats, nv: (t0 + t, 0)),
             ],
-            out_specs=pl.BlockSpec((1, block_n), lambda t, i, feats: (t, i)),
+            out_specs=pl.BlockSpec((1, block_n), lambda t, i, feats, nv: (t, i)),
         ),
         out_shape=jax.ShapeDtypeStruct((tk, np_total), leaves.dtype),
         interpret=interpret,
-    )(feats.astype(jnp.int32), x.astype(leaves.dtype), thrs.astype(leaves.dtype), leaves)
+    )(
+        feats.astype(jnp.int32),
+        nv,
+        x.astype(leaves.dtype),
+        thrs.astype(leaves.dtype),
+        leaves,
+    )
     return out[:, :n].T

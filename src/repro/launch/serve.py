@@ -19,7 +19,7 @@ from repro.core import fit_qwyc
 from repro.data.synthetic import make_dataset
 from repro.ensembles.gbt import train_gbt
 from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble
-from repro.kernels import ops
+from repro.kernels import device_executor, ops
 from repro.serving.engine import QWYCServer
 
 # row-block size for the lazy chunked score kernels: survivors are padded
@@ -45,6 +45,12 @@ def main() -> None:
         "--eager", action="store_true",
         help="precompute the full (N, T) score matrix per batch instead of "
         "the lazy chunked producer (DESIGN.md §4)",
+    )
+    ap.add_argument(
+        "--device", action="store_true",
+        help="run the whole stage loop as ONE jit'd device program "
+        "(DeviceExecutor, DESIGN.md §5) instead of the host stage loop — "
+        "zero per-stage host round-trips",
     )
     ap.add_argument(
         "--audit", action="store_true",
@@ -82,6 +88,18 @@ def main() -> None:
 
             return chunk_score_fn
 
+        def make_device_scorer_factory(order):
+            of = np.asarray(stacked["feats"])[order]
+            ot = np.asarray(stacked["thrs"])[order]
+            ol = np.asarray(stacked["leaves"])[order]
+
+            def factory(dplan):
+                return device_executor.tree_stage_scorer(
+                    dplan, of, ot, ol, block_n=SCORE_BLOCK_N
+                )
+
+            return factory
+
     else:
         lat = init_lattice_ensemble(args.T, ds.D, S=min(8, ds.D), seed=0)
         lat = train_lattice_ensemble(lat, ds.x_train, ds.y_train, mode="joint", steps=300)
@@ -102,6 +120,17 @@ def main() -> None:
 
             return chunk_score_fn
 
+        def make_device_scorer_factory(order):
+            th = np.asarray(lat["theta"])[order]
+            fe = np.asarray(lat["feats"])[order]
+
+            def factory(dplan):
+                return device_executor.lattice_stage_scorer(
+                    dplan, th, fe, block_n=SCORE_BLOCK_N
+                )
+
+            return factory
+
     F_train = np.asarray(score_fn(ds.x_train))
     qwyc = fit_qwyc(F_train, beta=beta, alpha=args.alpha, mode=args.mode)
     print(
@@ -114,10 +143,16 @@ def main() -> None:
         if args.eager
         else {"chunk_score_fn": make_chunk_score_fn(qwyc.order)}
     )
+    if args.device and not args.eager:
+        # fully lazy device path; chunk_score_fn stays as the audit reader
+        producer_kw["device_scorer_factory"] = make_device_scorer_factory(
+            qwyc.order
+        )
     server = QWYCServer(
         qwyc, batch_size=args.batch_size, backend=args.backend,
         chunk_t=args.chunk_t, audit_full_scores=args.audit or args.eager,
         score_block_n=1 if args.eager else SCORE_BLOCK_N,
+        device=args.device,
         **producer_kw,
     )
     for i in range(len(ds.y_test)):
@@ -130,7 +165,8 @@ def main() -> None:
     )
     print(
         f"[serve] {st.n_requests} requests in {st.n_batches} batches "
-        f"({args.backend}, {'eager' if args.eager else 'lazy'})\n"
+        f"({args.backend}, {'eager' if args.eager else 'lazy'}"
+        f"{', device' if args.device else ''})\n"
         f"        mean models {st.mean_models:.2f}/{args.T}  "
         f"modeled speedup {st.speedup:.2f}x\n"
         f"        scores computed {st.scores_computed}/{st.scores_possible} "

@@ -31,6 +31,11 @@ Score producers:
     fallback: the matrix is materialized once per batch and the executor
     reads from it (no base-model work is skipped; ``ServeStats``
     scores_computed records the difference).
+  * ``device=True`` + ``device_scorer_factory`` — the serving fast path
+    (DESIGN.md §5): the whole stage loop (scoring, decide, compaction,
+    early exit) runs as ONE jit'd device program via
+    ``kernels.device_executor.DeviceExecutor``; the host stage loop above
+    stays as the oracle and the host-producer escape hatch.
 
 Filter-and-Score mode (neg_only): positively classified requests get the
 full ensemble score attached, matching the paper's production setting —
@@ -44,6 +49,7 @@ import dataclasses
 import time
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -54,6 +60,11 @@ from repro.core.executor import (
 )
 from repro.core.qwyc import QWYCModel
 from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    matrix_stage_scorer,
+)
 
 __all__ = ["ServeStats", "QWYCServer"]
 
@@ -106,11 +117,14 @@ class QWYCServer:
         chunk_score_fn: Callable | None = None,
         audit_full_scores: bool = True,
         score_block_n: int = 1,
+        device: bool = False,
+        device_scorer_factory: Callable | None = None,
     ):
-        """At least one of ``score_fn`` (eager, ORIGINAL model order) or
-        ``chunk_score_fn`` (lazy, cascade order — see module docstring) is
-        required; when both are given the lazy producer serves and
-        ``score_fn`` is unused.  ``audit_full_scores`` controls whether
+        """At least one of ``score_fn`` (eager, ORIGINAL model order),
+        ``chunk_score_fn`` (lazy, cascade order — see module docstring) or
+        ``device_scorer_factory`` (with ``device=True``) is required; when
+        several are given the laziest serving path wins.
+        ``audit_full_scores`` controls whether
         early-exited rows' full scores are recomputed for diff-vs-full
         accounting (audit work, tracked separately from serving work;
         without it ``diff_rate`` only covers rows that ran the full
@@ -120,11 +134,36 @@ class QWYCServer:
         it so ``ServeStats.scores_computed`` reflects real work — set it to
         the block_n your producer passes to the score kernels, or leave at
         1 for exact producers.
+
+        ``device=True`` is the serving fast path (DESIGN.md §5): the whole
+        stage loop runs as one jit'd device program (``DeviceExecutor``)
+        instead of the host stage loop — zero per-stage host round-trips.
+        Scoring comes from ``device_scorer_factory(device_plan) ->
+        StageScorer`` (fully lazy, on device) or falls back to ``score_fn``
+        (matrix materialized eagerly per batch; control flow still moves on
+        device).  The host executor remains the oracle and the escape
+        hatch for arbitrary host-side producer injection
+        (``chunk_score_fn``); with ``device=True`` an available
+        ``chunk_score_fn`` is still used for diff auditing.  The
+        ``cascade-scan`` backend's numpy decide is host-only, so under
+        ``device=True`` it executes identically to ``kernel`` (backends
+        keep their sorting policy).
         """
-        if score_fn is None and chunk_score_fn is None:
-            raise ValueError("need score_fn or chunk_score_fn")
+        if score_fn is None and chunk_score_fn is None and (
+            not device or device_scorer_factory is None
+        ):
+            raise ValueError(
+                "need score_fn, chunk_score_fn, or device=True with "
+                "device_scorer_factory"
+            )
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+        if device_scorer_factory is not None and not device:
+            raise ValueError("device_scorer_factory requires device=True")
+        if device and device_scorer_factory is None and score_fn is None:
+            raise ValueError(
+                "device=True needs device_scorer_factory or score_fn"
+            )
         self.qwyc = qwyc
         self.score_fn = score_fn
         self.chunk_score_fn = chunk_score_fn
@@ -134,10 +173,13 @@ class QWYCServer:
         self.chunk_t = chunk_t
         self.audit_full_scores = audit_full_scores
         self.score_block_n = max(1, int(score_block_n))
+        self.device = device
+        self.device_scorer_factory = device_scorer_factory
         self.plan = CascadePlan.from_qwyc(qwyc, chunk_t=chunk_t)
         self.stats = ServeStats()
         self._queue: list[np.ndarray] = []
         self._results: list[dict] = []
+        self._dev: tuple | None = None  # lazily built device-executor state
 
     def submit(self, x: np.ndarray) -> None:
         self._queue.append(np.asarray(x, dtype=np.float32))
@@ -166,6 +208,81 @@ class QWYCServer:
         ordered = scores[:, m.order]
         return matrix_producer(ordered), ordered
 
+    def _device_state(self):
+        """(executor, scorer, eager_matrix, key_fn), built once per server.
+
+        The device plan (and its lead stage, for ``sorted-kernel``) is
+        fixed at server construction, so ONE compiled trace serves every
+        flush — partial final batches are padded up to ``batch_size``
+        (``DeviceExecutor.run(capacity=...)``).
+        """
+        if self._dev is None:
+            plan = self.plan
+            if self.backend == "sorted-kernel":
+                plan = dataclasses.replace(plan, lead_t=1)
+            dplan = DevicePlan.from_plan(plan)
+            if self.device_scorer_factory is not None:
+                scorer = self.device_scorer_factory(dplan)
+                eager_matrix = False
+            else:
+                scorer = matrix_stage_scorer(dplan)
+                eager_matrix = True
+            executor = DeviceExecutor(dplan, scorer, block_n=self.block_n)
+            key_fn = None
+            if self.backend == "sorted-kernel" and not eager_matrix:
+                # sort key = first cascade model's scores, computed on
+                # device from the same stage-0 slab the loop body uses
+                cap = executor._cap(self.batch_size)
+                rows_all = jnp.arange(cap, dtype=jnp.int32)
+
+                def key_fn(x, n, _s=scorer, _r=rows_all):
+                    return _s.fn(x, _r, jnp.int32(0), n)[:, 0]
+
+                key_fn = jax.jit(key_fn)
+            self._dev = (executor, scorer, eager_matrix, key_fn)
+        return self._dev
+
+    def _run_device(self, xb: np.ndarray, n: int):
+        """Device fast path for one batch -> (result, ordered|None, billed).
+
+        ``billed`` is the serving-work score count: the executor's slab
+        billing plus (for ``sorted-kernel`` with a lazy scorer) the
+        sort-key slab, which recomputes stage 0 once more on device.
+        """
+        executor, scorer, eager_matrix, key_fn = self._device_state()
+        cap = executor._cap(max(n, self.batch_size))
+        if eager_matrix:
+            scores = np.asarray(self.score_fn(xb))  # (N, T) original order
+            ordered = scores[:, self.qwyc.order]
+            batch = ordered
+        else:
+            ordered = None
+            batch = xb
+        row_order = None
+        key_scores = 0
+        prepared = False
+        if self.backend == "sorted-kernel":
+            if eager_matrix:
+                col0 = ordered[:, 0]
+            else:
+                # prepare + pad ONCE; the key computation and the executor
+                # share the same device operand (prepared=True below)
+                batch = scorer.prepare(batch)
+                if batch.shape[0] < cap:
+                    pad = ((0, cap - batch.shape[0]),) + ((0, 0),) * (batch.ndim - 1)
+                    batch = jnp.pad(batch, pad)
+                prepared = True
+                col0 = np.asarray(key_fn(batch, n))[:n]
+                kb = scorer.block_n or self.block_n
+                key_scores = -(-n // kb) * kb * scorer.width
+            row_order = np.argsort(col0, kind="stable")
+        res = executor.run(
+            batch, n, row_order=row_order, capacity=self.batch_size,
+            prepared=prepared,
+        )
+        billed = n * self.qwyc.T if eager_matrix else res.scores_computed + key_scores
+        return res, ordered, billed
+
     def flush(self) -> list[dict]:
         if not self._queue:
             return []
@@ -176,6 +293,20 @@ class QWYCServer:
         m = self.qwyc
         T = m.T
         plan = self.plan
+
+        if self.device:
+            res, ordered, device_billed = self._run_device(xb, n)
+            # the host chunk producer (escape hatch) doubles as the
+            # unbilled audit path; _producers builds the same wrapper the
+            # host path uses
+            audit_read = (
+                self._producers(xb)[0]
+                if self.chunk_score_fn is not None
+                else None
+            )
+            return self._finish_flush(
+                t_start, xb, n, res, ordered, audit_read, device_billed
+            )
 
         producer, ordered = self._producers(xb)
         audit_read = producer  # unbilled access path for diff auditing
@@ -208,6 +339,20 @@ class QWYCServer:
             decide_fn=decide_fn,
             bill_block=self.score_block_n if ordered is None else 1,
         ).run(n, row_order=row_order)
+        return self._finish_flush(t_start, xb, n, res, ordered, audit_read, None)
+
+    def _finish_flush(
+        self, t_start, xb, n, res, ordered, audit_read, device_billed
+    ) -> list[dict]:
+        """Audit, result assembly and stats — shared by host & device paths.
+
+        ``device_billed`` is None on the host path (billing comes from the
+        executor / the materialized matrix) and the device path's
+        serving-work score count otherwise.
+        """
+        m = self.qwyc
+        T = m.T
+        plan = self.plan
         dec, exit_step = res.decisions, res.exit_step
 
         # full-ensemble score: free for rows that ran the whole cascade;
@@ -215,8 +360,8 @@ class QWYCServer:
         audit_scores = 0
         if ordered is not None:
             full_score = ordered.sum(axis=1)
-        elif self.audit_full_scores:
-            full_score = res.g_final.copy()
+        elif self.audit_full_scores and audit_read is not None:
+            full_score = res.g_final.astype(np.float64, copy=True)
             exited = np.nonzero(exit_step < T)[0]
             if exited.size:
                 full_score[exited] = audit_read(exited, 0, T).sum(axis=1)
@@ -249,8 +394,12 @@ class QWYCServer:
         st.full_cost += float(cum_cost[-1]) * n
         st.actual_cost += batch_cost
         # eager bills the materialized matrix; lazy bills what the executor
-        # actually drew through the producer (block-quantized)
-        st.scores_computed += n * T if ordered is not None else res.scores_computed
+        # actually drew through the producer (block-quantized); the device
+        # path bills its fixed-capacity slabs (+ sort-key slab, if any)
+        if device_billed is not None:
+            st.scores_computed += device_billed
+        else:
+            st.scores_computed += n * T if ordered is not None else res.scores_computed
         st.scores_possible += n * T
         st.audit_scores += audit_scores
         for k, s in enumerate(res.chunk_stats):

@@ -1,0 +1,31 @@
+"""Benchmark-shaped acceptance test for the on-device executor.
+
+Marked ``slow`` — excluded from the tier-1 ``pytest -x -q`` run (see
+``[tool.pytest.ini_options]``); run with ``pytest -m slow``.  It executes
+a reduced cell of ``benchmarks/bench_device_executor.py`` and asserts the
+PR's acceptance property: the on-device executor beats the host-looped
+lazy path on wall-clock at batch >= 1024 while staying bit-identical and
+single-trace (parity is asserted inside the benchmark itself).
+"""
+
+import pytest
+
+
+@pytest.mark.slow
+def test_device_beats_host_loop_at_1024():
+    from benchmarks.bench_device_executor import run
+
+    rows = run(
+        "adult",
+        T=100,
+        depth=5,
+        scale=0.25,
+        alphas=(0.02,),
+        batch_sizes=(1024,),
+        repeats=3,
+    )
+    (row,) = rows
+    assert row["device_wins"], (
+        f"host={row['host_s']*1e3:.1f}ms device={row['device_s']*1e3:.1f}ms"
+    )
+    assert row["device_traces"] == row["device_shapes"]

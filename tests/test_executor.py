@@ -4,7 +4,13 @@ The load-bearing guarantee: for every serving backend and both modes, the
 executor's (decisions, exit_step) are bit-identical to
 ``core.qwyc.evaluate_cascade`` — while provably requesting fewer scores
 than the eager N*T matrix whenever anything exits early.
+
+The on-device executor (``kernels/device_executor.py``) carries the same
+guarantee with one more: exactly one jit trace per (N, T, chunk_t),
+asserted via ``DeviceExecutor.traces``.
 """
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +25,12 @@ from repro.core import (
     matrix_producer,
 )
 from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    matrix_stage_scorer,
+    tree_stage_scorer,
+)
 
 
 def _fit(rng, n=400, t=24, mode="both", alpha=0.01, beta=0.0):
@@ -135,6 +147,66 @@ def test_lead_stage_parity(rng):
     np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
 
 
+@pytest.mark.parametrize("chunk_t", [1, 25, 40])
+@pytest.mark.parametrize("lead_t", [0, 25])
+def test_plan_stages_degenerate_grids(chunk_t, lead_t):
+    """chunk_t >= T, chunk_t = 1 and lead_t == T must all yield contiguous
+    full-cover stage grids (lead_t == T collapses to a single stage)."""
+    rng = np.random.default_rng(11)
+    _, m = _fit(rng, t=25)
+    plan = dataclasses.replace(
+        CascadePlan.from_qwyc(m, chunk_t=chunk_t), lead_t=lead_t
+    )
+    stages = plan.stages
+    assert stages[0][0] == 0 and stages[-1][1] == m.T
+    for (a0, a1), (b0, b1) in zip(stages, stages[1:]):
+        assert a1 == b0
+    assert all(t1 > t0 for t0, t1 in stages)
+    if lead_t == m.T:
+        assert stages == ((0, m.T),)
+
+
+@pytest.mark.parametrize("chunk_t", [1, 8, 100])
+@pytest.mark.parametrize("lead_t", [0, 1])
+def test_edge_plans_parity_both_executors(chunk_t, lead_t):
+    """Degenerate stage grids (single-model stages, one giant stage, lead
+    stage) stay bit-identical to the oracle through BOTH executors."""
+    rng = np.random.default_rng(12)
+    F, m = _fit(rng, n=200, t=16)
+    ev = evaluate_cascade(m, F)
+    plan = dataclasses.replace(
+        CascadePlan.from_qwyc(m, chunk_t=chunk_t), lead_t=lead_t
+    )
+    host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    dplan = DevicePlan.from_plan(plan)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+    dev = dex.run(F[:, m.order].astype(np.float32), F.shape[0])
+    for res in (host, dev):
+        np.testing.assert_array_equal(res.decisions, ev["decisions"])
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    assert dex.traces == 1
+
+
+def test_empty_batch_both_executors():
+    """n=0 short-circuits: no producer calls, no jit trace, empty result."""
+    rng = np.random.default_rng(13)
+    F, m = _fit(rng, t=12)
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+
+    def forbidden(rows, t0, t1):
+        raise AssertionError("producer must not be called for n=0")
+
+    res = ChunkedExecutor(plan, forbidden).run(0)
+    assert res.decisions.shape == (0,) and res.exit_step.shape == (0,)
+    assert res.scores_computed == 0 and res.chunk_stats == []
+
+    dplan = DevicePlan.from_plan(plan)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+    res_d = dex.run(np.zeros((0, m.T), dtype=np.float32), 0)
+    assert res_d.decisions.shape == (0,) and res_d.exit_step.shape == (0,)
+    assert res_d.scores_computed == 0 and dex.traces == 0
+
+
 def test_fused_tree_kernel_producer(rng):
     """score_and_decide over the REAL tree kernel with model-range + row
     gather: the lazy path computes scores with Pallas, not from a matrix."""
@@ -174,3 +246,133 @@ def test_fused_tree_kernel_producer(rng):
     assert all(t1 - t0 <= 4 for _, t0, t1 in calls)
     if (ev["exit_step"] < m.T).any():
         assert res.scores_computed < n * t
+
+
+# ---------------------------------------------------------------------------
+# On-device executor (DESIGN.md §5)
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+@pytest.mark.parametrize("chunk_t", [3, 8])
+def test_device_executor_matrix_parity(mode, chunk_t):
+    """One jit'd while_loop over stages == the host oracle, bit for bit."""
+    rng = np.random.default_rng(14)
+    F, m = _fit(rng, mode=mode)
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+    dplan = DevicePlan.from_plan(plan)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+    res = dex.run(F[:, m.order].astype(np.float32), F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    # g_final of rows that ran the whole cascade = full score (f32 scoring)
+    never = res.exit_step == m.T
+    np.testing.assert_allclose(
+        res.g_final[never], F[never].sum(axis=1), rtol=1e-4
+    )
+
+
+def test_device_executor_single_trace_and_row_order():
+    """The fixed-capacity design promises EXACTLY one trace per
+    (N, T, chunk_t): repeat batches, permuted row orders and smaller
+    batches under a pinned capacity all reuse the compiled program."""
+    rng = np.random.default_rng(15)
+    F, m = _fit(rng, t=20)
+    ev = evaluate_cascade(m, F)
+    n = F.shape[0]
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+    Fo = F[:, m.order].astype(np.float32)
+    for _ in range(3):
+        res = dex.run(Fo, n)
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    perm = np.random.default_rng(7).permutation(n)
+    res = dex.run(Fo, n, row_order=perm)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    # smaller live count, same pinned capacity -> same trace
+    res_small = dex.run(Fo[:100], 100, capacity=n)
+    np.testing.assert_array_equal(res_small.exit_step, ev["exit_step"][:100])
+    assert dex.traces == 1
+
+
+def test_device_executor_survivor_billing():
+    """Block-guard billing: each executed stage bills the LIVE blocks of
+    its slab, not the full capacity, and never less than the host lazy
+    path billed at the same block size."""
+    rng = np.random.default_rng(16)
+    F, m = _fit(rng, t=24)
+    plan = CascadePlan.from_qwyc(m, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+    res = dex.run(F[:, m.order].astype(np.float32), F.shape[0])
+    assert res.scores_computed == sum(
+        c.scores_computed for c in res.chunk_stats
+    )
+    for c in res.chunk_stats:
+        assert c.scores_computed == -(-c.n_in // 64) * 64 * dplan.W
+    # survivors entering each stage match the host executor's accounting
+    host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    assert res.survivors_per_chunk == host.survivors_per_chunk[: len(res.chunk_stats)]
+
+
+def test_device_executor_tree_scorer_parity():
+    """Real Pallas tree kernel inside the device loop: dynamic_slice'd
+    param slabs + row gather + chunk decide, fused in one program —
+    including the sorted backend's lead-stage plan."""
+    rng = np.random.default_rng(17)
+    t, depth, d, n = 16, 3, 8, 150
+    feats = rng.integers(0, d, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    x = rng.uniform(size=(n, d)).astype(np.float32)
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=64,
+        )
+    )
+    m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+    ev = evaluate_cascade(m, F)
+    for lead_t in (0, 1):
+        plan = dataclasses.replace(
+            CascadePlan.from_qwyc(m, chunk_t=4), lead_t=lead_t
+        )
+        dplan = DevicePlan.from_plan(plan)
+        scorer = tree_stage_scorer(
+            dplan, feats[m.order], thrs[m.order], leaves[m.order], block_n=64
+        )
+        dex = DeviceExecutor(dplan, scorer, block_n=64)
+        row_order = (
+            np.argsort(F[:, m.order[0]], kind="stable") if lead_t else None
+        )
+        res = dex.run(x, n, row_order=row_order)
+        np.testing.assert_array_equal(res.decisions, ev["decisions"])
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+        assert dex.traces == 1
+
+
+def test_score_and_decide_device_dispatch():
+    """ops.score_and_decide(device=True) routes to the DeviceExecutor and
+    reuses ONE compiled program across calls with the same plan/scorer."""
+    rng = np.random.default_rng(18)
+    F, m = _fit(rng, t=20)
+    ev = evaluate_cascade(m, F)
+    n = F.shape[0]
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    scorer = matrix_stage_scorer(dplan)
+    Fo = F[:, m.order].astype(np.float32)
+    for _ in range(2):
+        res = ops.score_and_decide(
+            scorer, dplan, n, block_n=64, device=True, x=Fo
+        )
+        np.testing.assert_array_equal(res.decisions, ev["decisions"])
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    key = (id(scorer), id(dplan), 64, None)
+    assert ops._DEVICE_EXECUTORS[key][0].traces == 1
+    with pytest.raises(TypeError):
+        ops.score_and_decide(matrix_producer(Fo), plan, n, device=True, x=Fo)
+    with pytest.raises(ValueError):
+        ops.score_and_decide(scorer, dplan, n, device=True)

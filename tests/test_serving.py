@@ -1,11 +1,15 @@
 """QWYCServer: backend parity, sorted-kernel permutation round-trip,
-Filter-and-Score full_score attachment, and lazy-execution stats."""
+Filter-and-Score full_score attachment, lazy-execution stats, and the
+``device=True`` fast path (one jit'd program per server, DESIGN.md §5)."""
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import make_scores
 from repro.core import evaluate_cascade, fit_qwyc
+from repro.kernels.device_executor import StageScorer
 from repro.serving.engine import BACKENDS, QWYCServer
 
 
@@ -23,6 +27,7 @@ def _linear_setup(rng, n=300, t=20, d=6, mode="both", alpha=0.01, beta=0.0):
     def score_fn(x):
         return np.asarray(x) @ W.T
 
+    chunk_score_fn.Wo = Wo  # cascade-ordered weights, for device scorers
     return X, F, m, chunk_score_fn, score_fn
 
 
@@ -162,3 +167,93 @@ def test_constructor_validation(rng):
         QWYCServer(m)  # no producer at all
     with pytest.raises(ValueError):
         QWYCServer(m, score_fn, backend="warp-drive")
+    with pytest.raises(ValueError):
+        # a device scorer factory without device=True is a config error
+        QWYCServer(m, score_fn, device_scorer_factory=lambda dp: None)
+    with pytest.raises(ValueError):
+        QWYCServer(m, device=True)  # device path with nothing to score with
+
+
+def _linear_device_factory(Wo):
+    """Device StageScorer over the linear test 'ensemble': the stage slab
+    is a dynamic_slice'd matmul — fully traceable inside the loop body."""
+    t, d = Wo.shape
+    Wo_j = jnp.asarray(Wo, dtype=jnp.float32)
+
+    def factory(dplan):
+        Wp = jnp.pad(Wo_j, ((0, dplan.T_pad - t), (0, 0)))
+
+        def fn(x, rows, t0, n_valid):
+            slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
+            return jnp.take(x, rows, axis=0) @ slab.T
+
+        return StageScorer(
+            fn=fn,
+            prepare=lambda xb: jnp.asarray(xb, jnp.float32),
+            width=dplan.W,
+        )
+
+    return factory
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+@pytest.mark.parametrize("producer", ["device-scorer", "eager-matrix"])
+def test_device_backend_parity(backend, mode, producer):
+    """device=True: every backend x mode, with a lazy device scorer or the
+    eager-matrix fallback, stays bit-identical to evaluate_cascade — and
+    the whole run compiles exactly ONE device program (partial final
+    batches are padded up to batch_size)."""
+    rng = np.random.default_rng(21)
+    X, F, m, chunk_score_fn, score_fn = _linear_setup(rng, mode=mode)
+    ev = evaluate_cascade(m, F)
+    kw = (
+        {
+            "device_scorer_factory": _linear_device_factory(chunk_score_fn.Wo),
+            "chunk_score_fn": chunk_score_fn,
+        }
+        if producer == "device-scorer"
+        else {"score_fn": score_fn}
+    )
+    srv = QWYCServer(
+        m, batch_size=128, backend=backend, chunk_t=4, device=True, **kw
+    )
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    np.testing.assert_array_equal(
+        np.array([r["models_evaluated"] for r in res]), ev["exit_step"]
+    )
+    assert srv._dev[0].traces == 1
+    if producer == "device-scorer":
+        # the host chunk_score_fn doubled as the audit reader
+        assert srv.stats.audit_scores > 0
+        assert srv.stats.diff_rate <= m.alpha + 1e-12
+
+
+def test_device_filter_and_score():
+    """neg_only device path: positives carry the exact full score."""
+    rng = np.random.default_rng(22)
+    X, F, m, chunk_score_fn, score_fn = _linear_setup(
+        rng, mode="neg_only", alpha=0.02
+    )
+    srv = QWYCServer(
+        m, batch_size=64, backend="kernel", chunk_t=4, device=True,
+        score_fn=score_fn,
+    )
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    full = F.sum(axis=1)
+    n_pos = 0
+    for i, r in enumerate(res):
+        if r["decision"]:
+            n_pos += 1
+            assert r["models_evaluated"] == m.T
+            np.testing.assert_allclose(r["full_score"], full[i], rtol=1e-4)
+        else:
+            assert "full_score" not in r
+    assert n_pos > 0
