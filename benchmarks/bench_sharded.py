@@ -1,0 +1,220 @@
+"""Sharded data-parallel executor — per-shard accounting + wall-clock.
+
+``bench_device_executor.py`` established the single-device executor's
+wall-clock win over the host loop and EXPERIMENTS.md recorded its
+batch >= 4096 gather-scaling wall.  This benchmark measures the sharded
+path (DESIGN.md §6) across shard counts: per (alpha, batch, shards) cell
+it records
+
+* the per-shard per-stage survivor occupancy and block-billed scores
+  (``ShardedDeviceExecutor.last_run_info``) — the quantity that must sum
+  to the single-device totals, asserted every run,
+* the critical-path block count (per-stage max over shards, summed) with
+  and without survivor rebalancing — the latency proxy that survives the
+  move to hardware (CPU-interpret wall-clock over forced host devices
+  measures collective overhead in a Python interpreter, not chips),
+* steady-state wall seconds for the single-device and sharded programs
+  (compiles excluded; best of ``repeats``), skipped in billing-only mode.
+
+Parity gate: every cell first asserts (decisions, exit_step)
+bit-identical to ``evaluate_cascade`` for every shard count before any
+accounting is recorded.
+
+Needs >1 XLA device for multi-shard cells: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on CPU.  Cells
+whose shard count exceeds the device count are skipped with a note.
+Results land in ``benchmarks/results/sharded_<dataset>.json`` and merge
+into the repo-root ``BENCH_executor.json`` under the ``"sharded"`` key.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import gbt_ensemble_for, save_rows
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    tree_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor, critical_blocks
+from repro.launch.mesh import make_serving_mesh
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+ALPHAS = (0.005, 0.02)
+BATCH_SIZES = (1024, 4096)
+SHARDS = (1, 2, 4)
+
+
+def _tile_rows(x: np.ndarray, n: int) -> np.ndarray:
+    reps = -(-n // x.shape[0])
+    return np.tile(x, (reps, 1))[:n]
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(
+    dataset: str = "adult",
+    T: int = 100,
+    depth: int = 5,
+    scale: float = 0.25,
+    chunk_t: int = 8,
+    block_n: int = 128,
+    alphas=ALPHAS,
+    batch_sizes=BATCH_SIZES,
+    shards_list=SHARDS,
+    repeats: int = 3,
+    billing_only: bool = False,
+) -> list[dict]:
+    n_dev = len(jax.devices())
+    usable = [s for s in shards_list if s <= n_dev]
+    skipped = [s for s in shards_list if s > n_dev]
+    if skipped:
+        print(
+            f"[bench_sharded] skipping shards {skipped}: only {n_dev} "
+            "device(s) (XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    gbt, F_tr, F_te, beta, ds = gbt_ensemble_for(dataset, T, depth, scale)
+    st = gbt.stacked()
+    rows = []
+    for alpha in alphas:
+        m = fit_qwyc(F_tr, beta=beta, alpha=alpha)
+        plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+        dplan = DevicePlan.from_plan(plan)
+        of = np.asarray(st["feats"])[m.order]
+        ot = np.asarray(st["thrs"])[m.order]
+        ol = np.asarray(st["leaves"])[m.order]
+
+        for n in batch_sizes:
+            bn = min(256, max(block_n, n // 8))
+            scorer = tree_stage_scorer(dplan, of, ot, ol, block_n=bn)
+            x_np = _tile_rows(np.asarray(ds.x_test, dtype=np.float32), n)
+            F_sub = _tile_rows(np.asarray(F_te, dtype=np.float64), n)
+            ev = evaluate_cascade(m, F_sub)
+            single = DeviceExecutor(dplan, scorer, block_n=bn)
+            res_1 = single.run(x_np, n)  # warm + single-device reference
+            assert np.array_equal(res_1.decisions, ev["decisions"])
+            assert np.array_equal(res_1.exit_step, ev["exit_step"])
+            single_n_in = [c.n_in for c in res_1.chunk_stats]
+            single_s = (
+                None if billing_only else _best_of(lambda: single.run(x_np, n), repeats)
+            )
+
+            for shards in usable:
+                mesh = make_serving_mesh(shards)
+                for rebalance in (False, True):
+                    sx = ShardedDeviceExecutor(
+                        dplan, scorer, mesh, block_n=bn, rebalance=rebalance
+                    )
+                    res = sx.run(x_np, n)  # warm/compile + parity gate
+                    assert np.array_equal(res.decisions, ev["decisions"])
+                    assert np.array_equal(res.exit_step, ev["exit_step"])
+                    info = sx.last_run_info
+                    occ = info["per_shard_n_in"]
+                    # per-shard occupancy must SUM to the single-device
+                    # stage totals — sharding can't create/destroy rows
+                    occupancy_sums = occ.sum(axis=0).tolist()
+                    assert occupancy_sums == single_n_in[: len(occupancy_sums)], (
+                        occupancy_sums,
+                        single_n_in,
+                    )
+                    sharded_s = (
+                        None
+                        if billing_only
+                        else _best_of(lambda: sx.run(x_np, n), repeats)
+                    )
+                    rows.append(
+                        {
+                            "experiment": f"sharded_{dataset}",
+                            "alpha": alpha,
+                            "n": n,
+                            "T": T,
+                            "chunk_t": chunk_t,
+                            "block_n": bn,
+                            "shards": shards,
+                            "rebalance": rebalance,
+                            "exit_rate": float((ev["exit_step"] < T).mean()),
+                            "stages_run": info["stages_run"],
+                            "rebalanced_stages": info["rebalanced_stages"],
+                            "per_shard_n_in": occ.tolist(),
+                            "per_shard_scores": info["per_shard_scores"].tolist(),
+                            "occupancy_sums_match_single_device": True,
+                            "scores_sharded": res.scores_computed,
+                            "scores_single": res_1.scores_computed,
+                            "critical_blocks": critical_blocks(occ, bn),
+                            "single_blocks": int(
+                                sum(-(-c.n_in // bn) for c in res_1.chunk_stats)
+                            ),
+                            "single_s": single_s,
+                            "sharded_s": sharded_s,
+                            "traces": sx.traces,
+                        }
+                    )
+    save_rows(f"sharded_{dataset}", rows)
+    _merge_root_summary(dataset, rows)
+    return rows
+
+
+def _merge_root_summary(dataset: str, rows: list[dict]) -> None:
+    """Add/replace the ``"sharded"`` section of BENCH_executor.json (the
+    device-executor bench owns the rest of the file and preserves this
+    section when it rewrites).
+
+    The root file is the perf-TRAJECTORY artifact: it keeps the per-cell
+    rows with their per-shard BILLING, but drops the bulky per-stage
+    occupancy matrices (those live in benchmarks/results/sharded_*.json)
+    so re-runs diff small."""
+    path = REPO_ROOT / "BENCH_executor.json"
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    slim = [{k: v for k, v in r.items() if k != "per_shard_n_in"} for r in rows]
+    multi = [r for r in rows if r["shards"] > 1]
+    crit = [
+        r["single_blocks"] / max(r["critical_blocks"], 1)
+        for r in multi
+        if not r["rebalance"]
+    ]
+    doc["sharded"] = {
+        "protocol": "EXPERIMENTS.md §Sharded-scaling",
+        "dataset": dataset,
+        "rows": slim,
+        "headline": {
+            "occupancy_sums_match_single_device": bool(
+                all(r["occupancy_sums_match_single_device"] for r in rows)
+            ),
+            "one_trace_per_run": bool(all(r["traces"] == 1 for r in rows)),
+            "max_shards_measured": max((r["shards"] for r in rows), default=0),
+            "median_critical_path_speedup_blocks": (
+                float(np.median(crit)) if crit else None
+            ),
+        },
+    }
+    path.write_text(json.dumps(doc, indent=1))
+
+
+if __name__ == "__main__":
+    for r in run():
+        wall = (
+            ""
+            if r["sharded_s"] is None
+            else f" single={r['single_s']*1e3:7.1f}ms sharded={r['sharded_s']*1e3:7.1f}ms"
+        )
+        print(
+            f"alpha={r['alpha']:<6} n={r['n']:<5} shards={r['shards']} "
+            f"reb={int(r['rebalance'])} crit_blocks={r['critical_blocks']:<4} "
+            f"(single {r['single_blocks']})"
+            + wall
+        )

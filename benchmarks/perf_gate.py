@@ -1,0 +1,240 @@
+"""Deterministic CI perf-regression gate — billing counters, no wall-clock.
+
+CPU runners can't time anything reproducibly, so the gate never reads a
+clock: it replays fixed-seed scenarios through every execution path and
+collects pure WORK COUNTERS — base-model scores computed (block-billed),
+stages executed, survivor occupancy sums, modeled models evaluated, jit
+trace counts, sharded critical-path blocks.  All integers, bit-stable
+across runs and Python versions, so ANY increase is a real regression
+(lazy evaluation got less lazy, early exit got later, a trace started
+leaking) and the gate can hard-fail without flaking.
+
+Contract (documented in EXPERIMENTS.md §Perf-gate):
+
+* ``--check`` (CI): recompute counters, diff against the committed
+  ``benchmarks/results/baseline_billing.json``.  Any counter ABOVE
+  baseline, any missing counter, or any NEW counter -> exit 1.  Counters
+  BELOW baseline pass with a note (an improvement — re-baseline to lock
+  it in).
+* ``--write-baseline``: intentional re-baseline after a change that
+  legitimately moves a counter; commit the file with the explanation in
+  the same commit.
+
+The module forces 4 host devices (before jax initializes) so the sharded
+executor's counters are always part of the gate.
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE = pathlib.Path(__file__).parent / "results" / "baseline_billing.json"
+
+
+def collect_counters() -> dict[str, int]:
+    """Fixed-seed billing counters across host / device / sharded paths."""
+    import jax
+    import numpy as np
+
+    if len(jax.devices()) < 4:
+        raise RuntimeError(
+            "perf gate needs 4 devices; XLA_FLAGS was preempted "
+            f"(have {len(jax.devices())})"
+        )
+    from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+    from repro.core.executor import ChunkedExecutor, matrix_producer
+    from repro.kernels import ops
+    from repro.kernels.device_executor import (
+        DeviceExecutor,
+        DevicePlan,
+        matrix_stage_scorer,
+    )
+    from repro.kernels.sharded_executor import (
+        ShardedDeviceExecutor,
+        critical_blocks,
+    )
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.engine import QWYCServer
+
+    c: dict[str, int] = {}
+    rng = np.random.default_rng(2026)
+    n, t = 512, 32
+    z = rng.normal(size=(n, 1))
+    F = (rng.normal(size=(n, t)) * 0.7 + 0.4 * z).astype(np.float64)
+
+    for mode in ("both", "neg_only"):
+        m = fit_qwyc(F, beta=0.0, alpha=0.01, mode=mode)
+        ev = evaluate_cascade(m, F)
+        plan = CascadePlan.from_qwyc(m, chunk_t=8)
+        p = f"{mode}"
+        c[f"{p}.modeled_models"] = int(ev["exit_step"].sum())
+
+        host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(n)
+        c[f"{p}.host.scores"] = int(host.scores_computed)
+        c[f"{p}.host.stages"] = len(host.chunk_stats)
+        c[f"{p}.host.survivor_sum"] = int(sum(host.survivors_per_chunk))
+
+        billed = ops.score_and_decide(
+            matrix_producer(F[:, m.order].astype(np.float32)), plan, n, block_n=64
+        )
+        c[f"{p}.kernel64.scores"] = int(billed.scores_computed)
+
+        dplan = DevicePlan.from_plan(plan)
+        dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+        dres = dex.run(F[:, m.order].astype(np.float32), n)
+        assert np.array_equal(dres.decisions, ev["decisions"])
+        c[f"{p}.device.scores"] = int(dres.scores_computed)
+        c[f"{p}.device.stages"] = len(dres.chunk_stats)
+        c[f"{p}.device.traces"] = int(dex.traces)
+
+        for shards in (2, 4):
+            mesh = make_serving_mesh(shards)
+            for reb in (False, True):
+                sx = ShardedDeviceExecutor(
+                    dplan, matrix_stage_scorer(dplan), mesh, block_n=64,
+                    rebalance=reb,
+                )
+                sres = sx.run(F[:, m.order].astype(np.float32), n)
+                assert np.array_equal(sres.decisions, ev["decisions"])
+                info = sx.last_run_info
+                q = f"{p}.sharded{shards}{'r' if reb else ''}"
+                c[f"{q}.scores"] = int(sres.scores_computed)
+                c[f"{q}.stages"] = int(info["stages_run"])
+                c[f"{q}.crit_blocks"] = critical_blocks(
+                    info["per_shard_n_in"], 64
+                )
+                c[f"{q}.rebalances"] = len(info["rebalanced_stages"])
+                c[f"{q}.traces"] = int(sx.traces)
+
+    # serving-path billing: lazy host backend and the sharded device path
+    rng2 = np.random.default_rng(2027)
+    ns, ts, d = 384, 24, 8
+    W = rng2.normal(size=(ts, d))
+    X = rng2.normal(size=(ns, d)).astype(np.float32)
+    Fs = (X @ W.T).astype(np.float64)
+    ms = fit_qwyc(Fs, beta=0.0, alpha=0.01)
+    Wo = W[ms.order]
+
+    def chunk_score_fn(x, rows, t0, t1):
+        return np.asarray(x)[rows] @ Wo[t0:t1].T
+
+    srv = QWYCServer(
+        ms, batch_size=128, backend="sorted-kernel", chunk_t=6,
+        chunk_score_fn=chunk_score_fn, score_block_n=32,
+    )
+    for row in X:
+        srv.submit(row)
+    srv.drain()
+    c["serve.lazy.scores"] = int(srv.stats.scores_computed)
+    c["serve.lazy.audit_scores"] = int(srv.stats.audit_scores)
+    c["serve.lazy.models"] = int(srv.stats.models_evaluated)
+
+    import jax.numpy as jnp
+
+    from repro.kernels.device_executor import StageScorer
+
+    Wo_j = jnp.asarray(Wo, dtype=jnp.float32)
+
+    def factory(dplan):
+        Wp = jnp.pad(Wo_j, ((0, dplan.T_pad - ts), (0, 0)))
+
+        def fn(x, rows, t0, n_valid):
+            slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
+            return jnp.take(x, rows, axis=0) @ slab.T
+
+        return StageScorer(
+            fn=fn, prepare=lambda xb: jnp.asarray(xb, jnp.float32),
+            width=dplan.W,
+        )
+
+    srv2 = QWYCServer(
+        ms, batch_size=64, backend="kernel", chunk_t=6,
+        mesh=make_serving_mesh(4), device_scorer_factory=factory,
+        audit_full_scores=False,
+    )
+    for row in X:
+        srv2.submit(row)
+    srv2.drain()
+    c["serve.sharded4.scores"] = int(srv2.stats.scores_computed)
+    c["serve.sharded4.batches"] = int(srv2.stats.n_batches)
+    c["serve.sharded4.traces"] = int(srv2._dev[0].traces)
+    return c
+
+
+def compare(baseline: dict[str, int], current: dict[str, int]) -> tuple[list, list]:
+    """-> (failures, improvements); the gate passes iff failures == [].
+
+    Every counter is a work counter (more = worse).  Key-set drift in
+    either direction fails: the baseline must be regenerated DELIBERATELY
+    (``--write-baseline``) whenever the counter inventory changes.
+    """
+    failures, improvements = [], []
+    for k in sorted(baseline):
+        if k not in current:
+            failures.append(f"counter disappeared: {k} (baseline {baseline[k]})")
+        elif current[k] > baseline[k]:
+            failures.append(
+                f"REGRESSION {k}: {baseline[k]} -> {current[k]} "
+                f"(+{current[k] - baseline[k]})"
+            )
+        elif current[k] < baseline[k]:
+            improvements.append(f"{k}: {baseline[k]} -> {current[k]}")
+    for k in sorted(current):
+        if k not in baseline:
+            failures.append(
+                f"new counter not in baseline: {k}={current[k]} "
+                "(rerun --write-baseline)"
+            )
+    return failures, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--check", action="store_true", help="diff vs baseline (CI)")
+    g.add_argument(
+        "--write-baseline", action="store_true",
+        help="intentional re-baseline; commit the result",
+    )
+    args = ap.parse_args(argv)
+
+    current = collect_counters()
+    if args.write_baseline:
+        BASELINE.parent.mkdir(exist_ok=True)
+        BASELINE.write_text(
+            json.dumps({"counters": current}, indent=1, sort_keys=True)
+        )
+        print(f"[perf-gate] wrote {len(current)} counters to {BASELINE}")
+        return 0
+
+    if not BASELINE.exists():
+        print(f"[perf-gate] missing {BASELINE}; run --write-baseline first")
+        return 1
+    baseline = json.loads(BASELINE.read_text())["counters"]
+    failures, improvements = compare(baseline, current)
+    for line in improvements:
+        print(f"[perf-gate] improved  {line}")
+    for line in failures:
+        print(f"[perf-gate] FAIL      {line}")
+    if failures:
+        print(
+            f"[perf-gate] {len(failures)} failing counter(s). If intentional, "
+            "re-baseline: python -m benchmarks.perf_gate --write-baseline"
+        )
+        return 1
+    print(
+        f"[perf-gate] OK — {len(baseline)} counters at or below baseline"
+        + (f" ({len(improvements)} improved; consider re-baselining)" if improvements else "")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,9 @@ lattice_kernel:  multilinear lattice interpolation (real-world base models).
 tree_kernel:     oblivious-forest evaluation (benchmark GBT base models).
 device_executor: the whole cascade stage loop as ONE jit'd device program
                  (DESIGN.md §5).
+sharded_executor: that program shard_map'd over a mesh's "data" axis —
+                 data-parallel serving with per-shard survivor buffers
+                 (DESIGN.md §6).
 
 All validated against pure-jnp oracles in ``ref.py`` via interpret=True.
 """
@@ -20,12 +23,14 @@ from repro.kernels.device_executor import (
     tree_stage_scorer,
 )
 from repro.kernels.lattice_kernel import lattice_scores_pallas
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
 __all__ = [
     "ops",
     "ref",
     "device_executor",
+    "ShardedDeviceExecutor",
     "cascade_pallas",
     "cascade_chunk_pallas",
     "lattice_scores_pallas",

@@ -284,6 +284,10 @@ class DeviceExecutor:
         lane = jnp.arange(cap, dtype=jnp.int32)
 
         def body(carry):
+            # stage semantics mirrored by ShardedDeviceExecutor._per_shard
+            # (scatter targets differ: buffer rows here, global ids there)
+            # — a semantics change here must be replayed there; the
+            # parity tests in tests/test_sharded.py catch a skew
             s, rows, n_active, g, dec, ex, n_in_log = carry
             n_in_log = n_in_log.at[s].set(n_active)
             t0 = stage_t0[s]

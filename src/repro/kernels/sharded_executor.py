@@ -1,0 +1,429 @@
+"""Sharded data-parallel cascade executor: the device stage loop under
+``shard_map`` over a mesh's ``"data"`` axis.
+
+``kernels/device_executor.py`` fused the whole ``CascadePlan`` into one
+jit'd ``lax.while_loop`` on a single device, but its per-stage row gather
+and O(cap) bookkeeping scale with the full batch capacity — the
+batch >= 4096 gather-scaling wall recorded in EXPERIMENTS.md.  The serving
+north star (heavy traffic, many chips) needs the batch axis split over
+devices, with each device paying only for ITS rows.
+
+``ShardedDeviceExecutor`` runs the same stage loop data-parallel
+(DESIGN.md §6):
+
+* **Per-shard survivor buffers.**  The global microbatch is split into
+  ``shards`` contiguous slices of the (possibly sorted) row order.  Each
+  shard carries its own front-packed survivor state — operand rows
+  ``xbuf``, partial sums ``gbuf``, global row ids ``idbuf`` — and runs
+  scoring, decide and cumsum-prefix compaction entirely locally: there are
+  NO cross-shard gathers or scatters on the hot path.
+* **psum'd global early exit.**  The ``while_loop`` condition reads a
+  replicated total live count (``lax.psum`` of the per-shard counts,
+  computed once per stage in the body), so the whole mesh quits the moment
+  every row everywhere has exited.  A shard that empties early keeps
+  stepping, but its score kernels' live-count block guard (``n_valid=0``)
+  skips all compute — it idles at block granularity, not at batch cost.
+* **Survivor rebalancing (beyond-paper, opt-in).**  Contiguous slices of a
+  sorted order drain unevenly: easy-row shards empty while hard-row shards
+  stay full, and stage latency is the SLOWEST shard's.  With
+  ``rebalance=True``, whenever occupancy skews past ``rebalance_ratio``
+  AND the skew is worth at least one kernel row-block, the shards
+  ``all_gather`` their survivor buffers, repack them globally (stable:
+  shard-major front-packed order) and re-split evenly — an all-to-all-style
+  repack that costs one collective and only fires when triggered
+  (``lax.cond``).  Row ids travel with the data, so results still scatter
+  to absolute row indices.
+* **Exactly-once result scatter.**  Each shard accumulates exits into
+  global-size (cap_g,) output arrays at the rows' ids; a row lives on
+  exactly one shard at any stage, so every id is written exactly once
+  across the mesh and a final ``psum`` assembles the batch.
+
+Semantics are bit-identical to ``DeviceExecutor`` and the host
+``ChunkedExecutor`` (per-row compute is lane-local in every kernel, so
+shard placement cannot change a score, a partial sum, or an exit) —
+asserted at shards 1/2/4, both modes, in ``tests/test_sharded.py``.
+One jit trace per (N, T, chunk_t, shards), same fixed-capacity argument
+as the single-device executor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
+from repro.kernels.cascade_kernel import cascade_chunk_pallas
+from repro.kernels.device_executor import (
+    DEFAULT_BLOCK_N,
+    INTERPRET,
+    DevicePlan,
+    StageScorer,
+)
+
+__all__ = ["ShardedDeviceExecutor", "critical_blocks"]
+
+DATA_AXIS = "data"
+
+
+def critical_blocks(per_shard_n_in: np.ndarray, block_n: int) -> int:
+    """Sharded latency proxy over a ``last_run_info["per_shard_n_in"]``
+    (shards, stages) occupancy log: a stage is as slow as its fullest
+    shard, so sum the per-stage MAX over shards of live kernel
+    row-blocks.  The single accounting shared by the sharded benchmark,
+    the CI perf gate and the test suite."""
+    occ = np.asarray(per_shard_n_in)
+    if occ.size == 0:
+        return 0
+    return int(sum((-(-occ[:, s] // block_n)).max() for s in range(occ.shape[1])))
+
+
+class ShardedDeviceExecutor:
+    """Runs a ``CascadePlan`` as one compiled program per shard of a mesh.
+
+    Drop-in for ``DeviceExecutor`` (same ``run`` signature, same
+    ``ExecutorResult``, same ``traces`` accounting) with the batch split
+    over ``mesh``'s ``"data"`` axis.  ``rebalance`` enables the skew-
+    triggered survivor repack; ``rebalance_ratio`` is the occupancy-skew
+    trigger (max shard count > ratio x balanced count, in addition to the
+    at-least-one-row-block savings guard).
+
+    After every ``run`` the per-shard accounting lands in
+    ``last_run_info``: per-shard per-stage occupancy, per-shard billed
+    scores, stages executed, and which stages triggered a rebalance —
+    the raw material for ``benchmarks/bench_sharded.py``.
+    """
+
+    def __init__(
+        self,
+        plan: CascadePlan | DevicePlan,
+        scorer: StageScorer,
+        mesh: jax.sharding.Mesh,
+        block_n: int = DEFAULT_BLOCK_N,
+        interpret: bool | None = None,
+        rebalance: bool = False,
+        rebalance_ratio: float = 1.25,
+    ):
+        self.dplan = plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
+        if scorer.width != self.dplan.W:
+            raise ValueError(
+                f"scorer width {scorer.width} != plan stage width {self.dplan.W}"
+            )
+        if DATA_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"mesh must carry a {DATA_AXIS!r} axis; got {mesh.axis_names}"
+            )
+        self.scorer = scorer
+        self.mesh = mesh
+        self.shards = int(mesh.shape[DATA_AXIS])
+        self.block_n = max(1, int(block_n))
+        self.interpret = INTERPRET if interpret is None else interpret
+        self.rebalance = bool(rebalance)
+        self.rebalance_ratio = float(rebalance_ratio)
+        self.traces = 0
+        self.last_run_info: dict | None = None
+        self._jit = jax.jit(self._program)
+
+    def _cap_local(self, n: int) -> int:
+        """Per-shard buffer capacity: the balanced share, block-padded."""
+        per = -(-max(n, 1) // self.shards)
+        return -(-per // self.block_n) * self.block_n
+
+    def _cap(self, n: int) -> int:
+        """Global padded capacity (``shards`` x the per-shard capacity)."""
+        return self.shards * self._cap_local(n)
+
+    # -- the per-shard program ------------------------------------------
+
+    def _per_shard(self, xbuf, idbuf, n_live):
+        """One shard's view: identical loop body to ``DeviceExecutor``,
+        plus the psum'd exit total and the optional rebalance step.
+
+        ``xbuf``/``idbuf``/``n_live`` arrive with a leading length-1 shard
+        axis (shard_map splits the mesh axis); outputs keep it so every
+        out_spec is sharded over ``"data"`` (no replicated out_specs —
+        ``check_rep=False`` friendly).
+        """
+        dp = self.dplan
+        S, W, T = dp.S, dp.W, dp.plan.T
+        shards = self.shards
+        xbuf = xbuf[0]
+        idbuf = idbuf[0]
+        n_live = n_live[0]
+        cap_l = idbuf.shape[0]
+        cap_g = shards * cap_l  # == the trash/sentinel id
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        eps_pos = jnp.asarray(dp.eps_pos)
+        eps_neg = jnp.asarray(dp.eps_neg)
+        col_valid = jnp.asarray(dp.col_valid)
+        lane = jnp.arange(cap_l, dtype=jnp.int32)
+        bn_bill = self.scorer.block_n or self.block_n
+
+        def _rebalance(xbuf, gbuf, idbuf, n_live, counts, total):
+            """All-gather the survivor buffers, repack globally (stable,
+            shard-major), re-split evenly.  Ids ride along, so ownership
+            moves but result scatter is unaffected."""
+            k = jax.lax.axis_index(DATA_AXIS)
+            flat_x = jax.lax.all_gather(xbuf, DATA_AXIS).reshape(
+                (cap_g,) + xbuf.shape[1:]
+            )
+            flat_g = jax.lax.all_gather(gbuf, DATA_AXIS).reshape(cap_g)
+            flat_id = jax.lax.all_gather(idbuf, DATA_AXIS).reshape(cap_g)
+            valid = (
+                jnp.arange(cap_l, dtype=jnp.int32)[None, :] < counts[:, None]
+            ).reshape(cap_g)
+            pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+            scat = jnp.where(valid, pos, cap_g)
+            packed_x = (
+                jnp.zeros_like(flat_x).at[scat].set(flat_x, mode="drop")
+            )
+            packed_g = jnp.zeros_like(flat_g).at[scat].set(flat_g, mode="drop")
+            packed_id = (
+                jnp.full((cap_g,), cap_g, dtype=jnp.int32)
+                .at[scat]
+                .set(flat_id, mode="drop")
+            )
+            base, rem = total // shards, total % shards
+            start = k * base + jnp.minimum(k, rem)
+            cnt = base + (k < rem).astype(jnp.int32)
+            xbuf = jax.lax.dynamic_slice(
+                packed_x,
+                (start,) + (0,) * (packed_x.ndim - 1),
+                (cap_l,) + packed_x.shape[1:],
+            )
+            gbuf = jax.lax.dynamic_slice(packed_g, (start,), (cap_l,))
+            idbuf = jax.lax.dynamic_slice(packed_id, (start,), (cap_l,))
+            return xbuf, gbuf, idbuf, cnt
+
+        def body(carry):
+            # fused stage semantics mirror DeviceExecutor._program's body
+            # (score -> mask -> decide -> exit scatter -> cumsum-prefix
+            # compaction), with the scatter retargeted from buffer rows to
+            # global ids — a semantics change there must be replayed here
+            # (the cross-executor parity tests in tests/test_sharded.py
+            # catch a skew)
+            (s, xbuf, gbuf, idbuf, n_live, total, dec, ex, gout,
+             n_in_log, reb_log) = carry
+            n_in_log = n_in_log.at[s].set(n_live)
+            t0 = stage_t0[s]
+            # the survivor buffer IS the row set, so the scorer's gather is
+            # the identity over cap_l local rows (never the global batch)
+            scores = self.scorer.fn(xbuf, lane, t0, n_live)
+            scores = jnp.where(col_valid[s][None, :], scores, 0.0)
+            g_new, active, dpos, ex_rel = cascade_chunk_pallas(
+                gbuf,
+                scores,
+                eps_pos[s],
+                eps_neg[s],
+                0,
+                block_n=self.block_n,
+                interpret=self.interpret,
+                n_valid=n_live,
+            )
+            active_b = active.astype(bool)
+            lane_valid = lane < n_live
+            newly = lane_valid & (ex_rel > 0)
+            # exactly-once exit scatter: ids of retired/padding lanes aim
+            # at cap_g, out of bounds of the (cap_g,) accumulators
+            scat = jnp.where(newly, idbuf, cap_g)
+            dec = dec.at[scat].set(dpos, mode="drop")
+            ex = ex.at[scat].set(ex_rel + t0, mode="drop")
+            gout = gout.at[scat].set(g_new, mode="drop")
+            # cumsum-prefix compaction, local to the shard
+            keep = active_b & lane_valid
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            pack = jnp.where(keep, pos, cap_l)
+            xbuf = jnp.zeros_like(xbuf).at[pack].set(xbuf, mode="drop")
+            gbuf = jnp.zeros_like(gbuf).at[pack].set(g_new, mode="drop")
+            idbuf = (
+                jnp.full((cap_l,), cap_g, dtype=jnp.int32)
+                .at[pack]
+                .set(idbuf, mode="drop")
+            )
+            n_live = keep.sum(dtype=jnp.int32)
+            # occupancy census: one small all_gather per stage drives both
+            # the replicated exit total and the rebalance trigger
+            counts = jax.lax.all_gather(n_live, DATA_AXIS)
+            total = counts.sum(dtype=jnp.int32)
+            if self.rebalance:
+                balanced = -(-total // shards)
+                worth_a_block = (
+                    -(-counts.max() // bn_bill) > -(-balanced // bn_bill)
+                )
+                skewed = (
+                    counts.max().astype(jnp.float32) * shards
+                    > self.rebalance_ratio * total.astype(jnp.float32)
+                )
+                trigger = (total > 0) & worth_a_block & skewed
+                reb_log = reb_log.at[s].set(trigger.astype(jnp.int32))
+                xbuf, gbuf, idbuf, n_live = jax.lax.cond(
+                    trigger,
+                    lambda a: _rebalance(*a, counts, total),
+                    lambda a: a,
+                    (xbuf, gbuf, idbuf, n_live),
+                )
+            return (
+                s + 1, xbuf, gbuf, idbuf, n_live, total, dec, ex, gout,
+                n_in_log, reb_log,
+            )
+
+        def cond(carry):
+            s = carry[0]
+            total = carry[5]
+            # quit when you can, mesh-wide: the psum'd live total hits zero
+            return (s < S) & (total > 0)
+
+        total0 = jax.lax.psum(n_live, DATA_AXIS)
+        init = (
+            jnp.int32(0),
+            xbuf,
+            jnp.zeros((cap_l,), dtype=jnp.float32),
+            idbuf,
+            n_live,
+            total0,
+            jnp.zeros((cap_g,), dtype=jnp.int32),
+            jnp.zeros((cap_g,), dtype=jnp.int32),
+            jnp.zeros((cap_g,), dtype=jnp.float32),
+            jnp.zeros((S,), dtype=jnp.int32),
+            jnp.zeros((S,), dtype=jnp.int32),
+        )
+        (s_f, xbuf, gbuf, idbuf, n_live, total, dec, ex, gout,
+         n_in_log, reb_log) = jax.lax.while_loop(cond, body, init)
+        # rows that never exited: classified by the full ensemble score,
+        # written through the same exactly-once id scatter
+        lane_valid = lane < n_live
+        scat = jnp.where(lane_valid, idbuf, cap_g)
+        dec = dec.at[scat].set(
+            (gbuf >= jnp.float32(dp.plan.beta)).astype(jnp.int32), mode="drop"
+        )
+        ex = ex.at[scat].set(jnp.full((cap_l,), T, jnp.int32), mode="drop")
+        gout = gout.at[scat].set(gbuf, mode="drop")
+        dec = jax.lax.psum(dec, DATA_AXIS)
+        ex = jax.lax.psum(ex, DATA_AXIS)
+        gout = jax.lax.psum(gout, DATA_AXIS)
+        one = lambda a: jnp.reshape(a, (1,) + a.shape)  # noqa: E731
+        return (
+            one(dec), one(ex), one(gout), one(s_f), one(n_live),
+            one(n_in_log), one(reb_log),
+        )
+
+    def _program(self, x, idbuf, n_live0):
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        shards = self.shards
+        cap_l = idbuf.shape[1]
+        # distribute the operand rows: each shard receives ONLY its cap_l
+        # rows (gathered by id here, outside shard_map, so the per-shard
+        # working set is O(cap_l), not O(batch))
+        xbuf = jnp.take(x, idbuf.reshape(-1), axis=0).reshape(
+            (shards, cap_l) + x.shape[1:]
+        )
+        sharded = shard_map(
+            self._per_shard,
+            mesh=self.mesh,
+            in_specs=(P(DATA_AXIS), P(DATA_AXIS), P(DATA_AXIS)),
+            out_specs=(P(DATA_AXIS),) * 7,
+            check_rep=False,
+        )
+        return sharded(xbuf, idbuf, n_live0)
+
+    # -- host entry -----------------------------------------------------
+
+    def run(
+        self,
+        batch,
+        n: int,
+        row_order=None,
+        capacity: int | None = None,
+        prepared: bool = False,
+    ) -> ExecutorResult:
+        """Execute the cascade for ``n`` rows, data-parallel over the mesh.
+
+        Same contract as ``DeviceExecutor.run``: ``row_order`` is the
+        initial active-set ordering (split contiguously across shards, so
+        a sorted order keeps easy rows clustered — the rebalance step
+        exists exactly because such slices drain unevenly), ``capacity``
+        pins the GLOBAL buffer size so variable flush sizes reuse one
+        trace, ``prepared=True`` skips ``scorer.prepare``.
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        if n == 0:
+            return ExecutorResult(
+                decisions=np.zeros(0, dtype=bool),
+                exit_step=np.zeros(0, dtype=np.int64),
+                g_final=np.zeros(0, dtype=np.float32),
+                chunk_stats=[],
+                scores_computed=0,
+                scores_possible=0,
+            )
+        shards = self.shards
+        cap_l = self._cap_local(max(n, capacity or 0))
+        cap_g = shards * cap_l
+        x = batch if prepared else self.scorer.prepare(batch)
+        if x.shape[0] < cap_g:
+            x = jnp.pad(x, ((0, cap_g - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+        order = (
+            np.arange(n, dtype=np.int32)
+            if row_order is None
+            else np.asarray(row_order, dtype=np.int32)
+        )
+        assert order.shape == (n,)
+        # balanced contiguous assignment: shard k takes the k-th slice of
+        # the ordered rows (ids travel with the rows from here on)
+        base, rem = divmod(n, shards)
+        idbuf = np.full((shards, cap_l), cap_g, dtype=np.int32)
+        n_live0 = np.zeros(shards, dtype=np.int32)
+        start = 0
+        for k in range(shards):
+            cnt = base + (1 if k < rem else 0)
+            idbuf[k, :cnt] = order[start : start + cnt]
+            n_live0[k] = cnt
+            start += cnt
+        dec, ex, gout, s_f, n_f, n_in_log, reb_log = self._jit(
+            x, jnp.asarray(idbuf), jnp.asarray(n_live0)
+        )
+        dec = np.asarray(dec)[0][:n].astype(bool)
+        ex = np.asarray(ex, dtype=np.int64)[0][:n]
+        gout = np.asarray(gout)[0][:n]
+        s_f = int(np.asarray(s_f)[0])
+        n_f = np.asarray(n_f)  # (shards,) final live counts
+        n_in_log = np.asarray(n_in_log)  # (shards, S)
+        reb_log = np.asarray(reb_log)  # (shards, S); identical across shards
+        stages = plan.stages
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        chunk_stats = []
+        per_shard_scores = np.zeros((shards, s_f), dtype=np.int64)
+        for s in range(s_f):
+            n_in_k = n_in_log[:, s]
+            n_in = int(n_in_k.sum())
+            n_next = int(n_in_log[:, s + 1].sum()) if s + 1 < s_f else int(n_f.sum())
+            # each shard bills the live blocks of ITS slab; empty shards
+            # bill zero (their block guard skipped the whole stage)
+            per_shard_scores[:, s] = (-(-n_in_k // bn)) * bn * W
+            chunk_stats.append(
+                ChunkStat(
+                    t0=stages[s][0],
+                    t1=stages[s][1],
+                    n_in=n_in,
+                    n_exited=n_in - n_next,
+                    scores_computed=int(per_shard_scores[:, s].sum()),
+                )
+            )
+        self.last_run_info = {
+            "shards": shards,
+            "stages_run": s_f,
+            "per_shard_n_in": n_in_log[:, :s_f].copy(),
+            "per_shard_final_live": n_f.copy(),
+            "per_shard_scores": per_shard_scores,
+            "rebalanced_stages": np.flatnonzero(reb_log[0][:s_f]).tolist(),
+        }
+        return ExecutorResult(
+            decisions=dec,
+            exit_step=ex,
+            g_final=gout,
+            chunk_stats=chunk_stats,
+            scores_computed=sum(c.scores_computed for c in chunk_stats),
+            scores_possible=n * T,
+        )

@@ -42,6 +42,30 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), SINGLE_POD_AXES)
 
 
+def make_serving_mesh(n_data_shards: int) -> jax.sharding.Mesh:
+    """1-D ``("data",)`` mesh for the sharded serving executor.
+
+    Unlike the training meshes above this takes however many devices
+    exist: ``n_data_shards`` of them, in enumeration order.  On CPU, run
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+    sharded tests and the CI sharded-parity step do exactly this) to get
+    N host "devices"; on TPU the first N chips are used directly.
+    """
+    n = int(n_data_shards)
+    if n < 1:
+        raise ValueError(f"n_data_shards must be >= 1, got {n}")
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for a {n}-way serving mesh, have {len(devs)} — "
+            f"run under XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "(must be set before jax initializes)"
+        )
+    if len(devs) == n:
+        return jax.make_mesh((n,), ("data",))
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(n), ("data",))
+
+
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """Axes the batch dimension shards over (everything except 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -53,12 +53,28 @@ def main() -> None:
         "zero per-stage host round-trips",
     )
     ap.add_argument(
+        "--shards", type=int, default=1,
+        help="data-parallel serving over N devices (DESIGN.md §6): the "
+        "stage loop runs under shard_map on a ('data',) mesh and each "
+        "flush serves shards*batch_size requests (implies --device; on "
+        "CPU run under XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
+    ap.add_argument(
+        "--rebalance", action="store_true",
+        help="with --shards > 1: all-gather repack of survivor buffers "
+        "between stages when shard occupancy skews (DESIGN.md §6)",
+    )
+    ap.add_argument(
         "--audit", action="store_true",
         help="recompute early-exited rows' full scores to measure diff vs "
         "full ensemble (extra work that can exceed the lazy savings; off "
         "by default so the CLI reflects production serving cost)",
     )
     args = ap.parse_args()
+    if args.rebalance and args.shards <= 1:
+        ap.error("--rebalance requires --shards > 1 (nothing to repack)")
+    if args.shards > 1:
+        args.device = True  # the sharded path IS the device path
 
     ds = make_dataset(args.dataset, scale=args.scale)
     print(f"[serve] dataset={args.dataset} train={len(ds.y_train)} test={len(ds.y_test)}")
@@ -148,11 +164,17 @@ def main() -> None:
         producer_kw["device_scorer_factory"] = make_device_scorer_factory(
             qwyc.order
         )
+    mesh = None
+    if args.shards > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.shards)
+        print(f"[serve] sharded serving mesh: {mesh}")
     server = QWYCServer(
         qwyc, batch_size=args.batch_size, backend=args.backend,
         chunk_t=args.chunk_t, audit_full_scores=args.audit or args.eager,
         score_block_n=1 if args.eager else SCORE_BLOCK_N,
-        device=args.device,
+        device=args.device, mesh=mesh, rebalance=args.rebalance,
         **producer_kw,
     )
     for i in range(len(ds.y_test)):
@@ -166,7 +188,8 @@ def main() -> None:
     print(
         f"[serve] {st.n_requests} requests in {st.n_batches} batches "
         f"({args.backend}, {'eager' if args.eager else 'lazy'}"
-        f"{', device' if args.device else ''})\n"
+        f"{', device' if args.device else ''}"
+        f"{f', {args.shards} shards' if args.shards > 1 else ''})\n"
         f"        mean models {st.mean_models:.2f}/{args.T}  "
         f"modeled speedup {st.speedup:.2f}x\n"
         f"        scores computed {st.scores_computed}/{st.scores_possible} "

@@ -36,6 +36,10 @@ Score producers:
     early exit) runs as ONE jit'd device program via
     ``kernels.device_executor.DeviceExecutor``; the host stage loop above
     stays as the oracle and the host-producer escape hatch.
+  * ``mesh=`` (DESIGN.md §6) — the device program additionally runs under
+    ``shard_map`` with the microbatch split over the mesh's ``"data"``
+    axis (``ShardedDeviceExecutor``): each flush serves
+    ``shards x batch_size`` requests at per-device cost ~batch_size.
 
 Filter-and-Score mode (neg_only): positively classified requests get the
 full ensemble score attached, matching the paper's production setting —
@@ -65,6 +69,7 @@ from repro.kernels.device_executor import (
     DevicePlan,
     matrix_stage_scorer,
 )
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
 
 __all__ = ["ServeStats", "QWYCServer"]
 
@@ -119,6 +124,8 @@ class QWYCServer:
         score_block_n: int = 1,
         device: bool = False,
         device_scorer_factory: Callable | None = None,
+        mesh=None,
+        rebalance: bool = False,
     ):
         """At least one of ``score_fn`` (eager, ORIGINAL model order),
         ``chunk_score_fn`` (lazy, cascade order — see module docstring) or
@@ -148,7 +155,21 @@ class QWYCServer:
         ``cascade-scan`` backend's numpy decide is host-only, so under
         ``device=True`` it executes identically to ``kernel`` (backends
         keep their sorting policy).
+
+        ``mesh`` (a ``jax.sharding.Mesh`` with a ``"data"`` axis —
+        ``launch.mesh.make_serving_mesh``) scales the device path
+        data-parallel (DESIGN.md §6): the stage loop runs under
+        ``shard_map`` via ``ShardedDeviceExecutor``, the microbatch
+        grows to ``shards x batch_size`` (``batch_size`` rows PER SHARD;
+        partial final flushes are padded up to that, so one compiled
+        trace serves every flush), and the host executor stays the
+        parity oracle.  ``mesh`` implies ``device=True``.  ``rebalance``
+        enables the skew-triggered survivor repack between stages.
         """
+        if mesh is not None:
+            device = True
+        if rebalance and mesh is None:
+            raise ValueError("rebalance=True requires a mesh (nothing to repack)")
         if score_fn is None and chunk_score_fn is None and (
             not device or device_scorer_factory is None
         ):
@@ -175,6 +196,12 @@ class QWYCServer:
         self.score_block_n = max(1, int(score_block_n))
         self.device = device
         self.device_scorer_factory = device_scorer_factory
+        self.mesh = mesh
+        self.rebalance = bool(rebalance)
+        self.n_shards = int(mesh.shape["data"]) if mesh is not None else 1
+        # data-parallel serving scales the microbatch with the mesh:
+        # batch_size rows PER SHARD per flush
+        self.flush_size = batch_size * self.n_shards
         self.plan = CascadePlan.from_qwyc(qwyc, chunk_t=chunk_t)
         self.stats = ServeStats()
         self._queue: list[np.ndarray] = []
@@ -183,7 +210,7 @@ class QWYCServer:
 
     def submit(self, x: np.ndarray) -> None:
         self._queue.append(np.asarray(x, dtype=np.float32))
-        if len(self._queue) >= self.batch_size:
+        if len(self._queue) >= self.flush_size:
             self.flush()
 
     def _producers(self, xb: np.ndarray):
@@ -213,8 +240,9 @@ class QWYCServer:
 
         The device plan (and its lead stage, for ``sorted-kernel``) is
         fixed at server construction, so ONE compiled trace serves every
-        flush — partial final batches are padded up to ``batch_size``
-        (``DeviceExecutor.run(capacity=...)``).
+        flush — partial final batches are padded up to ``flush_size``
+        (= ``batch_size``, or ``shards x batch_size`` under a mesh) via
+        ``run(capacity=...)``.
         """
         if self._dev is None:
             plan = self.plan
@@ -227,12 +255,18 @@ class QWYCServer:
             else:
                 scorer = matrix_stage_scorer(dplan)
                 eager_matrix = True
-            executor = DeviceExecutor(dplan, scorer, block_n=self.block_n)
+            if self.mesh is not None:
+                executor = ShardedDeviceExecutor(
+                    dplan, scorer, self.mesh, block_n=self.block_n,
+                    rebalance=self.rebalance,
+                )
+            else:
+                executor = DeviceExecutor(dplan, scorer, block_n=self.block_n)
             key_fn = None
             if self.backend == "sorted-kernel" and not eager_matrix:
                 # sort key = first cascade model's scores, computed on
                 # device from the same stage-0 slab the loop body uses
-                cap = executor._cap(self.batch_size)
+                cap = executor._cap(self.flush_size)
                 rows_all = jnp.arange(cap, dtype=jnp.int32)
 
                 def key_fn(x, n, _s=scorer, _r=rows_all):
@@ -250,7 +284,7 @@ class QWYCServer:
         sort-key slab, which recomputes stage 0 once more on device.
         """
         executor, scorer, eager_matrix, key_fn = self._device_state()
-        cap = executor._cap(max(n, self.batch_size))
+        cap = executor._cap(max(n, self.flush_size))
         if eager_matrix:
             scores = np.asarray(self.score_fn(xb))  # (N, T) original order
             ordered = scores[:, self.qwyc.order]
@@ -277,7 +311,7 @@ class QWYCServer:
                 key_scores = -(-n // kb) * kb * scorer.width
             row_order = np.argsort(col0, kind="stable")
         res = executor.run(
-            batch, n, row_order=row_order, capacity=self.batch_size,
+            batch, n, row_order=row_order, capacity=self.flush_size,
             prepared=prepared,
         )
         billed = n * self.qwyc.T if eager_matrix else res.scores_computed + key_scores

@@ -1,0 +1,71 @@
+"""CI perf-gate contract (EXPERIMENTS.md §Perf-gate): the billing-counter
+diff must fail on ANY counter regression or key drift, and pass (with a
+note) on improvements.  These tests exercise the pure compare logic and
+the committed baseline artifact — the heavy counter collection itself
+runs in the CI ``perf-gate`` job, not tier-1.
+"""
+
+import importlib.util
+import json
+import os
+import pathlib
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+def _load_gate():
+    """Load benchmarks/perf_gate.py by path (benchmarks/ is not on
+    tier-1's PYTHONPATH) without letting its XLA_FLAGS default leak
+    into this process's environment."""
+    had = "XLA_FLAGS" in os.environ
+    spec = importlib.util.spec_from_file_location(
+        "perf_gate_under_test", REPO / "benchmarks" / "perf_gate.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    if not had:
+        os.environ.pop("XLA_FLAGS", None)
+    return mod
+
+
+def test_gate_passes_on_equal_and_improved():
+    gate = _load_gate()
+    base = {"a.scores": 100, "b.stages": 5}
+    fails, improved = gate.compare(base, {"a.scores": 100, "b.stages": 5})
+    assert fails == [] and improved == []
+    fails, improved = gate.compare(base, {"a.scores": 90, "b.stages": 5})
+    assert fails == []
+    assert len(improved) == 1 and "a.scores" in improved[0]
+
+
+def test_gate_fails_on_any_counter_regression():
+    """The acceptance dry-run: a synthetic +1 on any counter must fail."""
+    gate = _load_gate()
+    base = {"a.scores": 100, "b.stages": 5, "c.traces": 1}
+    for k in base:
+        cur = dict(base)
+        cur[k] += 1
+        fails, _ = gate.compare(base, cur)
+        assert len(fails) == 1 and k in fails[0] and "REGRESSION" in fails[0]
+
+
+def test_gate_fails_on_key_drift():
+    gate = _load_gate()
+    base = {"a.scores": 100, "b.stages": 5}
+    fails, _ = gate.compare(base, {"a.scores": 100})  # counter disappeared
+    assert len(fails) == 1 and "b.stages" in fails[0]
+    fails, _ = gate.compare(base, {**base, "d.new": 7})  # unbaselined counter
+    assert len(fails) == 1 and "d.new" in fails[0]
+
+
+def test_committed_baseline_is_wellformed():
+    """The artifact CI diffs against: present, integer-valued, covering
+    host, device, sharded and serving paths."""
+    path = REPO / "benchmarks" / "results" / "baseline_billing.json"
+    assert path.exists(), "baseline_billing.json must be committed"
+    counters = json.loads(path.read_text())["counters"]
+    assert counters and all(
+        isinstance(v, int) and v >= 0 for v in counters.values()
+    )
+    for family in ("both.host.", "both.device.", "both.sharded4", "serve."):
+        assert any(k.startswith(family) for k in counters), family

@@ -1,0 +1,315 @@
+"""Sharded data-parallel executor (DESIGN.md §6): bit-identical parity
+with the host ``ChunkedExecutor`` oracle AND the single-device
+``DeviceExecutor`` at shards 1/2/4, one jit trace per shape, per-shard
+occupancy accounting, and the skew-triggered survivor rebalance.
+
+Multi-shard cases need multiple XLA devices; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+sharded-parity step does) — with fewer devices they SKIP, keeping plain
+tier-1 runs green on one device.
+
+All tests use LOCAL rngs so the session-rng stream stays stable for the
+rest of the suite.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.core.executor import ChunkedExecutor, matrix_producer
+from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    StageScorer,
+    matrix_stage_scorer,
+    tree_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor, critical_blocks
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.engine import QWYCServer
+
+N_DEV = len(jax.devices())
+
+
+def _shards_params(counts=(1, 2, 4)):
+    return [
+        pytest.param(
+            k,
+            marks=pytest.mark.skipif(
+                N_DEV < k,
+                reason=f"needs {k} devices (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={k})",
+            ),
+        )
+        for k in counts
+    ]
+
+
+def _fit(rng, n=400, t=24, mode="both", alpha=0.01, beta=0.0):
+    F = make_scores(rng, n=n, t=t)
+    m = fit_qwyc(F, beta=beta, alpha=alpha, mode=mode)
+    return F, m
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+@pytest.mark.parametrize("shards", _shards_params())
+def test_sharded_matrix_parity(mode, shards):
+    """shard_map'd stage loop == host oracle == single-device executor,
+    bit for bit, at every shard count (neg_only included)."""
+    rng = np.random.default_rng(31)
+    F, m = _fit(rng, mode=mode)
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    Fo = F[:, m.order].astype(np.float32)
+    mesh = make_serving_mesh(shards)
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), mesh, block_n=32
+    )
+    res = sx.run(Fo, F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    np.testing.assert_array_equal(res.decisions, host.decisions)
+    np.testing.assert_array_equal(res.exit_step, host.exit_step)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32)
+    dev = dex.run(Fo, F.shape[0])
+    # per-row compute is lane-local in every kernel, so shard placement
+    # cannot change a partial sum: g_final matches the single-device
+    # executor EXACTLY, not just approximately
+    np.testing.assert_array_equal(res.g_final, dev.g_final)
+    np.testing.assert_array_equal(res.decisions, dev.decisions)
+
+
+@pytest.mark.parametrize("shards", _shards_params((2, 4)))
+def test_sharded_tree_scorer_parity(shards):
+    """Real Pallas tree kernel inside the shard_map'd loop body (slab
+    dynamic_slice + row gather + n_valid block guard per shard)."""
+    rng = np.random.default_rng(32)
+    t, depth, d, n = 16, 3, 8, 192
+    feats = rng.integers(0, d, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    x = rng.uniform(size=(n, d)).astype(np.float32)
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=32,
+        )
+    )
+    m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    scorer = tree_stage_scorer(
+        dplan, feats[m.order], thrs[m.order], leaves[m.order], block_n=32
+    )
+    sx = ShardedDeviceExecutor(dplan, scorer, make_serving_mesh(shards), block_n=32)
+    res = sx.run(x, n)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    assert sx.traces == 1
+
+
+@pytest.mark.parametrize("shards", _shards_params((2, 4)))
+def test_sharded_single_trace_and_row_order(shards):
+    """One compiled trace per (N, T, chunk_t, shards): repeat batches,
+    permuted row orders and partial batches under a pinned capacity all
+    reuse it, and row_order never changes the result layout."""
+    rng = np.random.default_rng(33)
+    F, m = _fit(rng, t=20)
+    ev = evaluate_cascade(m, F)
+    n = F.shape[0]
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), make_serving_mesh(shards), block_n=32
+    )
+    Fo = F[:, m.order].astype(np.float32)
+    for _ in range(2):
+        res = sx.run(Fo, n)
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    perm = np.random.default_rng(7).permutation(n)
+    res = sx.run(Fo, n, row_order=perm)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    res_small = sx.run(Fo[:100], 100, capacity=n)
+    np.testing.assert_array_equal(res_small.exit_step, ev["exit_step"][:100])
+    assert sx.traces == 1
+
+
+@pytest.mark.parametrize("shards", _shards_params())
+def test_per_shard_occupancy_sums_to_host(shards):
+    """The per-shard per-stage survivor census sums to the host
+    executor's totals, stage by stage — sharding moves rows around but
+    cannot create or destroy survivors."""
+    rng = np.random.default_rng(34)
+    F, m = _fit(rng, t=24)
+    plan = CascadePlan.from_qwyc(m, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), make_serving_mesh(shards), block_n=32
+    )
+    res = sx.run(F[:, m.order].astype(np.float32), F.shape[0])
+    host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(F.shape[0])
+    info = sx.last_run_info
+    assert info["shards"] == shards
+    totals = info["per_shard_n_in"].sum(axis=0).tolist()
+    assert totals == host.survivors_per_chunk[: len(totals)]
+    # and the aggregated ChunkStats agree with the host stage accounting
+    assert [c.n_in for c in res.chunk_stats] == totals
+    assert res.scores_computed == int(info["per_shard_scores"].sum())
+
+
+def _skewed_setup(shards=4, n=512, t=24, chunk_t=1):
+    """Data where the FIRST shard's slice (rows 0..n/shards) all exit at
+    stage 1: occupancy collapses to [0, c, c, ...] after one stage."""
+    rng = np.random.default_rng(35)
+    z = rng.normal(size=(n, 1))
+    F = (rng.normal(size=(n, t)) * 0.3 + 0.1 * z).astype(np.float64)
+    m = fit_qwyc(F, beta=0.0, alpha=0.01)
+    F[: n // shards, m.order[0]] = 50.0  # guaranteed stage-1 positive exit
+    ev = evaluate_cascade(m, F)
+    assert (ev["exit_step"][: n // shards] == 1).all()
+    plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+    return F, m, ev, DevicePlan.from_plan(plan)
+
+
+@pytest.mark.parametrize("shards", _shards_params((4,)))
+def test_rebalance_refills_drained_shard(shards):
+    """One shard's rows all exit at stage 1: without rebalancing that
+    shard idles for the rest of the cascade; with it, survivors repack
+    evenly — and results stay bit-identical either way."""
+    F, m, ev, dplan = _skewed_setup(shards=shards)
+    n = F.shape[0]
+    mesh = make_serving_mesh(shards)
+    results = {}
+    for reb in (False, True):
+        sx = ShardedDeviceExecutor(
+            dplan, matrix_stage_scorer(dplan), mesh, block_n=32, rebalance=reb
+        )
+        res = sx.run(F[:, m.order].astype(np.float32), n)
+        np.testing.assert_array_equal(res.decisions, ev["decisions"])
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+        results[reb] = (res, sx.last_run_info)
+    res_off, info_off = results[False]
+    res_on, info_on = results[True]
+    np.testing.assert_array_equal(res_on.g_final, res_off.g_final)
+    # without rebalancing, shard 0 enters stage 1 empty
+    assert info_off["rebalanced_stages"] == []
+    assert info_off["per_shard_n_in"][0, 1] == 0
+    assert info_off["per_shard_n_in"][1:, 1].min() > 0
+    # with it, the stage-0 skew triggers a repack and stage 1 is balanced
+    assert 0 in info_on["rebalanced_stages"]
+    occ1 = info_on["per_shard_n_in"][:, 1]
+    assert occ1.max() - occ1.min() <= 1
+    assert occ1.sum() == info_off["per_shard_n_in"][:, 1].sum()
+    # a stage is as slow as its fullest shard: rebalancing must not make
+    # the critical path (per-stage max live blocks, summed) any worse —
+    # the summed bill may RISE slightly (spreading survivors thin costs
+    # partial blocks), which is why the trigger demands a whole-block win
+    assert critical_blocks(info_on["per_shard_n_in"], 32) <= critical_blocks(
+        info_off["per_shard_n_in"], 32
+    )
+
+
+@pytest.mark.parametrize("shards", _shards_params((2,)))
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_server_mesh_parity(shards, mode):
+    """QWYCServer(mesh=...): flush serves shards x batch_size requests,
+    results bit-match evaluate_cascade, one compiled trace per server."""
+    rng = np.random.default_rng(36)
+    n, t, d = 200, 16, 6
+    W = rng.normal(size=(t, d))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    F = (X @ W.T).astype(np.float64)
+    m = fit_qwyc(F, beta=0.0, alpha=0.01, mode=mode)
+    ev = evaluate_cascade(m, F)
+    Wo = jnp.asarray(W[m.order], dtype=jnp.float32)
+
+    def factory(dplan):
+        Wp = jnp.pad(Wo, ((0, dplan.T_pad - t), (0, 0)))
+
+        def fn(x, rows, t0, n_valid):
+            slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
+            return jnp.take(x, rows, axis=0) @ slab.T
+
+        return StageScorer(
+            fn=fn, prepare=lambda xb: jnp.asarray(xb, jnp.float32),
+            width=dplan.W,
+        )
+
+    mesh = make_serving_mesh(shards)
+    srv = QWYCServer(
+        m, batch_size=48, backend="sorted-kernel", chunk_t=4, mesh=mesh,
+        device_scorer_factory=factory, audit_full_scores=False,
+    )
+    assert srv.device  # mesh implies the device path
+    assert srv.flush_size == 48 * shards
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    assert len(res) == n
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    np.testing.assert_array_equal(
+        np.array([r["models_evaluated"] for r in res]), ev["exit_step"]
+    )
+    assert isinstance(srv._dev[0], ShardedDeviceExecutor)
+    assert srv._dev[0].traces == 1
+
+
+@pytest.mark.parametrize("shards", _shards_params((1,)))
+def test_sharded_empty_batch(shards):
+    rng = np.random.default_rng(37)
+    F, m = _fit(rng, t=12)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), make_serving_mesh(shards), block_n=32
+    )
+    res = sx.run(np.zeros((0, m.T), dtype=np.float32), 0)
+    assert res.decisions.shape == (0,) and res.exit_step.shape == (0,)
+    assert res.scores_computed == 0 and sx.traces == 0
+
+
+def test_serving_mesh_validation():
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
+    with pytest.raises(RuntimeError):
+        make_serving_mesh(len(jax.devices()) + 1)
+    # a mesh without a "data" axis is rejected by the executor
+    rng = np.random.default_rng(38)
+    F, m = _fit(rng, t=12)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
+    bad = jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
+    with pytest.raises(ValueError):
+        ShardedDeviceExecutor(dplan, matrix_stage_scorer(dplan), bad)
+
+
+@pytest.mark.parametrize("shards", _shards_params((4,)))
+def test_sorted_order_lead_stage_sharded(shards):
+    """The sorted backend's lead-stage plan (lead_t=1) through the
+    sharded executor: contiguous slices of a sorted row order drain
+    unevenly by construction, the regime rebalancing exists for."""
+    rng = np.random.default_rng(39)
+    F, m = _fit(rng, t=20)
+    ev = evaluate_cascade(m, F)
+    n = F.shape[0]
+    plan = dataclasses.replace(CascadePlan.from_qwyc(m, chunk_t=4), lead_t=1)
+    dplan = DevicePlan.from_plan(plan)
+    row_order = np.argsort(F[:, m.order[0]], kind="stable")
+    for reb in (False, True):
+        sx = ShardedDeviceExecutor(
+            dplan, matrix_stage_scorer(dplan), make_serving_mesh(shards),
+            block_n=32, rebalance=reb,
+        )
+        res = sx.run(F[:, m.order].astype(np.float32), n, row_order=row_order)
+        np.testing.assert_array_equal(res.decisions, ev["decisions"])
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
