@@ -32,8 +32,8 @@ import numpy as np
 from benchmarks.common import gbt_ensemble_for, save_rows
 from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
 from repro.kernels import ops
+from repro.api.registry import get_backend
 from repro.kernels.device_executor import (
-    DeviceExecutor,
     DevicePlan,
     tree_stage_scorer,
 )
@@ -83,7 +83,8 @@ def run(
         ol = np.asarray(st["leaves"])[m.order]
         of_j, ot_j, ol_j = jnp.asarray(of), jnp.asarray(ot), jnp.asarray(ol)
 
-        executors: dict[int, DeviceExecutor] = {}
+        device_backend = get_backend("device")
+        executors: dict[int, tuple] = {}
 
         for n in batch_sizes:
             # block size scales with batch (same value for BOTH paths):
@@ -91,7 +92,10 @@ def run(
             bn = min(256, max(block_n, n // 8))
             if bn not in executors:
                 scorer = tree_stage_scorer(dplan, of, ot, ol, block_n=bn)
-                executors[bn] = (DeviceExecutor(dplan, scorer, block_n=bn), set())
+                executors[bn] = (
+                    device_backend.make_executor(dplan, scorer=scorer, block_n=bn),
+                    set(),
+                )
             dex, shapes_seen = executors[bn]
             shapes_seen.add(-(-n // bn) * bn)  # buffer capacity for this batch
             x_np = _tile_rows(

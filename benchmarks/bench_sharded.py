@@ -38,12 +38,12 @@ import numpy as np
 
 from benchmarks.common import gbt_ensemble_for, save_rows
 from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.api.registry import get_backend
 from repro.kernels.device_executor import (
-    DeviceExecutor,
     DevicePlan,
     tree_stage_scorer,
 )
-from repro.kernels.sharded_executor import ShardedDeviceExecutor, critical_blocks
+from repro.kernels.sharded_executor import critical_blocks
 from repro.launch.mesh import make_serving_mesh
 
 REPO_ROOT = pathlib.Path(__file__).parent.parent
@@ -105,7 +105,9 @@ def run(
             x_np = _tile_rows(np.asarray(ds.x_test, dtype=np.float32), n)
             F_sub = _tile_rows(np.asarray(F_te, dtype=np.float64), n)
             ev = evaluate_cascade(m, F_sub)
-            single = DeviceExecutor(dplan, scorer, block_n=bn)
+            single = get_backend("device").make_executor(
+                dplan, scorer=scorer, block_n=bn
+            )
             res_1 = single.run(x_np, n)  # warm + single-device reference
             assert np.array_equal(res_1.decisions, ev["decisions"])
             assert np.array_equal(res_1.exit_step, ev["exit_step"])
@@ -117,8 +119,9 @@ def run(
             for shards in usable:
                 mesh = make_serving_mesh(shards)
                 for rebalance in (False, True):
-                    sx = ShardedDeviceExecutor(
-                        dplan, scorer, mesh, block_n=bn, rebalance=rebalance
+                    sx = get_backend("sharded").make_executor(
+                        dplan, scorer=scorer, mesh=mesh, block_n=bn,
+                        rebalance=rebalance,
                     )
                     res = sx.run(x_np, n)  # warm/compile + parity gate
                     assert np.array_equal(res.decisions, ev["decisions"])

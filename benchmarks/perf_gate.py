@@ -48,20 +48,20 @@ def collect_counters() -> dict[str, int]:
             "perf gate needs 4 devices; XLA_FLAGS was preempted "
             f"(have {len(jax.devices())})"
         )
+    from repro.api.registry import get_backend
     from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
-    from repro.core.executor import ChunkedExecutor, matrix_producer
+    from repro.core.executor import matrix_producer
     from repro.kernels import ops
-    from repro.kernels.device_executor import (
-        DeviceExecutor,
-        DevicePlan,
-        matrix_stage_scorer,
-    )
-    from repro.kernels.sharded_executor import (
-        ShardedDeviceExecutor,
-        critical_blocks,
-    )
-    from repro.launch.mesh import make_serving_mesh
+    from repro.kernels.device_executor import DevicePlan, matrix_stage_scorer
+    from repro.kernels.sharded_executor import critical_blocks
     from repro.serving.engine import QWYCServer
+
+    # every executor is constructed through the backend registry and every
+    # counter key prefix comes from Backend.billing_key — ONE place defines
+    # both, so baseline_billing.json keys cannot drift from the backends
+    HOST = get_backend("host")
+    DEVICE = get_backend("device")
+    SHARDED = get_backend("sharded")
 
     c: dict[str, int] = {}
     rng = np.random.default_rng(2026)
@@ -76,35 +76,42 @@ def collect_counters() -> dict[str, int]:
         p = f"{mode}"
         c[f"{p}.modeled_models"] = int(ev["exit_step"].sum())
 
-        host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(n)
-        c[f"{p}.host.scores"] = int(host.scores_computed)
-        c[f"{p}.host.stages"] = len(host.chunk_stats)
-        c[f"{p}.host.survivor_sum"] = int(sum(host.survivors_per_chunk))
+        host = HOST.make_executor(
+            plan, producer=matrix_producer(F[:, m.order])
+        ).run(n)
+        hk = HOST.billing_key()
+        c[f"{p}.{hk}.scores"] = int(host.scores_computed)
+        c[f"{p}.{hk}.stages"] = len(host.chunk_stats)
+        c[f"{p}.{hk}.survivor_sum"] = int(sum(host.survivors_per_chunk))
 
         billed = ops.score_and_decide(
-            matrix_producer(F[:, m.order].astype(np.float32)), plan, n, block_n=64
+            matrix_producer(F[:, m.order].astype(np.float32)), plan, n,
+            block_n=64, backend="host",
         )
-        c[f"{p}.kernel64.scores"] = int(billed.scores_computed)
+        kk = HOST.billing_key(decide="kernel", block_n=64)
+        c[f"{p}.{kk}.scores"] = int(billed.scores_computed)
 
         dplan = DevicePlan.from_plan(plan)
-        dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+        dex = DEVICE.make_executor(
+            dplan, scorer=matrix_stage_scorer(dplan), block_n=64
+        )
         dres = dex.run(F[:, m.order].astype(np.float32), n)
         assert np.array_equal(dres.decisions, ev["decisions"])
-        c[f"{p}.device.scores"] = int(dres.scores_computed)
-        c[f"{p}.device.stages"] = len(dres.chunk_stats)
-        c[f"{p}.device.traces"] = int(dex.traces)
+        dk = DEVICE.billing_key()
+        c[f"{p}.{dk}.scores"] = int(dres.scores_computed)
+        c[f"{p}.{dk}.stages"] = len(dres.chunk_stats)
+        c[f"{p}.{dk}.traces"] = int(dex.traces)
 
         for shards in (2, 4):
-            mesh = make_serving_mesh(shards)
             for reb in (False, True):
-                sx = ShardedDeviceExecutor(
-                    dplan, matrix_stage_scorer(dplan), mesh, block_n=64,
-                    rebalance=reb,
+                sx = SHARDED.make_executor(
+                    dplan, scorer=matrix_stage_scorer(dplan), shards=shards,
+                    block_n=64, rebalance=reb,
                 )
                 sres = sx.run(F[:, m.order].astype(np.float32), n)
                 assert np.array_equal(sres.decisions, ev["decisions"])
                 info = sx.last_run_info
-                q = f"{p}.sharded{shards}{'r' if reb else ''}"
+                q = f"{p}.{SHARDED.billing_key(shards=shards, rebalance=reb)}"
                 c[f"{q}.scores"] = int(sres.scores_computed)
                 c[f"{q}.stages"] = int(info["stages_run"])
                 c[f"{q}.crit_blocks"] = critical_blocks(
@@ -156,15 +163,16 @@ def collect_counters() -> dict[str, int]:
 
     srv2 = QWYCServer(
         ms, batch_size=64, backend="kernel", chunk_t=6,
-        mesh=make_serving_mesh(4), device_scorer_factory=factory,
-        audit_full_scores=False,
+        exec_backend="sharded", backend_opts={"shards": 4},
+        device_scorer_factory=factory, audit_full_scores=False,
     )
     for row in X:
         srv2.submit(row)
     srv2.drain()
-    c["serve.sharded4.scores"] = int(srv2.stats.scores_computed)
-    c["serve.sharded4.batches"] = int(srv2.stats.n_batches)
-    c["serve.sharded4.traces"] = int(srv2._dev[0].traces)
+    sk = SHARDED.billing_key(shards=4)
+    c[f"serve.{sk}.scores"] = int(srv2.stats.scores_computed)
+    c[f"serve.{sk}.batches"] = int(srv2.stats.n_batches)
+    c[f"serve.{sk}.traces"] = int(srv2._dev[0].traces)
     return c
 
 

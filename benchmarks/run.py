@@ -125,21 +125,29 @@ def main() -> None:
 
     # Host-looped lazy vs on-device executor — wall-clock (DESIGN.md §5).
     # Device/sharded benches are environment-sensitive (device counts,
-    # accelerator runtime state): a RuntimeError (what jax/XLA and
-    # make_serving_mesh raise for those) must SKIP with a clear message,
-    # never crash the rest of the suite.  Anything else is a programming
-    # error and propagates.
-    try:
-        rows = _cached(
-            "device_executor_adult",
-            lambda: bench_device_executor.run(
-                "adult", T=min(100, T_big), scale=min(scale, 0.25)
-            ),
-            args.recompute,
-        )
-    except RuntimeError as e:  # pragma: no cover - environment-dependent
-        print(f"executor_device,,SKIPPED ({type(e).__name__}: {e})")
-        rows = []
+    # accelerator runtime state): availability comes from the backend
+    # registry (the ONE place that decides "do we have the devices"), and
+    # a RuntimeError (what jax/XLA and mesh construction raise) must SKIP
+    # with a clear message, never crash the rest of the suite.  Anything
+    # else is a programming error and propagates.
+    from repro.api.registry import get_backend
+
+    rows = []
+    dev_ok, dev_why = get_backend("device").available()
+    if not dev_ok:
+        print(f"executor_device,,SKIPPED: {dev_why}")
+    else:
+        try:
+            rows = _cached(
+                "device_executor_adult",
+                lambda: bench_device_executor.run(
+                    "adult", T=min(100, T_big), scale=min(scale, 0.25)
+                ),
+                args.recompute,
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"executor_device,,SKIPPED ({type(e).__name__}: {e})")
+            rows = []
     big = [r for r in rows if r["n"] >= 1024]
     # wall-clock is nondeterministic: report losses, don't abort the driver
     # (tests/test_bench_device.py is the asserting gate, and a cached loss
@@ -161,15 +169,12 @@ def main() -> None:
         )
 
     # Sharded data-parallel executor (DESIGN.md §6): multi-shard cells
-    # need multiple XLA devices — on a single device, skip with a clear
-    # message (and exit 0) instead of crashing mid-suite
-    import jax as _jax
-
-    if len(_jax.devices()) < 2:
-        print(
-            "executor_sharded,,SKIPPED: 1 device — run under "
-            "XLA_FLAGS=--xla_force_host_platform_device_count=4"
-        )
+    # need multiple XLA devices — the backend's own availability check
+    # decides, and on a single device we skip with its reason (and exit 0)
+    # instead of crashing mid-suite
+    sh_ok, sh_why = get_backend("sharded").available()
+    if not sh_ok:
+        print(f"executor_sharded,,SKIPPED: {sh_why}")
     else:
         from benchmarks import bench_sharded
 

@@ -3,43 +3,60 @@
 The paper's production scenario: a lattice ensemble scores candidates where
 95% are negatives that should be rejected as cheaply as possible; positives
 need the full score for downstream ranking.  QWYC optimizes ONLY the
-early-rejection thresholds (neg_only) and the batched serving engine
-processes a stream of requests through the blocked Pallas cascade.
+early-rejection thresholds (neg_only) and a batched server — built through
+the ``repro.api`` pipeline (``fit -> compile -> serve``) on whatever
+execution backend ``"auto"`` negotiates — processes a stream of requests.
 
-    PYTHONPATH=src python examples/filter_and_score.py
+    PYTHONPATH=src python examples/filter_and_score.py          # full size
+    PYTHONPATH=src python examples/filter_and_score.py --quick  # CI smoke
 """
+
+import argparse
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import evaluate_fan, fit_fan, fit_qwyc, individual_mse_order
+from repro import api
+from repro.core import evaluate_fan, fit_fan, individual_mse_order
 from repro.data.synthetic import make_dataset
 from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble
 from repro.kernels import ops
-from repro.serving.engine import QWYCServer
 
 
 def main() -> None:
-    ds = make_dataset("rw1", scale=0.5)  # 95% negative prior
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    scale, steps = (0.25, 150) if args.quick else (0.5, 400)
+
+    ds = make_dataset("rw1", scale=scale)  # 95% negative prior
     T = 5
     lat = init_lattice_ensemble(T, ds.D, S=8, seed=0)
-    lat = train_lattice_ensemble(lat, ds.x_train, ds.y_train, mode="joint", steps=400)
+    lat = train_lattice_ensemble(lat, ds.x_train, ds.y_train, mode="joint", steps=steps)
 
     def score_fn(x):
         return ops.lattice_scores(lat["theta"], lat["feats"], jnp.asarray(x))
 
-    F_tr = np.asarray(score_fn(ds.x_train))
-    qwyc = fit_qwyc(F_tr, beta=0.0, alpha=0.005, mode="neg_only")
+    # fit takes the ensemble's batched scorer + calibration features and
+    # keeps the scorer for compile/serve downstream
+    fitted = api.fit(score_fn, ds.x_train, beta=0.0, alpha=0.005, mode="neg_only")
+    qwyc = fitted.model
     print(f"QWYC (neg-only): train mean models {qwyc.train_mean_models:.2f}/{T}")
 
-    # Fan et al. (2002) baseline at matched faithfulness
+    # Fan et al. (2002) baseline at matched faithfulness — reusing the
+    # calibration matrix fit() already computed (no second scoring pass)
+    F_tr = fitted.calibration_scores
     fan = fit_fan(F_tr, individual_mse_order(F_tr, ds.y_train), lam=0.01)
     fan_ev = evaluate_fan(fan, np.asarray(score_fn(ds.x_test)), gamma=2.0)
     print(f"Fan baseline: mean models {fan_ev['mean_models']:.2f}/{T} "
           f"diff {fan_ev['diff_rate']:.4f}")
 
-    # stream the test set through the batched serving engine
-    server = QWYCServer(qwyc, score_fn, batch_size=512, backend="sorted-kernel")
+    # stream the test set through the batched serving engine on the
+    # negotiated backend (sharded -> device -> host)
+    compiled = fitted.compile("auto")
+    server = compiled.serve(batch_size=512, policy="sorted-kernel")
+    print(f"serving on the {compiled.backend_name!r} backend "
+          f"({server.n_shards} shard(s))")
     for row in ds.x_test:
         server.submit(row)
     results = server.drain()

@@ -1,28 +1,42 @@
-"""Quickstart: QWYC in ~40 lines.
+"""Quickstart: the QWYC pipeline in ~40 lines — fit, compile, evaluate.
 
-Trains a gradient-boosted ensemble on the Adult-analogue dataset, jointly
-optimizes evaluation order + early-stopping thresholds (Algorithm 1), and
-evaluates the resulting cascade — reproducing the paper's headline claim
-that a large ensemble can be served at a fraction of its evaluation cost
-while classifying almost identically.
+Trains a gradient-boosted ensemble on the Adult-analogue dataset, then
+runs the paper's whole contract through the ``repro.api`` front door:
+``api.fit`` jointly optimizes evaluation order + early-stopping
+thresholds (Algorithm 1), ``.compile("auto")`` binds the cascade to the
+best execution backend the machine offers (sharded -> device -> host,
+negotiated from the available XLA devices), and ``.evaluate`` serves the
+test split — reproducing the headline claim that a large ensemble can be
+evaluated at a fraction of its cost while classifying almost
+identically.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py          # full size
+    PYTHONPATH=src python examples/quickstart.py --quick  # CI smoke
 """
 
+import argparse
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import evaluate_cascade, fit_qwyc
+from repro import api
+from repro.core import evaluate_cascade
 from repro.data.synthetic import make_dataset
 from repro.ensembles.gbt import train_gbt
 from repro.kernels import ops
 
 
 def main() -> None:
-    ds = make_dataset("adult", scale=0.5)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    scale, T = (0.25, 50) if args.quick else (0.5, 200)
+
+    ds = make_dataset("adult", scale=scale)
     print(f"dataset: {len(ds.y_train)} train / {len(ds.y_test)} test, D={ds.D}")
 
-    gbt = train_gbt(ds.x_train, ds.y_train, n_trees=200, depth=5, verbose=False)
+    gbt = train_gbt(ds.x_train, ds.y_train, n_trees=T, depth=5, verbose=False)
     st = gbt.stacked()
     beta = -gbt.base_score
 
@@ -32,27 +46,31 @@ def main() -> None:
     F_test = np.asarray(ops.gbt_scores(st["feats"], st["thrs"], st["leaves"],
                                        jnp.asarray(ds.x_test)))
     full_acc = ((F_test.sum(1) >= beta) == (ds.y_test > 0.5)).mean()
-    print(f"full ensemble: 200 trees, test acc {full_acc:.4f}")
+    print(f"full ensemble: {T} trees, test acc {full_acc:.4f}")
 
     # QWYC*: joint ordering + thresholds, <=0.5% train disagreement
-    qwyc = fit_qwyc(F_train, beta=beta, alpha=0.005)
-    ev = evaluate_cascade(qwyc, F_test)
-    acc = (ev["decisions"] == (ds.y_test > 0.5)).mean()
+    fitted = api.fit(F_train, beta=beta, alpha=0.005)
+
+    # one front door to every execution backend; "auto" negotiates from
+    # the visible devices (sharded -> device -> host)
+    compiled = fitted.compile("auto")
+    print(f"backend: {compiled.backend_name} "
+          f"(negotiated from {len(jax.devices())} XLA device(s))")
+
+    res = compiled.evaluate(scores=F_test)
+    acc = (res.decisions == (ds.y_test > 0.5)).mean()
+    ev = evaluate_cascade(fitted.model, F_test)
+    diff = float((res.decisions != (F_test.sum(1) >= beta)).mean())
     print(
-        f"QWYC*: mean {ev['mean_models']:.1f}/200 trees "
-        f"({200/ev['mean_models']:.1f}x fewer), diff vs full {ev['diff_rate']:.4f}, "
+        f"QWYC*: mean {res.mean_models:.1f}/{T} trees "
+        f"({T/res.mean_models:.1f}x fewer), diff vs full {diff:.4f}, "
         f"test acc {acc:.4f}"
     )
 
-    # the TPU cascade kernel produces identical decisions
-    dec, exit_step = ops.cascade_decide(
-        jnp.asarray(F_test[:, qwyc.order].astype(np.float32)),
-        jnp.asarray(qwyc.eps_pos.astype(np.float32)),
-        jnp.asarray(qwyc.eps_neg.astype(np.float32)),
-        qwyc.beta,
-    )
-    assert (np.asarray(dec).astype(bool) == ev["decisions"]).all()
-    print("Pallas cascade kernel: decisions identical to reference ✓")
+    # every backend is bit-identical to the host reference cascade
+    assert (res.decisions == ev["decisions"]).all()
+    assert (res.exit_step == ev["exit_step"]).all()
+    print(f"{compiled.backend_name} backend: decisions identical to reference ✓")
 
 
 if __name__ == "__main__":

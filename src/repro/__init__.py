@@ -1,0 +1,20 @@
+"""QWYC reproduction (arXiv:1806.11202) on JAX/Pallas.
+
+``from repro import api`` is the documented front door — fit a cascade,
+compile it onto an execution backend, evaluate or serve.  Subsystem
+packages (``repro.core``, ``repro.kernels``, ``repro.serving``, ...)
+stay importable directly for code that wants the underlying pieces.
+
+The ``api`` attribute is resolved lazily so ``import repro.core`` (and
+every other subsystem import) stays free of jax-touching side effects.
+"""
+
+__all__ = ["api"]
+
+
+def __getattr__(name):
+    if name == "api":
+        import importlib
+
+        return importlib.import_module("repro.api")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

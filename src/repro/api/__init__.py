@@ -1,0 +1,81 @@
+"""``repro.api`` — the one front door to QWYC cascades.
+
+The paper's contract is a single pipeline: jointly optimize an
+evaluation order and early-stopping thresholds over a trained ensemble,
+then serve the resulting cascade so early-exited examples genuinely skip
+the remaining base models.  This package is that pipeline as three
+calls, with every execution substrate behind one pluggable ``Backend``
+protocol:
+
+    from repro import api
+
+    # 1. fit: Algorithm 1 on a calibration score matrix (N, T) —
+    #    or pass the ensemble's batched score_fn plus features X.
+    fitted = api.fit(F_train, beta=0.0, alpha=0.005)
+
+    # 2. compile: bind to an execution backend. "auto" negotiates
+    #    sharded -> device -> host from the available XLA devices;
+    #    name one explicitly to pin it.
+    compiled = fitted.compile("auto")            # or "host"|"device"|"sharded"
+
+    # 3a. evaluate one batch (bit-identical across all backends):
+    result = compiled.evaluate(scores=F_test)
+    result.decisions, result.exit_step, result.scores_computed
+
+    # 3b. or serve a request stream through the batched engine:
+    server = compiled.serve(score_fn=score_fn, batch_size=256)
+    for row in X_test:
+        server.submit(row)
+    outputs = server.drain()
+
+Backends live in a registry (``api.registry``, mirroring
+``configs/registry.py``); ``api.backend_names()`` lists them and
+``api.register_backend`` is how future substrates (async batching,
+multi-host, new accelerators) plug in without touching any caller.
+The legacy boolean-flag spellings (``QWYCServer(device=True)``,
+``ops.score_and_decide(device=True)``, ``serve.py --device/--shards``)
+still work as thin deprecation shims that forward here.
+
+Architecture: DESIGN.md §7.  ``from repro import api`` is the documented
+import path; everything in ``__all__`` below is the stable surface.
+"""
+
+from repro.api.backends import (
+    Backend,
+    BackendCapabilities,
+    DeviceBackend,
+    HostBackend,
+    ShardedBackend,
+)
+from repro.api.pipeline import CompiledCascade, FitConfig, FittedCascade, fit
+from repro.api.registry import (
+    AUTO,
+    NEGOTIATION_ORDER,
+    backend_names,
+    get_backend,
+    negotiate,
+    register_backend,
+    resolve_backend,
+)
+
+__all__ = [
+    # pipeline
+    "fit",
+    "FitConfig",
+    "FittedCascade",
+    "CompiledCascade",
+    # backend protocol
+    "Backend",
+    "BackendCapabilities",
+    "HostBackend",
+    "DeviceBackend",
+    "ShardedBackend",
+    # registry
+    "AUTO",
+    "NEGOTIATION_ORDER",
+    "register_backend",
+    "get_backend",
+    "backend_names",
+    "negotiate",
+    "resolve_backend",
+]

@@ -1,0 +1,261 @@
+"""Pluggable execution backends behind the ``repro.api`` front door.
+
+Before this module existed, choosing an executor meant boolean-flag
+dispatch at every call site: ``QWYCServer(device=True, mesh=...,
+rebalance=...)``, ``ops.score_and_decide(device=True)``,
+``launch/serve.py --device --shards N``.  Each new execution substrate
+(async batching, multi-host, new accelerators) would have added another
+flag to every caller.  This module inverts that: each substrate is a
+``Backend`` object that
+
+* declares its **capabilities** (``BackendCapabilities``: does control
+  flow run on device, how many XLA devices it needs, whether compiled
+  traces are cached across calls, whether it can repack survivors across
+  data shards),
+* answers **availability** (``available()`` — the one place
+  "do we have enough devices?" is decided, which benchmarks and CI use
+  for skip messages), and
+* **constructs** the underlying executor (``make_executor`` — the only
+  sanctioned path to ``ChunkedExecutor`` / ``DeviceExecutor`` /
+  ``ShardedDeviceExecutor`` from public entrypoints).
+
+Backends are looked up by name through ``repro.api.registry`` (mirroring
+``configs/registry.py``); ``"auto"`` negotiates sharded -> device -> host
+from the available device count.  The executors themselves are unchanged
+— a backend is an adapter, so results stay bit-identical to direct
+executor construction (asserted in ``tests/test_api.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.executor import CascadePlan, ChunkedExecutor
+from repro.kernels.device_executor import (
+    DEFAULT_BLOCK_N,
+    DeviceExecutor,
+    DevicePlan,
+    StageScorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.launch.mesh import make_serving_mesh
+
+__all__ = [
+    "Backend",
+    "BackendCapabilities",
+    "HostBackend",
+    "DeviceBackend",
+    "ShardedBackend",
+    "INTERPRET_ONLY",
+]
+
+# Escape hatch for environments where the fused device program must not
+# run (e.g. debugging with the host stage loop + interpreted kernels
+# only).  ``"auto"`` then negotiates down to the host backend.  Set the
+# module flag directly, or export QWYC_INTERPRET_ONLY=1 before import.
+INTERPRET_ONLY = os.environ.get("QWYC_INTERPRET_ONLY", "").lower() not in (
+    "", "0", "false",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend can do — the negotiation and validation surface.
+
+    ``on_device``: the whole stage loop runs as one jit'd device program
+    (scoring, decide, compaction, early exit — DESIGN.md §5); False means
+    the host stage loop with per-stage producer calls (DESIGN.md §4).
+    ``min_devices``: XLA devices required before ``available()`` says yes.
+    ``trace_cached``: one compiled trace is reused across same-shape runs
+    (the one-trace-per-shape guarantee the trace tests assert).
+    ``data_parallel``: accepts ``mesh``/``shards`` options and splits the
+    batch over a ``("data",)`` mesh axis.
+    ``supports_rebalance``: can repack skewed survivor buffers between
+    stages (only meaningful when ``data_parallel``).
+    """
+
+    on_device: bool
+    min_devices: int
+    trace_cached: bool
+    data_parallel: bool = False
+    supports_rebalance: bool = False
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Structural protocol every execution backend satisfies.
+
+    Implementations adapt one executor class; they hold no per-model
+    state, so a single registered instance serves every caller.
+    """
+
+    name: str
+    capabilities: BackendCapabilities
+
+    def available(
+        self,
+        n_devices: int | None = None,
+        interpret_only: bool | None = None,
+    ) -> tuple[bool, str]:
+        """(usable, reason).  ``n_devices`` / ``interpret_only`` override
+        the live environment — negotiation tests pass them explicitly."""
+        ...
+
+    def make_executor(self, plan: CascadePlan | DevicePlan, **opts) -> Any:
+        """Construct this backend's executor for ``plan``.
+
+        Host takes ``producer``/``decide_fn``/``bill_block``; on-device
+        backends take ``scorer``/``block_n``/``interpret`` (plus
+        ``mesh``/``shards``/``rebalance`` when ``data_parallel``)."""
+        ...
+
+    def billing_key(self, **opts) -> str:
+        """Stable perf-gate counter-key fragment for this backend under
+        ``opts`` — the single source of ``baseline_billing.json`` names."""
+        ...
+
+
+def _n_devices(n_devices: int | None) -> int:
+    return len(jax.devices()) if n_devices is None else int(n_devices)
+
+
+def _as_cascade_plan(plan: CascadePlan | DevicePlan) -> CascadePlan:
+    return plan.plan if isinstance(plan, DevicePlan) else plan
+
+
+def _as_device_plan(plan: CascadePlan | DevicePlan) -> DevicePlan:
+    return plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
+
+
+class HostBackend:
+    """Host stage loop (``ChunkedExecutor``): the semantics oracle and the
+    escape hatch for arbitrary host-side score producers.  Always
+    available — it is the floor ``"auto"`` negotiation can't fall below."""
+
+    name = "host"
+    capabilities = BackendCapabilities(
+        on_device=False, min_devices=0, trace_cached=False,
+    )
+
+    def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
+        return True, "host stage loop runs anywhere (numpy control flow)"
+
+    def make_executor(
+        self,
+        plan: CascadePlan | DevicePlan,
+        *,
+        producer,
+        decide_fn=None,
+        bill_block: int = 1,
+    ) -> ChunkedExecutor:
+        return ChunkedExecutor(
+            _as_cascade_plan(plan), producer,
+            decide_fn=decide_fn, bill_block=bill_block,
+        )
+
+    def billing_key(self, decide: str | None = None, block_n: int | None = None) -> str:
+        # the host loop with the Pallas chunk-decide kernel has always
+        # been billed under "kernel<block>"; the reference decide is plain
+        # "host" — both names predate this module and must stay stable
+        if decide == "kernel":
+            return f"kernel{block_n or 256}"
+        return self.name
+
+
+class DeviceBackend:
+    """Fused device program (``DeviceExecutor``): the whole cascade as one
+    jit'd ``lax.while_loop`` — zero per-stage host round-trips, exactly
+    one compiled trace per (N, T, chunk_t)."""
+
+    name = "device"
+    capabilities = BackendCapabilities(
+        on_device=True, min_devices=1, trace_cached=True,
+    )
+
+    def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
+        it = INTERPRET_ONLY if interpret_only is None else bool(interpret_only)
+        if it:
+            return False, (
+                "interpret-only mode: the fused device program is disabled "
+                "(QWYC_INTERPRET_ONLY / repro.api.backends.INTERPRET_ONLY)"
+            )
+        nd = _n_devices(n_devices)
+        if nd < self.capabilities.min_devices:
+            return False, f"no XLA devices visible (have {nd})"
+        return True, f"{nd} XLA device(s)"
+
+    def make_executor(
+        self,
+        plan: CascadePlan | DevicePlan,
+        *,
+        scorer: StageScorer,
+        block_n: int = DEFAULT_BLOCK_N,
+        interpret: bool | None = None,
+    ) -> DeviceExecutor:
+        return DeviceExecutor(
+            _as_device_plan(plan), scorer, block_n=block_n, interpret=interpret,
+        )
+
+    def billing_key(self) -> str:
+        return self.name
+
+
+class ShardedBackend:
+    """Data-parallel device program (``ShardedDeviceExecutor``): the fused
+    loop under ``shard_map`` over a ``("data",)`` mesh — per-shard working
+    set ~batch/shards, optional skew-triggered survivor rebalancing."""
+
+    name = "sharded"
+    capabilities = BackendCapabilities(
+        on_device=True, min_devices=2, trace_cached=True,
+        data_parallel=True, supports_rebalance=True,
+    )
+
+    def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
+        it = INTERPRET_ONLY if interpret_only is None else bool(interpret_only)
+        if it:
+            return False, (
+                "interpret-only mode: the fused device program is disabled "
+                "(QWYC_INTERPRET_ONLY / repro.api.backends.INTERPRET_ONLY)"
+            )
+        nd = _n_devices(n_devices)
+        if nd < self.capabilities.min_devices:
+            return False, (
+                f"{nd} device(s) < {self.capabilities.min_devices} — run under "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=4"
+            )
+        return True, f"{nd} XLA devices"
+
+    def resolve_mesh(self, mesh=None, shards: int | None = None):
+        """The mesh this backend will run on: an explicit mesh wins, else a
+        fresh ``("data",)`` mesh over ``shards`` (default: all) devices."""
+        if mesh is not None:
+            return mesh
+        return make_serving_mesh(
+            int(shards) if shards else len(jax.devices())
+        )
+
+    def make_executor(
+        self,
+        plan: CascadePlan | DevicePlan,
+        *,
+        scorer: StageScorer,
+        mesh=None,
+        shards: int | None = None,
+        block_n: int = DEFAULT_BLOCK_N,
+        interpret: bool | None = None,
+        rebalance: bool = False,
+        rebalance_ratio: float = 1.25,
+    ) -> ShardedDeviceExecutor:
+        return ShardedDeviceExecutor(
+            _as_device_plan(plan), scorer, self.resolve_mesh(mesh, shards),
+            block_n=block_n, interpret=interpret,
+            rebalance=rebalance, rebalance_ratio=rebalance_ratio,
+        )
+
+    def billing_key(self, shards: int, rebalance: bool = False) -> str:
+        return f"{self.name}{int(shards)}{'r' if rebalance else ''}"

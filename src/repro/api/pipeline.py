@@ -1,0 +1,427 @@
+"""The QWYC pipeline: ``fit -> compile -> evaluate / serve``.
+
+One front door over what PRs 1-3 spread across ``fit_qwyc`` ->
+``QWYCModel`` -> ``CascadePlan.from_qwyc`` -> three executor classes:
+
+    fitted   = api.fit(scores_or_score_fn, X, beta=..., alpha=...)
+    compiled = fitted.compile("auto")          # or "host"|"device"|"sharded"
+    result   = compiled.evaluate(scores=F_test)
+    server   = compiled.serve(score_fn=score_fn, batch_size=256)
+
+``fit`` wraps Algorithm 1 (joint order + threshold optimization);
+``compile`` resolves an execution backend through the registry
+(``repro.api.registry``) and binds the cascade plan to it; ``evaluate``
+runs one batch and returns the executor's ``ExecutorResult`` (decisions,
+exit steps, per-stage billing); ``serve`` builds a ``QWYCServer`` wired
+through the same backend.  Backends are adapters over the unchanged
+executors, so every path is bit-identical to direct executor
+construction (``tests/test_api.py`` asserts this per backend).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.api.backends import Backend
+from repro.api.registry import resolve_backend
+from repro.core.executor import (
+    DEFAULT_CHUNK_T,
+    CascadePlan,
+    ExecutorResult,
+    matrix_producer,
+)
+from repro.core.qwyc import QWYCModel, fit_qwyc
+from repro.kernels.device_executor import (
+    DEFAULT_BLOCK_N,
+    DevicePlan,
+    matrix_stage_scorer,
+)
+
+__all__ = ["FitConfig", "FittedCascade", "CompiledCascade", "fit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Calibration + planning knobs for ``fit`` (defaults = ``fit_qwyc``'s).
+
+    ``alpha`` is the allowed disagreement rate vs the FULL ensemble (QWYC
+    needs no labels — ``y`` exists in ``fit``'s signature only so scoring
+    pipelines can pass it through for their own reporting).  ``chunk_t``
+    is the default stage width ``compile`` splits the cascade into.
+    """
+
+    beta: float = 0.0
+    alpha: float = 0.0
+    mode: str = "both"
+    costs: Any = None
+    optimize_order: bool = True
+    order: Any = None
+    verbose: bool = False
+    chunk_t: int = DEFAULT_CHUNK_T
+
+
+def _normalize_config(config, overrides: dict) -> FitConfig:
+    if config is None:
+        cfg = FitConfig()
+    elif isinstance(config, FitConfig):
+        cfg = config
+    elif isinstance(config, dict):
+        cfg = FitConfig(**config)
+    else:
+        raise TypeError(f"config must be FitConfig/dict/None, got {type(config)}")
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def fit(
+    ensemble,
+    X: np.ndarray | None = None,
+    y: np.ndarray | None = None,
+    config: FitConfig | dict | None = None,
+    **overrides,
+) -> "FittedCascade":
+    """Jointly optimize evaluation order + early-exit thresholds.
+
+    Args:
+      ensemble: either a precomputed calibration score matrix ``(N, T)``
+        with ``F[i, t] = f_t(x_i)`` (original model order), or a callable
+        ``score_fn(X) -> (N, T)`` — the trained ensemble's batched scorer
+        (e.g. a closure over ``ops.gbt_scores``).  A callable is kept on
+        the result so ``compile(...).evaluate(x=...)`` and ``serve()``
+        can score with it.
+      X: calibration features; required iff ``ensemble`` is callable.
+      y: unused by QWYC (calibration is label-free — the objective is
+        agreement with the full ensemble); accepted for pipeline symmetry.
+      config / **overrides: a ``FitConfig`` (or dict), with keyword
+        overrides applied on top — ``fit(F, beta=0.5, alpha=0.01)``.
+
+    Returns a ``FittedCascade``; ``compile`` it onto a backend next.
+    """
+    cfg = _normalize_config(config, overrides)
+    score_fn = None
+    if callable(ensemble):
+        if X is None:
+            raise ValueError(
+                "fit(score_fn, ...) needs calibration features X to score"
+            )
+        score_fn = ensemble
+        F = np.asarray(ensemble(X))
+    else:
+        F = np.asarray(ensemble)
+    if F.ndim != 2:
+        raise ValueError(f"calibration scores must be (N, T), got {F.shape}")
+    model = fit_qwyc(
+        F,
+        costs=cfg.costs,
+        beta=cfg.beta,
+        alpha=cfg.alpha,
+        mode=cfg.mode,
+        optimize_order=cfg.optimize_order,
+        order=cfg.order,
+        verbose=cfg.verbose,
+    )
+    return FittedCascade(
+        model=model, config=cfg, score_fn=score_fn, calibration_scores=F
+    )
+
+
+@dataclasses.dataclass
+class FittedCascade:
+    """A fitted QWYC cascade (ordering + thresholds), backend-agnostic.
+
+    ``model`` is the plain ``QWYCModel`` — existing code that wants the
+    raw arrays (``order``, ``eps_pos``, ``eps_neg``) reads it directly.
+    ``calibration_scores`` is the (N, T) matrix ``fit`` calibrated on
+    (original model order), kept so downstream baselines/reports don't
+    re-score the calibration split through the full ensemble.
+    """
+
+    model: QWYCModel
+    config: FitConfig = dataclasses.field(default_factory=FitConfig)
+    score_fn: Callable | None = None
+    calibration_scores: np.ndarray | None = dataclasses.field(
+        default=None, repr=False
+    )
+
+    @property
+    def T(self) -> int:
+        return self.model.T
+
+    def plan(self, chunk_t: int | None = None) -> CascadePlan:
+        return CascadePlan.from_qwyc(
+            self.model, chunk_t=self.config.chunk_t if chunk_t is None else chunk_t
+        )
+
+    def compile(
+        self,
+        backend: str | Backend = "auto",
+        *,
+        chunk_t: int | None = None,
+        block_n: int | None = None,
+        interpret: bool | None = None,
+        decide: str | None = None,
+        bill_block: int | None = None,
+        scorer_factory: Callable | None = None,
+        mesh=None,
+        shards: int | None = None,
+        rebalance: bool = False,
+        n_devices: int | None = None,
+    ) -> "CompiledCascade":
+        """Bind the cascade to an execution backend.
+
+        ``backend``: a registered name, ``"auto"`` (negotiates sharded ->
+        device -> host from available devices; ``n_devices`` overrides the
+        count for tests), or a ``Backend`` instance.
+
+        Host-only options: ``decide`` (``"reference"`` numpy oracle, the
+        default, or ``"kernel"`` for the Pallas chunk-decide) and
+        ``bill_block`` (producer row-quantization billing granularity).
+        On-device options: ``scorer_factory(device_plan) -> StageScorer``
+        for fully-lazy scoring (otherwise batches are precomputed score
+        matrices).  Sharded-only: ``mesh`` / ``shards`` / ``rebalance``.
+        """
+        b = resolve_backend(backend, n_devices=n_devices)
+        caps = b.capabilities
+        if caps.on_device:
+            for opt, val in (("decide", decide), ("bill_block", bill_block)):
+                if val is not None:
+                    raise ValueError(
+                        f"{opt!r} is a host-backend option; backend is {b.name!r}"
+                    )
+        else:
+            if scorer_factory is not None:
+                raise ValueError(
+                    "scorer_factory is an on-device option; the host backend "
+                    "takes producer= at evaluate() time instead"
+                )
+        if not caps.data_parallel and (
+            mesh is not None or shards is not None or rebalance
+        ):
+            raise ValueError(
+                f"mesh/shards/rebalance require a data-parallel backend "
+                f"(backend is {b.name!r})"
+            )
+        return CompiledCascade(
+            fitted=self,
+            backend=b,
+            plan=self.plan(chunk_t),
+            block_n=block_n,
+            interpret=interpret,
+            decide=decide,
+            bill_block=bill_block,
+            scorer_factory=scorer_factory,
+            mesh=mesh,
+            shards=shards,
+            rebalance=rebalance,
+        )
+
+
+class CompiledCascade:
+    """A ``FittedCascade`` bound to one backend, ready to run batches.
+
+    On-device backends construct their executor here (one compiled trace
+    then serves every same-shape ``evaluate``); the host backend binds a
+    fresh ``ChunkedExecutor`` per call (its "compilation" is just the
+    plan).  ``serve`` spins up a ``QWYCServer`` on the same backend — the
+    server sizes its own executor to the flush capacity.
+    """
+
+    def __init__(
+        self,
+        fitted: FittedCascade,
+        backend: Backend,
+        plan: CascadePlan,
+        *,
+        block_n: int | None = None,
+        interpret: bool | None = None,
+        decide: str | None = None,
+        bill_block: int | None = None,
+        scorer_factory: Callable | None = None,
+        mesh=None,
+        shards: int | None = None,
+        rebalance: bool = False,
+    ):
+        self.fitted = fitted
+        self.backend = backend
+        self.plan = plan
+        self.block_n = block_n
+        self.interpret = interpret
+        self.decide = decide or "reference"
+        if self.decide not in ("reference", "kernel"):
+            raise ValueError(
+                f"decide must be 'reference' or 'kernel', got {decide!r}"
+            )
+        self.bill_block = bill_block
+        self.scorer_factory = scorer_factory
+        self.mesh = mesh
+        self.shards = shards
+        self.rebalance = bool(rebalance)
+        self._executor = None
+        if backend.capabilities.on_device:
+            dplan = DevicePlan.from_plan(plan)
+            self.scorer = (
+                scorer_factory(dplan)
+                if scorer_factory is not None
+                else matrix_stage_scorer(dplan)
+            )
+            opts: dict = dict(
+                scorer=self.scorer,
+                block_n=DEFAULT_BLOCK_N if block_n is None else block_n,
+                interpret=interpret,
+            )
+            if backend.capabilities.data_parallel:
+                opts.update(mesh=mesh, shards=shards, rebalance=self.rebalance)
+            self._executor = backend.make_executor(dplan, **opts)
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    @property
+    def traces(self) -> int | None:
+        """Compiled-trace count (on-device backends; None on host)."""
+        return getattr(self._executor, "traces", None)
+
+    def _ordered_scores(self, scores, x) -> np.ndarray:
+        if scores is None:
+            if x is None:
+                raise ValueError("evaluate() needs scores=, x=, or producer=")
+            if self.fitted.score_fn is None and self.scorer_factory is None:
+                raise ValueError(
+                    "evaluate(x=...) needs a score_fn captured by fit() "
+                    "(or compile with scorer_factory= on a device backend)"
+                )
+            scores = self.fitted.score_fn(x)
+        F = np.asarray(scores)
+        if F.ndim != 2 or F.shape[1] != self.fitted.T:
+            raise ValueError(
+                f"scores must be (N, {self.fitted.T}) in original model "
+                f"order, got {F.shape}"
+            )
+        return F[:, self.fitted.model.order]
+
+    def evaluate(
+        self,
+        scores: np.ndarray | None = None,
+        *,
+        x=None,
+        producer=None,
+        n: int | None = None,
+        row_order=None,
+        capacity: int | None = None,
+    ) -> ExecutorResult:
+        """Run the cascade on one batch.
+
+        Scoring input, by backend:
+          * ``scores``: precomputed ``(N, T)`` matrix in ORIGINAL model
+            order (works on every backend; permuted to cascade order
+            internally).
+          * ``x``: raw features — scored through the ``fit``-captured
+            ``score_fn`` (any backend), or fed straight to the compiled
+            ``scorer_factory`` scorer (on-device backends, fully lazy).
+          * ``producer(rows, t0, t1)``: host-backend lazy producer in
+            cascade order (requires ``n``).
+
+        ``row_order`` / ``capacity`` follow the executor contracts
+        (initial active-set ordering; pinned buffer size for trace reuse).
+        """
+        caps = self.backend.capabilities
+        if not caps.on_device:
+            if producer is not None:
+                if n is None:
+                    raise ValueError("producer= requires n= (batch row count)")
+                p = producer
+            else:
+                ordered = self._ordered_scores(scores, x)
+                n = ordered.shape[0]
+                p = matrix_producer(ordered)
+            decide_fn = None
+            bill = 1 if self.bill_block is None else self.bill_block
+            if self.decide == "kernel":
+                from repro.kernels import ops
+
+                bn = 256 if self.block_n is None else self.block_n
+                decide_fn = ops.kernel_decide_fn(
+                    block_n=bn, interpret=self.interpret
+                )
+                if self.bill_block is None:
+                    bill = bn
+            ex = self.backend.make_executor(
+                self.plan, producer=p, decide_fn=decide_fn, bill_block=bill
+            )
+            return ex.run(n, row_order=row_order)
+
+        if producer is not None:
+            raise ValueError(
+                "producer= is a host-backend option; compile with "
+                "scorer_factory= for lazy on-device scoring"
+            )
+        if self.scorer_factory is not None:
+            if x is None:
+                raise ValueError(
+                    "compiled with scorer_factory=: pass the scorer's batch "
+                    "operand via x= (it consumes features, not score matrices)"
+                )
+            operand = x
+            if n is None:
+                n = int(np.shape(x)[0])
+        else:
+            operand = self._ordered_scores(scores, x)
+            n = operand.shape[0]
+        return self._executor.run(
+            operand, n, row_order=row_order, capacity=capacity
+        )
+
+    def serve(
+        self,
+        *,
+        score_fn: Callable | None = None,
+        chunk_score_fn: Callable | None = None,
+        batch_size: int = 256,
+        policy: str = "sorted-kernel",
+        audit_full_scores: bool = True,
+        score_block_n: int = 1,
+        **server_kw,
+    ):
+        """Build a batched ``QWYCServer`` on this backend.
+
+        ``policy`` is the server's sorting/decide policy (what its own
+        ``backend=`` kwarg has always named: ``cascade-scan`` | ``kernel``
+        | ``sorted-kernel``) — orthogonal to the execution backend.
+        ``score_fn`` defaults to the one captured by ``fit``; a compiled
+        ``scorer_factory`` becomes the server's device scorer.  The
+        server builds its own executor sized to the flush capacity, so
+        compiled-evaluate traces and serving traces are independent.
+        """
+        from repro.serving.engine import QWYCServer
+
+        opts: dict = {}
+        if self.backend.capabilities.data_parallel:
+            if self.mesh is not None:
+                opts["mesh"] = self.mesh
+            if self.shards is not None:
+                opts["shards"] = self.shards
+            if self.rebalance:
+                opts["rebalance"] = True
+        if self.block_n is not None:
+            server_kw.setdefault("block_n", self.block_n)
+        return QWYCServer(
+            self.fitted.model,
+            score_fn=self.fitted.score_fn if score_fn is None else score_fn,
+            chunk_score_fn=chunk_score_fn,
+            batch_size=batch_size,
+            backend=policy,
+            chunk_t=self.plan.chunk_t,
+            audit_full_scores=audit_full_scores,
+            score_block_n=score_block_n,
+            device_scorer_factory=(
+                self.scorer_factory
+                if self.backend.capabilities.on_device
+                else None
+            ),
+            exec_backend=self.backend,
+            backend_opts=opts,
+            **server_kw,
+        )

@@ -1,0 +1,106 @@
+"""Backend registry: name -> ``Backend`` resolution, mirroring
+``configs/registry.py``.
+
+Every public entrypoint (``repro.api`` pipeline, ``QWYCServer``,
+``ops.score_and_decide``, ``launch/serve.py``, benchmarks) reaches the
+three executors through this table — never by constructing executor
+classes directly — so adding a backend is one ``register_backend`` call,
+and "which backends exist / which are usable here" has a single answer.
+
+``resolve_backend("auto")`` negotiates down ``NEGOTIATION_ORDER``
+(sharded -> device -> host), taking the first backend whose
+``available()`` says yes: sharded at >= 2 XLA devices, the fused device
+program at >= 1, the host stage loop when the device program is disabled
+(interpret-only mode).
+"""
+
+from __future__ import annotations
+
+from repro.api.backends import (
+    Backend,
+    DeviceBackend,
+    HostBackend,
+    ShardedBackend,
+)
+
+__all__ = [
+    "AUTO",
+    "NEGOTIATION_ORDER",
+    "backend_names",
+    "get_backend",
+    "negotiate",
+    "register_backend",
+    "resolve_backend",
+]
+
+AUTO = "auto"
+
+# "auto" preference: most parallel first, host as the universal floor.
+NEGOTIATION_ORDER = ("sharded", "device", "host")
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Add a backend to the registry (how future substrates plug in)."""
+    name = backend.name
+    if name == AUTO:
+        raise ValueError(f"{AUTO!r} is reserved for negotiation")
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(
+            f"backend {name!r} already registered (pass overwrite=True)"
+        )
+    _BACKENDS[name] = backend
+    return backend
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _BACKENDS:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_BACKENDS)} "
+            f"(or {AUTO!r} to negotiate)"
+        )
+    return _BACKENDS[name]
+
+
+def negotiate(
+    n_devices: int | None = None, interpret_only: bool | None = None
+) -> Backend:
+    """First available backend in ``NEGOTIATION_ORDER``.
+
+    ``n_devices`` / ``interpret_only`` override the live environment so
+    negotiation is testable without forging XLA device state.
+    """
+    reasons = []
+    for name in NEGOTIATION_ORDER:
+        b = get_backend(name)
+        ok, why = b.available(n_devices=n_devices, interpret_only=interpret_only)
+        if ok:
+            return b
+        reasons.append(f"{name}: {why}")
+    raise RuntimeError("no backend available: " + "; ".join(reasons))
+
+
+def resolve_backend(
+    spec: str | Backend = AUTO,
+    *,
+    n_devices: int | None = None,
+    interpret_only: bool | None = None,
+) -> Backend:
+    """Resolve a backend spec: an instance passes through, ``"auto"``
+    negotiates, anything else is a registry lookup (KeyError lists the
+    registered names)."""
+    if not isinstance(spec, str):
+        return spec
+    if spec == AUTO:
+        return negotiate(n_devices=n_devices, interpret_only=interpret_only)
+    return get_backend(spec)
+
+
+for _b in (HostBackend(), DeviceBackend(), ShardedBackend()):
+    register_backend(_b)
+del _b

@@ -8,14 +8,16 @@ with a pure-jnp oracle in ``ref.py``.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import CascadePlan, ChunkedExecutor, ExecutorResult
+from repro.core.executor import CascadePlan, ExecutorResult
 from repro.kernels import ref
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
-from repro.kernels.device_executor import DeviceExecutor, StageScorer
+from repro.kernels.device_executor import StageScorer
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
@@ -83,8 +85,8 @@ def kernel_decide_fn(block_n: int = 256, interpret: bool | None = None):
     return decide
 
 
-# device-dispatch executor cache: one compiled DeviceExecutor per
-# (scorer, plan, block_n, interpret) — strong refs on purpose, so repeat
+# on-device executor cache: one compiled executor per
+# (backend, scorer, plan, block_n, interpret, opts) — strong refs on purpose, so repeat
 # calls with the same plan/scorer objects reuse the single compiled
 # trace.  Bounded (FIFO) so a long-lived process building fresh
 # plans/scorers per request cannot leak executors + param slabs without
@@ -101,53 +103,92 @@ def score_and_decide(
     row_order=None,
     interpret: bool | None = None,
     bill_block: int | None = None,
-    device: bool = False,
+    device: bool | None = None,
     x=None,
+    backend=None,
+    backend_opts: dict | None = None,
 ) -> ExecutorResult:
     """Fused lazy path: chunked scoring composed with the threshold kernel.
 
-    Host mode (default): instead of consuming a precomputed (N, T) matrix,
-    each stage scores only the surviving rows for only that stage's models
+    ``backend`` names an execution backend from the registry
+    (``repro.api``, DESIGN.md §7) — ``"host"`` (the default) or an
+    on-device backend (``"device"``/``"sharded"``/``"auto"``); a
+    ``Backend`` instance is accepted directly and executors are only ever
+    constructed through it.
+
+    Host mode: instead of consuming a precomputed (N, T) matrix, each
+    stage scores only the surviving rows for only that stage's models
     (``producer`` — typically a closure over ``gbt_scores``/
     ``lattice_scores`` with ``t0``/``t1``/``rows``) and immediately runs
     the Pallas chunk-decide kernel; survivors are compacted on host
     before the next stage.
 
-    Device mode (``device=True``): ``producer`` must be a
-    ``device_executor.StageScorer`` and ``x`` the batch operand its
-    ``prepare`` consumes; the entire stage loop — scoring, decide,
-    compaction, early exit — runs as one jit'd ``lax.while_loop`` with no
-    per-stage host round-trips (DESIGN.md §5).  Pass the SAME plan and
-    scorer objects across calls to reuse the compiled program.
+    On-device mode: ``producer`` must be a ``device_executor.StageScorer``
+    and ``x`` the batch operand its ``prepare`` consumes; the entire
+    stage loop — scoring, decide, compaction, early exit — runs as one
+    jit'd ``lax.while_loop`` with no per-stage host round-trips
+    (DESIGN.md §5).  Pass the SAME plan and scorer objects across calls
+    to reuse the compiled program.  ``backend_opts`` forwards extra
+    construction options (e.g. ``mesh=`` for ``"sharded"``).
 
     ``bill_block`` defaults to ``block_n``: a kernel producer using the
     same block size really computes ceil(m / block_n) * block_n rows per
     stage, and scores_computed bills that, not the rows requested.
+
+    DEPRECATED: ``device=True/False`` forwards to
+    ``backend="device"``/``"host"`` with a ``DeprecationWarning``.
     """
-    if device:
+    from repro.api.registry import resolve_backend
+
+    if device is not None:
+        warnings.warn(
+            "score_and_decide(device=...) is deprecated; pass "
+            "backend='device' (or 'host'/'sharded'/'auto' — see repro.api) "
+            "instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if backend is None:
+            backend = "device" if device else "host"
+    b = resolve_backend("host" if backend is None else backend)
+    opts = dict(backend_opts or {})
+    if b.capabilities.on_device:
         if not isinstance(producer, StageScorer):
             raise TypeError(
-                "device=True requires a device_executor.StageScorer producer"
+                f"backend {b.name!r} requires a device_executor.StageScorer "
+                "producer"
             )
         if x is None:
-            raise ValueError("device=True requires the batch operand x")
-        key = (id(producer), id(plan), block_n, interpret)
+            raise ValueError(f"backend {b.name!r} requires the batch operand x")
+        # opts values are keyed by identity, and the cache entry keeps
+        # strong refs to them (alongside producer/plan) so the ids stay
+        # valid — like plan/scorer, pass the SAME backend_opts values
+        # (e.g. one long-lived mesh) across calls to reuse the program
+        key = (
+            b.name, id(producer), id(plan), block_n, interpret,
+            tuple(sorted((k, id(v)) for k, v in opts.items())),
+        )
         entry = _DEVICE_EXECUTORS.get(key)
         if entry is None:
             while len(_DEVICE_EXECUTORS) >= _DEVICE_EXECUTORS_MAX:
                 _DEVICE_EXECUTORS.pop(next(iter(_DEVICE_EXECUTORS)))
             entry = (
-                DeviceExecutor(plan, producer, block_n=block_n, interpret=interpret),
+                b.make_executor(
+                    plan, scorer=producer, block_n=block_n,
+                    interpret=interpret, **opts,
+                ),
                 producer,
                 plan,
+                tuple(opts.values()),
             )
             _DEVICE_EXECUTORS[key] = entry
         return entry[0].run(x, n, row_order=row_order)
-    ex = ChunkedExecutor(
+    ex = b.make_executor(
         plan,
-        producer,
+        producer=producer,
         decide_fn=kernel_decide_fn(block_n=block_n, interpret=interpret),
         bill_block=block_n if bill_block is None else bill_block,
+        **opts,
     )
     return ex.run(n, row_order=row_order)
 

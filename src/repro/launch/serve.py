@@ -5,21 +5,32 @@ train split, then serves the test split through the batched engine and
 reports speedup / faithfulness — the paper's production scenario.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset adult --ensemble gbt \
-        --T 200 --alpha 0.005 --backend sorted-kernel
+        --T 200 --alpha 0.005 --backend auto --policy sorted-kernel
+
+``--backend`` names the EXECUTION backend from the registry
+(``repro.api``): ``auto`` (default — negotiates sharded -> device -> host
+from the available devices), ``host``, ``device``, or ``sharded``.
+``--policy`` is the server's sorting/decide policy (what ``--backend``
+used to mean).  The old ``--device`` / ``--shards N`` flags still work as
+deprecation shims that forward to ``--backend device`` /
+``--backend sharded --backend-shards N``.
 """
 
 from __future__ import annotations
 
 import argparse
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import backend_names, resolve_backend
 from repro.core import fit_qwyc
 from repro.data.synthetic import make_dataset
 from repro.ensembles.gbt import train_gbt
 from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble
 from repro.kernels import device_executor, ops
+from repro.serving.engine import BACKENDS as POLICIES
 from repro.serving.engine import QWYCServer
 
 # row-block size for the lazy chunked score kernels: survivors are padded
@@ -28,7 +39,7 @@ from repro.serving.engine import QWYCServer
 SCORE_BLOCK_N = 64
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="adult", choices=["adult", "nomao", "rw1", "rw2"])
     ap.add_argument("--ensemble", default="gbt", choices=["gbt", "lattice"])
@@ -36,8 +47,18 @@ def main() -> None:
     ap.add_argument("--depth", type=int, default=5)
     ap.add_argument("--alpha", type=float, default=0.005)
     ap.add_argument("--mode", default="both", choices=["both", "neg_only"])
-    ap.add_argument("--backend", default="sorted-kernel",
-                    choices=["cascade-scan", "kernel", "sorted-kernel"])
+    ap.add_argument(
+        "--backend", default="auto",
+        choices=("auto",) + backend_names() + POLICIES,
+        help="execution backend from the repro.api registry (auto "
+        "negotiates sharded -> device -> host from available devices); "
+        "a policy name here is DEPRECATED — use --policy",
+    )
+    ap.add_argument(
+        "--policy", default="sorted-kernel", choices=POLICIES,
+        help="server sorting/decide policy (the pre-backend-registry "
+        "meaning of --backend)",
+    )
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--chunk-t", type=int, default=8)
@@ -48,20 +69,21 @@ def main() -> None:
     )
     ap.add_argument(
         "--device", action="store_true",
-        help="run the whole stage loop as ONE jit'd device program "
-        "(DeviceExecutor, DESIGN.md §5) instead of the host stage loop — "
-        "zero per-stage host round-trips",
+        help="DEPRECATED: use --backend device",
     )
     ap.add_argument(
-        "--shards", type=int, default=1,
-        help="data-parallel serving over N devices (DESIGN.md §6): the "
-        "stage loop runs under shard_map on a ('data',) mesh and each "
-        "flush serves shards*batch_size requests (implies --device; on "
-        "CPU run under XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+        "--shards", type=int, default=None,
+        help="DEPRECATED: use --backend sharded --backend-shards N",
+    )
+    ap.add_argument(
+        "--backend-shards", type=int, default=None,
+        help="data-parallel width for --backend sharded/auto (default: all "
+        "devices; on CPU run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
     ap.add_argument(
         "--rebalance", action="store_true",
-        help="with --shards > 1: all-gather repack of survivor buffers "
+        help="sharded backend: all-gather repack of survivor buffers "
         "between stages when shard occupancy skews (DESIGN.md §6)",
     )
     ap.add_argument(
@@ -70,11 +92,68 @@ def main() -> None:
         "full ensemble (extra work that can exceed the lazy savings; off "
         "by default so the CLI reflects production serving cost)",
     )
+    return ap
+
+
+def resolve_backend_args(args) -> tuple[str, dict, str]:
+    """(exec_backend_name, backend_opts, policy) from parsed CLI args.
+
+    The deprecated spellings (``--device``, ``--shards N``, a policy name
+    under ``--backend``) emit ``DeprecationWarning`` and forward to the
+    backend-registry equivalents — tests assert both the warning and the
+    identical resolution.
+    """
+    backend, policy = args.backend, args.policy
+    if backend in POLICIES:
+        warnings.warn(
+            f"--backend {backend} now names an execution backend; policy "
+            f"names here are deprecated — use --policy {backend}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        policy, backend = backend, "auto"
+    opts: dict = {}
+    if args.backend_shards is not None:
+        opts["shards"] = int(args.backend_shards)
+        if backend == "auto":
+            # an explicit shard count IS a request for the sharded
+            # backend — don't let auto negotiate down to device/host and
+            # then reject the shards option
+            backend = "sharded"
+    if args.device:
+        warnings.warn(
+            "--device is deprecated; use --backend device",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if backend == "auto":
+            backend = "device"
+    if args.shards is not None:
+        warnings.warn(
+            "--shards is deprecated; use --backend sharded "
+            "--backend-shards N",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if args.shards > 1:
+            if backend in ("auto", "device"):
+                backend = "sharded"
+            opts.setdefault("shards", int(args.shards))
+    if args.rebalance:
+        opts["rebalance"] = True
+    return backend, opts, policy
+
+
+def main() -> None:
+    ap = build_parser()
     args = ap.parse_args()
-    if args.rebalance and args.shards <= 1:
-        ap.error("--rebalance requires --shards > 1 (nothing to repack)")
-    if args.shards > 1:
-        args.device = True  # the sharded path IS the device path
+    backend_name, backend_opts, policy = resolve_backend_args(args)
+    backend = resolve_backend(backend_name)
+    if backend_opts.get("rebalance") and not backend.capabilities.supports_rebalance:
+        ap.error(
+            f"--rebalance requires the sharded backend (resolved {backend.name!r})"
+        )
+    on_device = backend.capabilities.on_device
 
     ds = make_dataset(args.dataset, scale=args.scale)
     print(f"[serve] dataset={args.dataset} train={len(ds.y_train)} test={len(ds.y_test)}")
@@ -159,24 +238,20 @@ def main() -> None:
         if args.eager
         else {"chunk_score_fn": make_chunk_score_fn(qwyc.order)}
     )
-    if args.device and not args.eager:
+    if on_device and not args.eager:
         # fully lazy device path; chunk_score_fn stays as the audit reader
         producer_kw["device_scorer_factory"] = make_device_scorer_factory(
             qwyc.order
         )
-    mesh = None
-    if args.shards > 1:
-        from repro.launch.mesh import make_serving_mesh
-
-        mesh = make_serving_mesh(args.shards)
-        print(f"[serve] sharded serving mesh: {mesh}")
     server = QWYCServer(
-        qwyc, batch_size=args.batch_size, backend=args.backend,
+        qwyc, batch_size=args.batch_size, backend=policy,
         chunk_t=args.chunk_t, audit_full_scores=args.audit or args.eager,
         score_block_n=1 if args.eager else SCORE_BLOCK_N,
-        device=args.device, mesh=mesh, rebalance=args.rebalance,
+        exec_backend=backend, backend_opts=backend_opts,
         **producer_kw,
     )
+    if server.mesh is not None:
+        print(f"[serve] sharded serving mesh: {server.mesh}")
     for i in range(len(ds.y_test)):
         server.submit(ds.x_test[i])
     results = server.drain()
@@ -187,9 +262,9 @@ def main() -> None:
     )
     print(
         f"[serve] {st.n_requests} requests in {st.n_batches} batches "
-        f"({args.backend}, {'eager' if args.eager else 'lazy'}"
-        f"{', device' if args.device else ''}"
-        f"{f', {args.shards} shards' if args.shards > 1 else ''})\n"
+        f"({server.exec.name} backend, {policy} policy, "
+        f"{'eager' if args.eager else 'lazy'}"
+        f"{f', {server.n_shards} shards' if server.n_shards > 1 else ''})\n"
         f"        mean models {st.mean_models:.2f}/{args.T}  "
         f"modeled speedup {st.speedup:.2f}x\n"
         f"        scores computed {st.scores_computed}/{st.scores_possible} "

@@ -31,15 +31,21 @@ Score producers:
     fallback: the matrix is materialized once per batch and the executor
     reads from it (no base-model work is skipped; ``ServeStats``
     scores_computed records the difference).
-  * ``device=True`` + ``device_scorer_factory`` — the serving fast path
-    (DESIGN.md §5): the whole stage loop (scoring, decide, compaction,
-    early exit) runs as ONE jit'd device program via
-    ``kernels.device_executor.DeviceExecutor``; the host stage loop above
-    stays as the oracle and the host-producer escape hatch.
-  * ``mesh=`` (DESIGN.md §6) — the device program additionally runs under
-    ``shard_map`` with the microbatch split over the mesh's ``"data"``
-    axis (``ShardedDeviceExecutor``): each flush serves
-    ``shards x batch_size`` requests at per-device cost ~batch_size.
+  * ``exec_backend="device"`` + ``device_scorer_factory`` — the serving
+    fast path (DESIGN.md §5): the whole stage loop (scoring, decide,
+    compaction, early exit) runs as ONE jit'd device program; the host
+    stage loop above stays as the oracle and the host-producer escape
+    hatch.
+  * ``exec_backend="sharded"`` (DESIGN.md §6) — the device program
+    additionally runs under ``shard_map`` with the microbatch split over
+    a ``("data",)`` mesh axis: each flush serves ``shards x batch_size``
+    requests at per-device cost ~batch_size.
+
+Execution backends are resolved by name through the backend registry
+(``repro.api``, DESIGN.md §7) — the server never constructs an executor
+class directly, so new substrates plug in without touching this module.
+The legacy ``device=True`` boolean is a deprecation shim that forwards
+to ``exec_backend="device"``.
 
 Filter-and-Score mode (neg_only): positively classified requests get the
 full ensemble score attached, matching the paper's production setting —
@@ -51,25 +57,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import (
-    CascadePlan,
-    ChunkedExecutor,
-    matrix_producer,
-)
+from repro.core.executor import CascadePlan, matrix_producer
 from repro.core.qwyc import QWYCModel
 from repro.kernels import ops
-from repro.kernels.device_executor import (
-    DeviceExecutor,
-    DevicePlan,
-    matrix_stage_scorer,
-)
-from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.kernels.device_executor import DevicePlan, matrix_stage_scorer
 
 __all__ = ["ServeStats", "QWYCServer"]
 
@@ -122,15 +120,17 @@ class QWYCServer:
         chunk_score_fn: Callable | None = None,
         audit_full_scores: bool = True,
         score_block_n: int = 1,
-        device: bool = False,
+        device: bool | None = None,
         device_scorer_factory: Callable | None = None,
         mesh=None,
         rebalance: bool = False,
+        exec_backend=None,
+        backend_opts: dict | None = None,
     ):
         """At least one of ``score_fn`` (eager, ORIGINAL model order),
         ``chunk_score_fn`` (lazy, cascade order — see module docstring) or
-        ``device_scorer_factory`` (with ``device=True``) is required; when
-        several are given the laziest serving path wins.
+        ``device_scorer_factory`` (with an on-device ``exec_backend``) is
+        required; when several are given the laziest serving path wins.
         ``audit_full_scores`` controls whether
         early-exited rows' full scores are recomputed for diff-vs-full
         accounting (audit work, tracked separately from serving work;
@@ -142,48 +142,96 @@ class QWYCServer:
         the block_n your producer passes to the score kernels, or leave at
         1 for exact producers.
 
-        ``device=True`` is the serving fast path (DESIGN.md §5): the whole
-        stage loop runs as one jit'd device program (``DeviceExecutor``)
-        instead of the host stage loop — zero per-stage host round-trips.
-        Scoring comes from ``device_scorer_factory(device_plan) ->
-        StageScorer`` (fully lazy, on device) or falls back to ``score_fn``
-        (matrix materialized eagerly per batch; control flow still moves on
-        device).  The host executor remains the oracle and the escape
-        hatch for arbitrary host-side producer injection
-        (``chunk_score_fn``); with ``device=True`` an available
-        ``chunk_score_fn`` is still used for diff auditing.  The
-        ``cascade-scan`` backend's numpy decide is host-only, so under
-        ``device=True`` it executes identically to ``kernel`` (backends
-        keep their sorting policy).
+        ``exec_backend`` selects the execution substrate through the
+        backend registry (``repro.api``, DESIGN.md §7): ``"host"`` (the
+        default — per-stage host loop, the semantics oracle), ``"device"``
+        (the serving fast path, DESIGN.md §5: the whole stage loop as one
+        jit'd device program, zero per-stage host round-trips),
+        ``"sharded"`` (DESIGN.md §6: that program under ``shard_map``, the
+        microbatch split over a ``("data",)`` mesh — ``batch_size`` rows
+        PER SHARD per flush, partial final flushes padded so one compiled
+        trace serves every flush), or ``"auto"`` to negotiate from the
+        available devices.  A ``Backend`` instance is accepted directly.
+        ``backend_opts`` forwards construction options (``mesh=``,
+        ``shards=``, ``rebalance=``, ``rebalance_ratio=``) to the
+        backend's ``make_executor``.
 
-        ``mesh`` (a ``jax.sharding.Mesh`` with a ``"data"`` axis —
-        ``launch.mesh.make_serving_mesh``) scales the device path
-        data-parallel (DESIGN.md §6): the stage loop runs under
-        ``shard_map`` via ``ShardedDeviceExecutor``, the microbatch
-        grows to ``shards x batch_size`` (``batch_size`` rows PER SHARD;
-        partial final flushes are padded up to that, so one compiled
-        trace serves every flush), and the host executor stays the
-        parity oracle.  ``mesh`` implies ``device=True``.  ``rebalance``
-        enables the skew-triggered survivor repack between stages.
+        On-device scoring comes from ``device_scorer_factory(device_plan)
+        -> StageScorer`` (fully lazy, on device) or falls back to
+        ``score_fn`` (matrix materialized eagerly per batch; control flow
+        still moves on device).  The host executor remains the oracle and
+        the escape hatch for arbitrary host-side producer injection
+        (``chunk_score_fn``); on device an available ``chunk_score_fn`` is
+        still used for diff auditing.  The ``cascade-scan`` policy's numpy
+        decide is host-only, so on device it executes identically to
+        ``kernel`` (policies keep their sorting behavior).
+
+        DEPRECATED: ``device=True/False`` (forwards to
+        ``exec_backend="device"``/``"host"`` with a ``DeprecationWarning``).
+        ``mesh=``/``rebalance=`` remain supported spellings of the same
+        ``backend_opts`` entries and imply ``exec_backend="sharded"``.
         """
+        from repro.api.registry import resolve_backend
+
+        opts = dict(backend_opts or {})
+        if device is not None:
+            warnings.warn(
+                "QWYCServer(device=...) is deprecated; pass "
+                "exec_backend='device' (or 'auto'/'host'/'sharded' — see "
+                "repro.api) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         if mesh is not None:
-            device = True
-        if rebalance and mesh is None:
-            raise ValueError("rebalance=True requires a mesh (nothing to repack)")
+            opts.setdefault("mesh", mesh)
+        if rebalance:
+            opts["rebalance"] = True
+        explicit_backend = exec_backend is not None
+        if exec_backend is None:
+            # legacy dispatch forwarded into the backend registry: a mesh
+            # (or shard count) means sharded, device=True means device,
+            # everything else keeps the historical host default
+            if "mesh" in opts or "shards" in opts:
+                exec_backend = "sharded"
+            elif device:
+                exec_backend = "device"
+            else:
+                exec_backend = "host"
+        self.exec = resolve_backend(exec_backend)
+        caps = self.exec.capabilities
+        if explicit_backend and device is not None and bool(device) != caps.on_device:
+            raise ValueError(
+                f"conflicting dispatch: device={device!r} with "
+                f"exec_backend={self.exec.name!r}"
+            )
+        if opts.get("rebalance") and not caps.supports_rebalance:
+            raise ValueError(
+                "rebalance=True requires the sharded backend "
+                f"(exec_backend is {self.exec.name!r}: nothing to repack)"
+            )
+        if not caps.data_parallel and ("mesh" in opts or "shards" in opts):
+            raise ValueError(
+                "mesh/shards require a data-parallel backend "
+                f"(exec_backend is {self.exec.name!r})"
+            )
+        on_device = caps.on_device
         if score_fn is None and chunk_score_fn is None and (
-            not device or device_scorer_factory is None
+            not on_device or device_scorer_factory is None
         ):
             raise ValueError(
-                "need score_fn, chunk_score_fn, or device=True with "
-                "device_scorer_factory"
+                "need score_fn, chunk_score_fn, or an on-device exec_backend "
+                "with device_scorer_factory"
             )
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
-        if device_scorer_factory is not None and not device:
-            raise ValueError("device_scorer_factory requires device=True")
-        if device and device_scorer_factory is None and score_fn is None:
+        if device_scorer_factory is not None and not on_device:
             raise ValueError(
-                "device=True needs device_scorer_factory or score_fn"
+                "device_scorer_factory requires an on-device exec_backend "
+                "('device', 'sharded', or 'auto' resolving to one)"
+            )
+        if on_device and device_scorer_factory is None and score_fn is None:
+            raise ValueError(
+                "on-device serving needs device_scorer_factory or score_fn"
             )
         self.qwyc = qwyc
         self.score_fn = score_fn
@@ -194,11 +242,30 @@ class QWYCServer:
         self.chunk_t = chunk_t
         self.audit_full_scores = audit_full_scores
         self.score_block_n = max(1, int(score_block_n))
-        self.device = device
+        self.device = on_device  # True iff the stage loop runs on device
         self.device_scorer_factory = device_scorer_factory
-        self.mesh = mesh
-        self.rebalance = bool(rebalance)
-        self.n_shards = int(mesh.shape["data"]) if mesh is not None else 1
+        self.mesh = None
+        self.n_shards = 1
+        if caps.data_parallel:
+            # ``resolve_mesh`` is an OPTIONAL backend extension (the
+            # bundled sharded backend has it); a protocol-conforming
+            # third-party backend without it gets mesh/shards passed
+            # through to make_executor untouched — the server only needs
+            # the shard COUNT up front, to size its flush
+            resolver = getattr(self.exec, "resolve_mesh", None)
+            if resolver is not None:
+                self.mesh = resolver(opts.pop("mesh", None), opts.pop("shards", None))
+                opts["mesh"] = self.mesh
+            else:
+                self.mesh = opts.get("mesh")
+            if self.mesh is not None:
+                self.n_shards = int(self.mesh.shape["data"])
+            elif opts.get("shards"):
+                self.n_shards = int(opts["shards"])
+            else:
+                self.n_shards = len(jax.devices())
+        self.rebalance = bool(opts.get("rebalance", False))
+        self._exec_opts = opts
         # data-parallel serving scales the microbatch with the mesh:
         # batch_size rows PER SHARD per flush
         self.flush_size = batch_size * self.n_shards
@@ -255,13 +322,11 @@ class QWYCServer:
             else:
                 scorer = matrix_stage_scorer(dplan)
                 eager_matrix = True
-            if self.mesh is not None:
-                executor = ShardedDeviceExecutor(
-                    dplan, scorer, self.mesh, block_n=self.block_n,
-                    rebalance=self.rebalance,
-                )
-            else:
-                executor = DeviceExecutor(dplan, scorer, block_n=self.block_n)
+            # executor construction goes through the Backend protocol —
+            # the server never names an executor class (DESIGN.md §7)
+            executor = self.exec.make_executor(
+                dplan, scorer=scorer, block_n=self.block_n, **self._exec_opts
+            )
             key_fn = None
             if self.backend == "sorted-kernel" and not eager_matrix:
                 # sort key = first cascade model's scores, computed on
@@ -367,9 +432,9 @@ class QWYCServer:
             if self.backend in ("kernel", "sorted-kernel")
             else None
         )
-        res = ChunkedExecutor(
+        res = self.exec.make_executor(
             plan,
-            producer,
+            producer=producer,
             decide_fn=decide_fn,
             bill_block=self.score_block_n if ordered is None else 1,
         ).run(n, row_order=row_order)

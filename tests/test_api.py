@@ -1,0 +1,387 @@
+"""The ``repro.api`` front door: fit -> compile -> evaluate/serve.
+
+Acceptance guarantees under test:
+
+* ``compile(backend=b).evaluate(...)`` is BIT-IDENTICAL to direct
+  executor construction (the pre-refactor path) for host, device, and
+  sharded (shards 1/2/4), with unchanged trace counts.
+* ``"auto"`` negotiation: sharded at >= 2 devices, device at 1, host
+  under interpret-only; unknown backend names raise with the list of
+  registered names.
+* ``from repro import api`` is the documented import path and
+  ``api.__all__`` is the stable surface.
+
+Multi-shard cases need multiple XLA devices (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``, as the CI
+sharded-parity step does) and SKIP otherwise.  All tests use LOCAL rngs
+so the session-rng stream stays stable for the rest of the suite.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro import api
+from repro.core import CascadePlan, ChunkedExecutor, evaluate_cascade, fit_qwyc, matrix_producer
+from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    StageScorer,
+    matrix_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.engine import QWYCServer
+
+N_DEV = len(jax.devices())
+
+
+def _shards_params(counts=(1, 2, 4)):
+    return [
+        pytest.param(
+            k,
+            marks=pytest.mark.skipif(
+                N_DEV < k,
+                reason=f"needs {k} devices (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={k})",
+            ),
+        )
+        for k in counts
+    ]
+
+
+def _setup(seed=40, n=300, t=20, mode="both", alpha=0.01):
+    rng = np.random.default_rng(seed)
+    F = make_scores(rng, n=n, t=t)
+    fitted = api.fit(F, beta=0.0, alpha=alpha, mode=mode, chunk_t=4)
+    return F, fitted
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_unknown_backend_lists_registered_names():
+    with pytest.raises(KeyError) as ei:
+        api.get_backend("warp-drive")
+    msg = str(ei.value)
+    for name in api.backend_names():
+        assert name in msg
+    # the same error propagates from the public compile entrypoint
+    _, fitted = _setup()
+    with pytest.raises(KeyError):
+        fitted.compile("warp-drive")
+
+
+def test_registry_register_and_overwrite_guard():
+    assert set(api.backend_names()) == {"host", "device", "sharded"}
+    host = api.get_backend("host")
+    with pytest.raises(ValueError):
+        api.register_backend(host)  # duplicate name needs overwrite=True
+    api.register_backend(host, overwrite=True)  # idempotent re-register
+
+
+def test_backend_protocol_conformance():
+    for name in api.backend_names():
+        b = api.get_backend(name)
+        assert isinstance(b, api.Backend)  # runtime-checkable protocol
+        ok, why = b.available()
+        assert isinstance(ok, bool) and isinstance(why, str)
+        assert b.capabilities.min_devices >= 0
+
+
+def test_auto_negotiation_by_device_count():
+    """Satellite acceptance: sharded at >=2 devices, device at 1, host
+    under interpret-only."""
+    assert api.resolve_backend("auto", n_devices=2).name == "sharded"
+    assert api.resolve_backend("auto", n_devices=4).name == "sharded"
+    assert api.resolve_backend("auto", n_devices=1).name == "device"
+    assert api.resolve_backend("auto", interpret_only=True).name == "host"
+    assert (
+        api.resolve_backend("auto", n_devices=8, interpret_only=True).name
+        == "host"
+    )
+    # an instance passes through untouched
+    b = api.get_backend("device")
+    assert api.resolve_backend(b) is b
+
+
+# ---------------------------------------------------------------- fit
+
+
+def test_fit_matrix_and_callable_agree():
+    W = np.random.default_rng(41).normal(size=(16, 5))
+    X = np.random.default_rng(42).normal(size=(200, 5))
+    F = X @ W.T
+
+    def score_fn(x):
+        return np.asarray(x) @ W.T
+
+    a = api.fit(F, beta=0.0, alpha=0.02)
+    b = api.fit(score_fn, X, beta=0.0, alpha=0.02)
+    np.testing.assert_array_equal(a.model.order, b.model.order)
+    np.testing.assert_array_equal(a.model.eps_pos, b.model.eps_pos)
+    assert a.score_fn is None and b.score_fn is score_fn
+    # the calibration matrix is retained (baselines reuse it, no rescore)
+    np.testing.assert_array_equal(a.calibration_scores, F)
+    np.testing.assert_array_equal(b.calibration_scores, F)
+    with pytest.raises(ValueError):
+        api.fit(score_fn)  # callable ensemble needs X
+
+
+def test_fit_config_and_overrides():
+    F = make_scores(np.random.default_rng(43), n=150, t=12)
+    cfg = api.FitConfig(beta=0.1, alpha=0.02, mode="neg_only", chunk_t=3)
+    a = api.fit(F, config=cfg)
+    b = api.fit(F, config={"beta": 0.1, "alpha": 0.02, "mode": "neg_only",
+                           "chunk_t": 3})
+    c = api.fit(F, config=cfg, alpha=0.05)  # override wins
+    assert a.config == b.config == cfg
+    assert c.config.alpha == 0.05 and c.config.beta == 0.1
+    assert a.model.mode == "neg_only"
+    assert a.plan().chunk_t == 3
+    with pytest.raises(ValueError):
+        api.fit(np.zeros(7))  # not (N, T)
+
+
+# ------------------------------------------------- parity vs direct path
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_host_backend_bit_identical_to_direct(mode):
+    """compile('host').evaluate == direct ChunkedExecutor, bit for bit —
+    decisions, exit steps, carried sums, and the billing counters."""
+    F, fitted = _setup(mode=mode)
+    m = fitted.model
+    direct = ChunkedExecutor(
+        CascadePlan.from_qwyc(m, chunk_t=4), matrix_producer(F[:, m.order])
+    ).run(F.shape[0])
+    res = fitted.compile("host").evaluate(scores=F)
+    np.testing.assert_array_equal(res.decisions, direct.decisions)
+    np.testing.assert_array_equal(res.exit_step, direct.exit_step)
+    np.testing.assert_array_equal(res.g_final, direct.g_final)
+    assert res.scores_computed == direct.scores_computed
+    assert [s.n_in for s in res.chunk_stats] == [
+        s.n_in for s in direct.chunk_stats
+    ]
+
+
+def test_host_backend_kernel_decide_matches_score_and_decide():
+    F, fitted = _setup()
+    m = fitted.model
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    direct = ops.score_and_decide(
+        matrix_producer(F[:, m.order].astype(np.float32)), plan, F.shape[0],
+        block_n=64,
+    )
+    res = fitted.compile("host", decide="kernel", block_n=64).evaluate(
+        scores=F.astype(np.float32)
+    )
+    np.testing.assert_array_equal(res.decisions, direct.decisions)
+    np.testing.assert_array_equal(res.exit_step, direct.exit_step)
+    assert res.scores_computed == direct.scores_computed
+
+
+def test_host_backend_lazy_producer():
+    F, fitted = _setup()
+    m = fitted.model
+    ev = evaluate_cascade(m, F)
+    Fo = F[:, m.order]
+    calls = []
+
+    def producer(rows, t0, t1):
+        calls.append((len(rows), t0, t1))
+        return Fo[np.asarray(rows)[:, None], np.arange(t0, t1)[None, :]]
+
+    res = fitted.compile("host").evaluate(producer=producer, n=F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    assert calls and res.scores_computed < F.size  # lazily skipped work
+    with pytest.raises(ValueError):
+        fitted.compile("host").evaluate(producer=producer)  # missing n
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_device_backend_bit_identical_and_one_trace(mode):
+    F, fitted = _setup(mode=mode)
+    m = fitted.model
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=64)
+    direct = dex.run(F[:, m.order].astype(np.float32), F.shape[0])
+    compiled = fitted.compile("device", block_n=64)
+    res = compiled.evaluate(scores=F)
+    np.testing.assert_array_equal(res.decisions, direct.decisions)
+    np.testing.assert_array_equal(res.exit_step, direct.exit_step)
+    np.testing.assert_array_equal(res.g_final, direct.g_final)
+    assert res.scores_computed == direct.scores_computed
+    # unchanged trace accounting: one compiled program, reused across runs
+    assert compiled.traces == 1
+    compiled.evaluate(scores=F)
+    assert compiled.traces == 1
+
+
+@pytest.mark.parametrize("shards", _shards_params())
+def test_sharded_backend_bit_identical_and_one_trace(shards):
+    F, fitted = _setup()
+    m = fitted.model
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    mesh = make_serving_mesh(shards)
+    direct = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), mesh, block_n=32
+    ).run(F[:, m.order].astype(np.float32), F.shape[0])
+    compiled = fitted.compile("sharded", shards=shards, block_n=32)
+    res = compiled.evaluate(scores=F)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.decisions, direct.decisions)
+    np.testing.assert_array_equal(res.exit_step, direct.exit_step)
+    assert res.scores_computed == direct.scores_computed
+    assert compiled.traces == 1
+    compiled.evaluate(scores=F)
+    assert compiled.traces == 1
+
+
+def test_device_backend_custom_scorer_factory():
+    """Fully-lazy on-device scoring: compile(scorer_factory=...) consumes
+    the feature batch via x=."""
+    rng = np.random.default_rng(44)
+    t, d = 16, 6
+    W = rng.normal(size=(t, d))
+    X = rng.normal(size=(240, d)).astype(np.float32)
+    F = (X @ W.T).astype(np.float64)
+    fitted = api.fit(F, beta=0.0, alpha=0.01, chunk_t=4)
+    ev = evaluate_cascade(fitted.model, F)
+    Wo = jnp.asarray(W[fitted.model.order], dtype=jnp.float32)
+
+    def factory(dplan):
+        Wp = jnp.pad(Wo, ((0, dplan.T_pad - t), (0, 0)))
+
+        def fn(x, rows, t0, n_valid):
+            slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
+            return jnp.take(x, rows, axis=0) @ slab.T
+
+        return StageScorer(
+            fn=fn, prepare=lambda xb: jnp.asarray(xb, jnp.float32),
+            width=dplan.W,
+        )
+
+    compiled = fitted.compile("device", scorer_factory=factory, block_n=64)
+    res = compiled.evaluate(x=X)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    with pytest.raises(ValueError):
+        compiled.evaluate(scores=F)  # a custom scorer wants features, not F
+
+
+# ---------------------------------------------------------------- serve
+
+
+def test_serve_through_api_matches_direct_server():
+    rng = np.random.default_rng(45)
+    t, d = 18, 6
+    W = rng.normal(size=(t, d))
+    X = rng.normal(size=(260, d)).astype(np.float32)
+    F = (X @ W.T).astype(np.float64)
+
+    def score_fn(x):
+        return np.asarray(x) @ W.T
+
+    fitted = api.fit(score_fn, X, beta=0.0, alpha=0.01, chunk_t=4)
+
+    def drain(srv):
+        for row in X:
+            srv.submit(row)
+        return srv.drain()
+
+    res_api = drain(fitted.compile("host").serve(batch_size=128, policy="kernel"))
+    res_old = drain(
+        QWYCServer(fitted.model, score_fn, batch_size=128, backend="kernel",
+                   chunk_t=4)
+    )
+    assert res_api == res_old
+
+
+def test_compile_validation():
+    _, fitted = _setup()
+    with pytest.raises(ValueError):
+        fitted.compile("host", scorer_factory=lambda dp: None)
+    with pytest.raises(ValueError):
+        fitted.compile("device", shards=2)
+    with pytest.raises(ValueError):
+        fitted.compile("device", rebalance=True)
+    with pytest.raises(ValueError):
+        fitted.compile("device", decide="kernel")  # host-only option
+    with pytest.raises(ValueError):
+        fitted.compile("host", decide="telepathy")
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs 2 devices")
+def test_third_party_backend_plugs_in_without_caller_edits():
+    """Extensibility acceptance: a backend implementing EXACTLY the
+    documented protocol (no optional resolve_mesh extension) registers
+    once and serves through QWYCServer with zero caller edits."""
+
+    class MirrorShardedBackend:
+        name = "mirror-sharded"
+        capabilities = api.ShardedBackend.capabilities
+
+        def available(self, n_devices=None, interpret_only=None):
+            return api.get_backend("sharded").available(n_devices, interpret_only)
+
+        def make_executor(self, plan, **opts):
+            return api.get_backend("sharded").make_executor(plan, **opts)
+
+        def billing_key(self, **opts):
+            return api.get_backend("sharded").billing_key(**opts)
+
+    b = MirrorShardedBackend()
+    assert isinstance(b, api.Backend)
+    api.register_backend(b, overwrite=True)
+    try:
+        rng = np.random.default_rng(46)
+        t, d = 16, 6
+        W = rng.normal(size=(t, d))
+        X = rng.normal(size=(220, d)).astype(np.float32)
+        F = (X @ W.T).astype(np.float64)
+        m = fit_qwyc(F, beta=0.0, alpha=0.01)
+        ev = evaluate_cascade(m, F)
+        srv = QWYCServer(
+            m, lambda x: np.asarray(x) @ W.T, batch_size=64,
+            backend="kernel", chunk_t=4, exec_backend="mirror-sharded",
+            backend_opts={"shards": 2},
+        )
+        assert srv.n_shards == 2 and srv.flush_size == 128
+        for row in X:
+            srv.submit(row)
+        res = srv.drain()
+        np.testing.assert_array_equal(
+            np.array([r["decision"] for r in res]), ev["decisions"]
+        )
+        assert isinstance(srv._dev[0], ShardedDeviceExecutor)
+    finally:
+        from repro.api import registry as _registry
+
+        _registry._BACKENDS.pop("mirror-sharded", None)
+
+
+# ------------------------------------------------------- import surface
+
+
+def test_import_path_and_stable_all():
+    import repro
+
+    assert repro.api is api
+    expected = {
+        "fit", "FitConfig", "FittedCascade", "CompiledCascade",
+        "Backend", "BackendCapabilities",
+        "HostBackend", "DeviceBackend", "ShardedBackend",
+        "AUTO", "NEGOTIATION_ORDER",
+        "register_backend", "get_backend", "backend_names",
+        "negotiate", "resolve_backend",
+    }
+    assert set(api.__all__) == expected
+    for name in api.__all__:
+        assert hasattr(api, name), name

@@ -1,0 +1,170 @@
+"""Deprecation shims for the pre-``repro.api`` boolean-flag dispatch.
+
+Satellite acceptance: ``QWYCServer(device=...)``,
+``ops.score_and_decide(device=...)`` and ``serve.py --device/--shards``
+each emit ``DeprecationWarning`` AND forward to the backend-registry
+equivalents with identical results.
+
+All tests use LOCAL rngs so the session-rng stream stays stable."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.kernels import ops
+from repro.kernels.device_executor import DevicePlan, matrix_stage_scorer
+from repro.launch import serve
+from repro.serving.engine import QWYCServer
+
+
+def _linear(seed=50, n=260, t=18, d=6):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(t, d))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    F = (X @ W.T).astype(np.float64)
+    m = fit_qwyc(F, beta=0.0, alpha=0.01)
+
+    def score_fn(x):
+        return np.asarray(x) @ W.T
+
+    return X, F, m, score_fn
+
+
+def _drain(srv, X):
+    for row in X:
+        srv.submit(row)
+    return srv.drain()
+
+
+def test_server_device_kwarg_warns_and_forwards():
+    X, F, m, score_fn = _linear()
+    with pytest.warns(DeprecationWarning, match="exec_backend"):
+        old = QWYCServer(
+            m, score_fn, batch_size=128, backend="kernel", chunk_t=4,
+            device=True,
+        )
+    assert old.exec.name == "device" and old.device
+    new = QWYCServer(
+        m, score_fn, batch_size=128, backend="kernel", chunk_t=4,
+        exec_backend="device",
+    )
+    assert _drain(old, X) == _drain(new, X)  # identical results
+    # device=False forwards to the host backend (and still warns)
+    with pytest.warns(DeprecationWarning):
+        host = QWYCServer(m, score_fn, device=False)
+    assert host.exec.name == "host"
+
+
+def test_server_mesh_kwarg_routes_through_sharded_backend():
+    """mesh= keeps working (it is an option, not boolean dispatch): it
+    routes through the sharded backend without a warning."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    from repro.launch.mesh import make_serving_mesh
+
+    X, F, m, score_fn = _linear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        srv = QWYCServer(
+            m, score_fn, batch_size=64, backend="kernel", chunk_t=4,
+            mesh=make_serving_mesh(2),
+        )
+    assert srv.exec.name == "sharded" and srv.n_shards == 2
+    ev = evaluate_cascade(m, F)
+    res = _drain(srv, X)
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+
+
+def test_score_and_decide_device_kwarg_warns_and_forwards():
+    rng = np.random.default_rng(51)
+    F = make_scores(rng, n=200, t=16)
+    m = fit_qwyc(F, beta=0.0, alpha=0.01)
+    plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    scorer = matrix_stage_scorer(dplan)
+    Fo = F[:, m.order].astype(np.float32)
+    n = F.shape[0]
+    with pytest.warns(DeprecationWarning, match="backend="):
+        old = ops.score_and_decide(
+            scorer, dplan, n, block_n=64, device=True, x=Fo
+        )
+    new = ops.score_and_decide(
+        scorer, dplan, n, block_n=64, backend="device", x=Fo
+    )
+    np.testing.assert_array_equal(old.decisions, new.decisions)
+    np.testing.assert_array_equal(old.exit_step, new.exit_step)
+    assert old.scores_computed == new.scores_computed
+    # device=False forwards to the host path (and still warns)
+    prod_plan = CascadePlan.from_qwyc(m, chunk_t=4)
+    from repro.core.executor import matrix_producer
+
+    with pytest.warns(DeprecationWarning):
+        old_h = ops.score_and_decide(
+            matrix_producer(Fo), prod_plan, n, block_n=64, device=False
+        )
+    new_h = ops.score_and_decide(
+        matrix_producer(Fo), prod_plan, n, block_n=64, backend="host"
+    )
+    np.testing.assert_array_equal(old_h.decisions, new_h.decisions)
+    assert old_h.scores_computed == new_h.scores_computed
+
+
+def test_serve_cli_device_flag_warns_and_forwards():
+    ap = serve.build_parser()
+    with pytest.warns(DeprecationWarning, match="--backend device"):
+        backend, opts, policy = serve.resolve_backend_args(
+            ap.parse_args(["--device"])
+        )
+    assert (backend, opts, policy) == ("device", {}, "sorted-kernel")
+
+
+def test_serve_cli_shards_flag_warns_and_forwards():
+    ap = serve.build_parser()
+    with pytest.warns(DeprecationWarning, match="--backend sharded"):
+        backend, opts, policy = serve.resolve_backend_args(
+            ap.parse_args(["--shards", "2"])
+        )
+    assert backend == "sharded" and opts == {"shards": 2}
+    # --shards 1 was the old default meaning "not sharded": no forwarding
+    with pytest.warns(DeprecationWarning):
+        backend, opts, _ = serve.resolve_backend_args(
+            ap.parse_args(["--shards", "1"])
+        )
+    assert backend == "auto" and opts == {}
+
+
+def test_serve_cli_policy_name_under_backend_warns_and_forwards():
+    ap = serve.build_parser()
+    with pytest.warns(DeprecationWarning, match="--policy"):
+        backend, opts, policy = serve.resolve_backend_args(
+            ap.parse_args(["--backend", "sorted-kernel"])
+        )
+    assert (backend, policy) == ("auto", "sorted-kernel")
+
+
+def test_serve_cli_new_flags_do_not_warn():
+    ap = serve.build_parser()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        backend, opts, policy = serve.resolve_backend_args(
+            ap.parse_args(
+                ["--backend", "sharded", "--backend-shards", "4", "--rebalance"]
+            )
+        )
+    assert backend == "sharded"
+    assert opts == {"shards": 4, "rebalance": True}
+    # an explicit shard count under the default --backend auto forces the
+    # sharded backend (parity with what the deprecated --shards N did)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        backend, opts, _ = serve.resolve_backend_args(
+            ap.parse_args(["--backend-shards", "2"])
+        )
+    assert backend == "sharded" and opts == {"shards": 2}

@@ -354,8 +354,9 @@ def test_device_executor_tree_scorer_parity():
 
 
 def test_score_and_decide_device_dispatch():
-    """ops.score_and_decide(device=True) routes to the DeviceExecutor and
-    reuses ONE compiled program across calls with the same plan/scorer."""
+    """ops.score_and_decide(backend="device") routes through the backend
+    registry to the DeviceExecutor and reuses ONE compiled program across
+    calls with the same plan/scorer."""
     rng = np.random.default_rng(18)
     F, m = _fit(rng, t=20)
     ev = evaluate_cascade(m, F)
@@ -366,13 +367,15 @@ def test_score_and_decide_device_dispatch():
     Fo = F[:, m.order].astype(np.float32)
     for _ in range(2):
         res = ops.score_and_decide(
-            scorer, dplan, n, block_n=64, device=True, x=Fo
+            scorer, dplan, n, block_n=64, backend="device", x=Fo
         )
         np.testing.assert_array_equal(res.decisions, ev["decisions"])
         np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
-    key = (id(scorer), id(dplan), 64, None)
+    key = ("device", id(scorer), id(dplan), 64, None, ())
     assert ops._DEVICE_EXECUTORS[key][0].traces == 1
     with pytest.raises(TypeError):
-        ops.score_and_decide(matrix_producer(Fo), plan, n, device=True, x=Fo)
+        ops.score_and_decide(
+            matrix_producer(Fo), plan, n, backend="device", x=Fo
+        )
     with pytest.raises(ValueError):
-        ops.score_and_decide(scorer, dplan, n, device=True)
+        ops.score_and_decide(scorer, dplan, n, backend="device")

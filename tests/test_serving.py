@@ -1,6 +1,7 @@
 """QWYCServer: backend parity, sorted-kernel permutation round-trip,
 Filter-and-Score full_score attachment, lazy-execution stats, and the
-``device=True`` fast path (one jit'd program per server, DESIGN.md §5)."""
+``exec_backend="device"`` fast path (one jit'd program per server,
+DESIGN.md §5)."""
 
 import jax
 import jax.numpy as jnp
@@ -168,10 +169,14 @@ def test_constructor_validation(rng):
     with pytest.raises(ValueError):
         QWYCServer(m, score_fn, backend="warp-drive")
     with pytest.raises(ValueError):
-        # a device scorer factory without device=True is a config error
+        # a device scorer factory on the host backend is a config error
         QWYCServer(m, score_fn, device_scorer_factory=lambda dp: None)
     with pytest.raises(ValueError):
-        QWYCServer(m, device=True)  # device path with nothing to score with
+        # device path with nothing to score with
+        QWYCServer(m, exec_backend="device")
+    with pytest.raises(KeyError):
+        # unknown exec backend: the registry lists the registered names
+        QWYCServer(m, score_fn, exec_backend="warp-drive")
 
 
 def _linear_device_factory(Wo):
@@ -200,10 +205,10 @@ def _linear_device_factory(Wo):
 @pytest.mark.parametrize("mode", ["both", "neg_only"])
 @pytest.mark.parametrize("producer", ["device-scorer", "eager-matrix"])
 def test_device_backend_parity(backend, mode, producer):
-    """device=True: every backend x mode, with a lazy device scorer or the
-    eager-matrix fallback, stays bit-identical to evaluate_cascade — and
-    the whole run compiles exactly ONE device program (partial final
-    batches are padded up to batch_size)."""
+    """exec_backend="device": every policy x mode, with a lazy device
+    scorer or the eager-matrix fallback, stays bit-identical to
+    evaluate_cascade — and the whole run compiles exactly ONE device
+    program (partial final batches are padded up to batch_size)."""
     rng = np.random.default_rng(21)
     X, F, m, chunk_score_fn, score_fn = _linear_setup(rng, mode=mode)
     ev = evaluate_cascade(m, F)
@@ -216,7 +221,8 @@ def test_device_backend_parity(backend, mode, producer):
         else {"score_fn": score_fn}
     )
     srv = QWYCServer(
-        m, batch_size=128, backend=backend, chunk_t=4, device=True, **kw
+        m, batch_size=128, backend=backend, chunk_t=4,
+        exec_backend="device", **kw
     )
     for row in X:
         srv.submit(row)
@@ -241,8 +247,8 @@ def test_device_filter_and_score():
         rng, mode="neg_only", alpha=0.02
     )
     srv = QWYCServer(
-        m, batch_size=64, backend="kernel", chunk_t=4, device=True,
-        score_fn=score_fn,
+        m, batch_size=64, backend="kernel", chunk_t=4,
+        exec_backend="device", score_fn=score_fn,
     )
     for row in X:
         srv.submit(row)
