@@ -165,8 +165,9 @@ def run(
 def _write_root_summary(dataset: str, rows: list[dict]) -> None:
     """BENCH_executor.json — the repo-root perf-trajectory artifact.
 
-    ``bench_sharded.py`` owns the file's ``"sharded"`` section; preserve
-    it across rewrites so suite ordering can't drop it."""
+    ``bench_sharded.py`` owns the file's ``"sharded"`` section and
+    ``bench_streaming.py`` its ``"streaming"`` section; preserve both
+    across rewrites so suite ordering can't drop them."""
     path = REPO_ROOT / "BENCH_executor.json"
     prior = json.loads(path.read_text()) if path.exists() else {}
     big = [r for r in rows if r["n"] >= 1024]
@@ -187,8 +188,9 @@ def _write_root_summary(dataset: str, rows: list[dict]) -> None:
             ),
         },
     }
-    if "sharded" in prior:
-        summary["sharded"] = prior["sharded"]
+    for section in ("sharded", "streaming"):
+        if section in prior:
+            summary[section] = prior[section]
     path.write_text(json.dumps(summary, indent=1))
 
 

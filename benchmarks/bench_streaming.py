@@ -1,0 +1,267 @@
+"""Continuous-batching streaming server vs the flush server (DESIGN.md §8).
+
+The flush server serves batch-at-a-time: each flush's fixed-capacity
+survivor buffers drain as rows exit, so the cascade tail runs mostly
+empty while the next batch queues.  ``StreamingServer`` refills freed
+slots from a device-resident admission ring mid-cascade.  This benchmark
+replays a FIXED-SEED Poisson arrival trace (EXPERIMENTS.md §Streaming)
+through both at equal slot capacity and records, per (alpha, capacity,
+shards) cell:
+
+* **occupancy** — live slots / capacity per stage step.  Streaming's
+  mean must be STRICTLY above the flush server's (asserted): that is the
+  whole point of admission refill.
+* **latency** — per-request enqueue->decision latency in deterministic
+  stage steps (mean/p50/p95/p99).  Flush latency is modeled from the
+  same executor's per-batch stage counts: a request waits for its batch
+  to fill, then for every stage of that batch.
+* **billing** — block-guard scores computed, admitted rows, stage steps,
+  jit traces (one per server across all waves, asserted).  All integers,
+  no wall-clock — the same counters ``perf_gate`` locks.
+
+Parity gate: streaming decisions and exit steps are asserted
+bit-identical per row id to the host ``ChunkedExecutor`` oracle before
+any accounting is recorded.
+
+Multi-shard cells need multiple XLA devices (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``); they are
+skipped with a note otherwise.  Results land in
+``benchmarks/results/streaming_<dataset>.json`` and merge into the
+repo-root ``BENCH_executor.json`` under the ``"streaming"`` key.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import gbt_ensemble_for, save_rows
+from repro.core import CascadePlan, fit_qwyc
+from repro.core.executor import ChunkedExecutor, matrix_producer
+from repro.api.registry import get_backend
+from repro.kernels.device_executor import DevicePlan, tree_stage_scorer
+from repro.serving.engine import StreamingServer
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+ARRIVAL_SEED = 2028  # the streaming protocol's fixed trace seed
+ALPHAS = (0.005, 0.02)
+CAPACITIES = (128, 256)
+SHARDS = (1, 2, 4)
+N_REQUESTS = 2048
+
+
+def _tile_rows(x: np.ndarray, n: int) -> np.ndarray:
+    reps = -(-n // x.shape[0])
+    return np.tile(x, (reps, 1))[:n]
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = ARRIVAL_SEED):
+    """Arrival steps for ``n`` requests at ``rate`` requests/stage-step
+    (cumulative exponential inter-arrivals, fixed seed — the trace the
+    perf gate and the parity tests replay)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def flush_latency_model(dex, x_np, arrivals, n, cap):
+    """Model the flush server on the SAME executor: batch b fills with
+    requests [b*cap, (b+1)*cap), launches at max(last arrival, previous
+    batch end), runs its stages, and decides every request at the end.
+    Returns (latency_steps, mean_occupancy, scores, stage_steps)."""
+    end_prev = 0.0
+    lat = []
+    occ_num = 0
+    occ_den = 0
+    scores = 0
+    steps = 0
+    for b0 in range(0, n, cap):
+        b1 = min(b0 + cap, n)
+        nb = b1 - b0
+        res = dex.run(x_np[b0:b1], nb, capacity=cap)
+        s_b = len(res.chunk_stats)
+        start = max(float(arrivals[b1 - 1]), end_prev)
+        end = start + s_b
+        lat.extend((end - arrivals[b0:b1]).tolist())
+        occ_num += sum(c.n_in for c in res.chunk_stats)
+        occ_den += s_b * cap
+        scores += res.scores_computed
+        steps += s_b
+        end_prev = end
+    return np.asarray(lat), occ_num / max(occ_den, 1), scores, steps
+
+
+def run(
+    dataset: str = "adult",
+    T: int = 100,
+    depth: int = 5,
+    scale: float = 0.25,
+    chunk_t: int = 8,
+    block_n: int = 64,
+    alphas=ALPHAS,
+    capacities=CAPACITIES,
+    shards_list=SHARDS,
+    n_requests: int = N_REQUESTS,
+) -> list[dict]:
+    n_dev = len(jax.devices())
+    usable = [s for s in shards_list if s <= n_dev]
+    skipped = [s for s in shards_list if s > n_dev]
+    if skipped:
+        print(
+            f"[bench_streaming] skipping shards {skipped}: only {n_dev} "
+            "device(s) (XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    gbt, F_tr, F_te, beta, ds = gbt_ensemble_for(dataset, T, depth, scale)
+    st = gbt.stacked()
+    n = n_requests
+    x_np = _tile_rows(np.asarray(ds.x_test, dtype=np.float32), n)
+    F_sub = _tile_rows(np.asarray(F_te, dtype=np.float64), n)
+    rows = []
+    for alpha in alphas:
+        m = fit_qwyc(F_tr, beta=beta, alpha=alpha)
+        plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+        dplan = DevicePlan.from_plan(plan)
+        of = np.asarray(st["feats"])[m.order]
+        ot = np.asarray(st["thrs"])[m.order]
+        ol = np.asarray(st["leaves"])[m.order]
+        host = ChunkedExecutor(plan, matrix_producer(F_sub[:, m.order])).run(n)
+
+        def factory(dp, _of=of, _ot=ot, _ol=ol):
+            return tree_stage_scorer(dp, _of, _ot, _ol, block_n=block_n)
+
+        for cap in capacities:
+            # load the trace at ~the slot service capacity (most rows
+            # occupy a slot for about one stage step): heavy traffic, the
+            # regime continuous batching exists for — freed slots always
+            # have a queued request to take
+            arrivals = poisson_arrivals(n, rate=float(cap))
+            scorer = factory(dplan)
+            dex = get_backend("device").make_executor(
+                dplan, scorer=scorer, block_n=block_n
+            )
+            flush_lat, flush_occ, flush_scores, flush_steps = (
+                flush_latency_model(dex, x_np, arrivals, n, cap)
+            )
+            for shards in usable:
+                backend = "device" if shards == 1 else "sharded"
+                opts = {} if shards == 1 else {"shards": shards}
+                srv = StreamingServer(
+                    m,
+                    batch_size=cap // shards,
+                    window=4 * cap,
+                    device_scorer_factory=factory,
+                    audit_full_scores=False,
+                    chunk_t=chunk_t,
+                    block_n=block_n,
+                    exec_backend=backend,
+                    backend_opts=opts,
+                )
+                for i in range(n):
+                    srv.submit(x_np[i], arrival=arrivals[i])
+                res = srv.drain()
+                # parity gate: bit-identical per row id to the host oracle
+                dec = np.array([r["decision"] for r in res])
+                ex = np.array([r["models_evaluated"] for r in res])
+                assert np.array_equal(dec, host.decisions)
+                assert np.array_equal(ex, host.exit_step)
+                sst = srv.stats
+                assert srv._dev[0].traces == 1, srv._dev[0].traces
+                assert sst.mean_occupancy > flush_occ, (
+                    "streaming occupancy must beat the flush server: "
+                    f"{sst.mean_occupancy:.3f} <= {flush_occ:.3f}"
+                )
+                lat = np.asarray(sst.latency_steps, dtype=np.float64)
+                # live slots / capacity per stage step, concatenated over
+                # waves — the raw occupancy trajectory (kept in the
+                # results file, stripped from the root merge)
+                occ_per_step = np.concatenate(
+                    [w.occupancy / w.capacity for w in srv.stream_results]
+                )
+                rows.append(
+                    {
+                        "experiment": f"streaming_{dataset}",
+                        "alpha": alpha,
+                        "T": T,
+                        "chunk_t": chunk_t,
+                        "block_n": block_n,
+                        "capacity": cap,
+                        "shards": shards,
+                        "window": 4 * cap,
+                        "n_requests": n,
+                        "arrival_rate": float(cap),
+                        "arrival_seed": ARRIVAL_SEED,
+                        "waves": sst.n_batches,
+                        "stream_steps": sst.stream_steps,
+                        "stream_occupancy": sst.mean_occupancy,
+                        "occupancy_per_step": occ_per_step.round(4).tolist(),
+                        "flush_steps": flush_steps,
+                        "flush_occupancy": flush_occ,
+                        "occupancy_beats_flush": True,
+                        "stream_latency_mean": float(lat.mean()),
+                        "stream_latency_p50": float(np.percentile(lat, 50)),
+                        "stream_latency_p95": float(np.percentile(lat, 95)),
+                        "stream_latency_p99": float(np.percentile(lat, 99)),
+                        "flush_latency_mean": float(flush_lat.mean()),
+                        "flush_latency_p99": float(np.percentile(flush_lat, 99)),
+                        "scores_stream": sst.scores_computed,
+                        "scores_flush": flush_scores,
+                        "admitted": sst.admitted_rows,
+                        "traces": srv._dev[0].traces,
+                        "parity_with_host_oracle": True,
+                    }
+                )
+    save_rows(f"streaming_{dataset}", rows)
+    _merge_root_summary(dataset, rows)
+    return rows
+
+
+def _merge_root_summary(dataset: str, rows: list[dict]) -> None:
+    """Add/replace the ``"streaming"`` section of BENCH_executor.json
+    (the device-executor bench owns the rest of the file; this section is
+    preserved across its rewrites like ``"sharded"``)."""
+    path = REPO_ROOT / "BENCH_executor.json"
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    slim = [
+        {k: v for k, v in r.items() if k != "occupancy_per_step"}
+        for r in rows
+    ]
+    occ_gain = [r["stream_occupancy"] / max(r["flush_occupancy"], 1e-9) for r in rows]
+    lat_gain = [
+        r["flush_latency_mean"] / max(r["stream_latency_mean"], 1e-9)
+        for r in rows
+    ]
+    doc["streaming"] = {
+        "protocol": "EXPERIMENTS.md §Streaming",
+        "dataset": dataset,
+        "rows": slim,
+        "headline": {
+            "occupancy_beats_flush_all_cells": bool(
+                all(r["occupancy_beats_flush"] for r in rows)
+            ),
+            "parity_with_host_oracle": bool(
+                all(r["parity_with_host_oracle"] for r in rows)
+            ),
+            "one_trace_per_server": bool(all(r["traces"] == 1 for r in rows)),
+            "median_occupancy_gain": float(np.median(occ_gain)) if rows else None,
+            "median_mean_latency_gain": (
+                float(np.median(lat_gain)) if rows else None
+            ),
+            "max_shards_measured": max((r["shards"] for r in rows), default=0),
+        },
+    }
+    path.write_text(json.dumps(doc, indent=1))
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(
+            f"alpha={r['alpha']:<6} cap={r['capacity']:<4} "
+            f"shards={r['shards']} occ stream={r['stream_occupancy']:.2f} "
+            f"flush={r['flush_occupancy']:.2f}  lat mean "
+            f"stream={r['stream_latency_mean']:6.1f} "
+            f"flush={r['flush_latency_mean']:6.1f}  "
+            f"p99 stream={r['stream_latency_p99']:6.1f}"
+        )

@@ -9,7 +9,6 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fit_qwyc
 from repro.data.synthetic import make_dataset
 from repro.ensembles.gbt import train_gbt
 from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble

@@ -30,10 +30,13 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import argparse
-import json
-import pathlib
-import sys
+# imports must follow the XLA_FLAGS default above (jax reads it at
+# first import), so E402 is deliberate here
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
 
 BASELINE = pathlib.Path(__file__).parent / "results" / "baseline_billing.json"
 
@@ -173,6 +176,52 @@ def collect_counters() -> dict[str, int]:
     c[f"serve.{sk}.scores"] = int(srv2.stats.scores_computed)
     c[f"serve.{sk}.batches"] = int(srv2.stats.n_batches)
     c[f"serve.{sk}.traces"] = int(srv2._dev[0].traces)
+
+    # streaming admission (DESIGN.md §8): fixed-seed Poisson trace
+    # through the continuous-batching server on the device and sharded
+    # backends.  All counters are stage-step/score/trace work counters
+    # (more = worse) — latency percentiles stay in the benchmark, the
+    # gate locks the deterministic work they derive from.
+    from repro.serving.engine import StreamingServer
+
+    ev_s = evaluate_cascade(ms, Fs)
+    arrivals = np.cumsum(
+        np.random.default_rng(2028).exponential(1.0 / 32.0, size=ns)
+    )
+
+    def lane_factory(dplan):
+        Wp = jnp.pad(Wo_j, ((0, dplan.T_pad - ts), (0, 0)))
+        base = factory(dplan)
+
+        def lane_fn(x, rows, t0_lane, n_valid):
+            xr = jnp.take(x, rows, axis=0)
+            pos = t0_lane[:, None] + jnp.arange(dplan.W, dtype=jnp.int32)
+            slab = jnp.take(Wp, pos, axis=0)  # (cap, W, d)
+            return jnp.einsum("cd,cwd->cw", xr, slab)
+
+        return dataclasses.replace(base, lane_fn=lane_fn)
+
+    for backend, opts in (("device", {}), ("sharded", {"shards": 4})):
+        srv3 = StreamingServer(
+            ms, batch_size=32 if backend == "device" else 8, window=128,
+            chunk_t=6, exec_backend=backend, backend_opts=opts,
+            device_scorer_factory=lane_factory, audit_full_scores=False,
+        )
+        for row, a in zip(X, arrivals):
+            srv3.submit(row, arrival=a)
+        res = srv3.drain()
+        assert np.array_equal(
+            np.array([r["decision"] for r in res]), ev_s["decisions"]
+        )
+        sb = (DEVICE if backend == "device" else SHARDED)
+        key = sb.billing_key(**({"shards": 4} if backend == "sharded" else {}))
+        sst = srv3.stats
+        c[f"stream.{key}.admitted"] = int(sst.admitted_rows)
+        c[f"stream.{key}.scores"] = int(sst.scores_computed)
+        c[f"stream.{key}.steps"] = int(sst.stream_steps)
+        c[f"stream.{key}.slot_steps"] = int(sst.stream_slot_steps)
+        c[f"stream.{key}.latency_sum"] = int(sum(sst.latency_steps))
+        c[f"stream.{key}.traces"] = int(srv3._dev[0].traces)
     return c
 
 

@@ -16,7 +16,8 @@ import time
 def _cached(name, fn, recompute):
     """Benchmarks cache their detailed rows; a re-run (e.g. the final tee'd
     driver invocation) reuses them unless --recompute is passed."""
-    import json, pathlib
+    import json
+    import pathlib
 
     p = pathlib.Path(__file__).parent / "results" / f"{name}.json"
     if p.exists() and not recompute:
@@ -31,7 +32,6 @@ def main() -> None:
     args = ap.parse_args()
     scale = 0.25 if args.quick else 1.0
     T_big = 100 if args.quick else 300
-    T_lat = 100 if args.quick else 500
 
     from benchmarks import (
         bench_device_executor,
@@ -200,6 +200,44 @@ def main() -> None:
                 f"{max(r['shards'] for r in multi)} shards "
                 f"(occupancy sums match single-device: "
                 f"{all(r['occupancy_sums_match_single_device'] for r in rows)})"
+            )
+
+    # Streaming admission vs flush serving (DESIGN.md §8): needs the
+    # fused device program, so availability — and the SKIPPED reason —
+    # comes from the device backend, exactly like the device bench above
+    st_ok, st_why = get_backend("device").available()
+    if not st_ok:
+        print(f"executor_streaming,,SKIPPED: {st_why}")
+    else:
+        from benchmarks import bench_streaming
+
+        try:
+            rows = _cached(
+                "streaming_adult",
+                lambda: bench_streaming.run(
+                    "adult", T=min(100, T_big), scale=min(scale, 0.25),
+                    n_requests=512 if args.quick else 2048,
+                ),
+                args.recompute,
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"executor_streaming,,SKIPPED ({type(e).__name__}: {e})")
+            rows = []
+        if rows:
+            occ_gain = [
+                r["stream_occupancy"] / max(r["flush_occupancy"], 1e-9)
+                for r in rows
+            ]
+            lat_gain = [
+                r["flush_latency_mean"] / max(r["stream_latency_mean"], 1e-9)
+                for r in rows
+            ]
+            print(
+                f"executor_streaming,,occupancy gain median "
+                f"{_np.median(occ_gain):.2f}x latency gain median "
+                f"{_np.median(lat_gain):.2f}x over flush serving "
+                f"(parity+one-trace: "
+                f"{all(r['parity_with_host_oracle'] and r['traces'] == 1 for r in rows)})"
             )
 
     # Roofline (from the dry-run grid, if present)

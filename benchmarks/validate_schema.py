@@ -1,0 +1,89 @@
+"""Validate a JSON document against a (subset) JSON Schema — no deps.
+
+The CI ``bench-artifact`` job runs this over the repo-root
+``BENCH_executor.json`` with ``benchmarks/results/bench_schema.json``, so
+the perf-trajectory artifact's shape is locked: a benchmark rewrite that
+drops a section, a row field or a headline flag fails the job instead of
+silently shipping a hollow artifact.
+
+Supported schema keywords (the subset ``bench_schema.json`` uses, kept
+dependency-free so the repo's no-new-deps floor holds): ``type``
+(object/array/string/number/integer/boolean/null), ``required``,
+``properties``, ``items``, ``minItems``, ``enum``.  Unknown keywords are
+ignored, like a real validator would with unknown annotations.
+
+    python -m benchmarks.validate_schema BENCH_executor.json \
+        benchmarks/results/bench_schema.json
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _type_ok(value, typ: str) -> bool:
+    if typ == "integer":
+        return isinstance(value, int) and not isinstance(value, bool)
+    if typ == "number":
+        return isinstance(value, (int, float)) and not isinstance(value, bool)
+    return isinstance(value, _TYPES[typ])
+
+
+def validate(doc, schema: dict, path: str = "$") -> list[str]:
+    """-> list of violation messages (empty = valid)."""
+    errors: list[str] = []
+    typ = schema.get("type")
+    if typ is not None and not _type_ok(doc, typ):
+        errors.append(f"{path}: expected {typ}, got {type(doc).__name__}")
+        return errors  # structural mismatch: children are meaningless
+    if "enum" in schema and doc not in schema["enum"]:
+        errors.append(f"{path}: {doc!r} not in enum {schema['enum']}")
+    if isinstance(doc, dict):
+        for key in schema.get("required", []):
+            if key not in doc:
+                errors.append(f"{path}: missing required key {key!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in doc:
+                errors.extend(validate(doc[key], sub, f"{path}.{key}"))
+    if isinstance(doc, list):
+        if len(doc) < schema.get("minItems", 0):
+            errors.append(
+                f"{path}: {len(doc)} item(s) < minItems {schema['minItems']}"
+            )
+        items = schema.get("items")
+        if items is not None:
+            for i, item in enumerate(doc):
+                errors.extend(validate(item, items, f"{path}[{i}]"))
+    return errors
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    doc_path, schema_path = map(pathlib.Path, args)
+    doc = json.loads(doc_path.read_text())
+    schema = json.loads(schema_path.read_text())
+    errors = validate(doc, schema)
+    for e in errors:
+        print(f"[validate-schema] FAIL {e}")
+    if errors:
+        print(f"[validate-schema] {doc_path}: {len(errors)} violation(s)")
+        return 1
+    print(f"[validate-schema] {doc_path}: OK against {schema_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,6 @@ inside a MoE layer (expert level).
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (

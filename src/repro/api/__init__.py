@@ -28,6 +28,14 @@ protocol:
         server.submit(row)
     outputs = server.drain()
 
+    # 3c. or continuous-batching streaming serving (DESIGN.md §8) —
+    #    freed survivor slots are refilled mid-cascade from an
+    #    arrival-ordered admission ring (on-device backends only):
+    stream = compiled.serve(streaming=True, batch_size=256, max_wait=8.0)
+    for step, row in enumerate(X_test):
+        stream.submit(row, arrival=float(step))
+    outputs = stream.drain()
+
 Backends live in a registry (``api.registry``, mirroring
 ``configs/registry.py``); ``api.backend_names()`` lists them and
 ``api.register_backend`` is how future substrates (async batching,

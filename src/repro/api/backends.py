@@ -76,6 +76,9 @@ class BackendCapabilities:
     batch over a ``("data",)`` mesh axis.
     ``supports_rebalance``: can repack skewed survivor buffers between
     stages (only meaningful when ``data_parallel``).
+    ``streaming``: the executor has ``run_stream`` — a device-resident
+    admission ring refills freed survivor slots mid-cascade, so a
+    ``StreamingServer`` can continuously batch onto it (DESIGN.md §8).
     """
 
     on_device: bool
@@ -83,6 +86,7 @@ class BackendCapabilities:
     trace_cached: bool
     data_parallel: bool = False
     supports_rebalance: bool = False
+    streaming: bool = False
 
 
 @runtime_checkable
@@ -173,7 +177,7 @@ class DeviceBackend:
 
     name = "device"
     capabilities = BackendCapabilities(
-        on_device=True, min_devices=1, trace_cached=True,
+        on_device=True, min_devices=1, trace_cached=True, streaming=True,
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
@@ -212,7 +216,7 @@ class ShardedBackend:
     name = "sharded"
     capabilities = BackendCapabilities(
         on_device=True, min_devices=2, trace_cached=True,
-        data_parallel=True, supports_rebalance=True,
+        data_parallel=True, supports_rebalance=True, streaming=True,
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:

@@ -383,6 +383,9 @@ class CompiledCascade:
         policy: str = "sorted-kernel",
         audit_full_scores: bool = True,
         score_block_n: int = 1,
+        streaming: bool = False,
+        window: int | None = None,
+        max_wait: float | None = None,
         **server_kw,
     ):
         """Build a batched ``QWYCServer`` on this backend.
@@ -394,8 +397,16 @@ class CompiledCascade:
         ``scorer_factory`` becomes the server's device scorer.  The
         server builds its own executor sized to the flush capacity, so
         compiled-evaluate traces and serving traces are independent.
+
+        ``streaming=True`` builds a continuous-batching
+        ``StreamingServer`` instead (DESIGN.md §8; requires a backend
+        with the ``streaming`` capability): ``batch_size`` becomes the
+        survivor-slot capacity, ``window`` the admission-ring size, and
+        ``max_wait`` the partial-admission deadline in stage steps.
+        Streaming admission replaces the sorting policy, so ``policy``
+        must stay the default (it is ignored in favor of ``kernel``).
         """
-        from repro.serving.engine import QWYCServer
+        from repro.serving.engine import QWYCServer, StreamingServer
 
         opts: dict = {}
         if self.backend.capabilities.data_parallel:
@@ -407,12 +418,10 @@ class CompiledCascade:
                 opts["rebalance"] = True
         if self.block_n is not None:
             server_kw.setdefault("block_n", self.block_n)
-        return QWYCServer(
-            self.fitted.model,
+        common = dict(
             score_fn=self.fitted.score_fn if score_fn is None else score_fn,
             chunk_score_fn=chunk_score_fn,
             batch_size=batch_size,
-            backend=policy,
             chunk_t=self.plan.chunk_t,
             audit_full_scores=audit_full_scores,
             score_block_n=score_block_n,
@@ -423,5 +432,33 @@ class CompiledCascade:
             ),
             exec_backend=self.backend,
             backend_opts=opts,
+        )
+        if streaming:
+            if not getattr(self.backend.capabilities, "streaming", False):
+                raise ValueError(
+                    f"backend {self.backend.name!r} does not support "
+                    "streaming admission; compile onto 'device' or 'sharded'"
+                )
+            if policy != "sorted-kernel":
+                # mirror StreamingServer's own backend= guard: streaming
+                # admission IS the ordering policy, so an explicit policy
+                # request must fail loudly, not be silently replaced
+                raise ValueError(
+                    "streaming admission replaces the sorting policy; drop "
+                    f"policy={policy!r} when serving with streaming=True"
+                )
+            return StreamingServer(
+                self.fitted.model,
+                window=window,
+                max_wait=max_wait,
+                **common,
+                **server_kw,
+            )
+        if window is not None or max_wait is not None:
+            raise ValueError("window/max_wait require serve(streaming=True)")
+        return QWYCServer(
+            self.fitted.model,
+            backend=policy,
+            **common,
             **server_kw,
         )

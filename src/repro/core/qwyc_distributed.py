@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qwyc import QWYCModel, fit_qwyc
+from repro.core.qwyc import QWYCModel
 
 __all__ = ["sweep_candidates", "fit_qwyc_sharded"]
 

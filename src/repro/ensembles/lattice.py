@@ -129,6 +129,6 @@ def train_lattice_ensemble(
         g = grad_fn(theta, feats, x[idx], y[idx], mode)
         theta, opt = adamw_update(theta, g, opt, lr=lr)
         if verbose and (i + 1) % 100 == 0:
-            l = _loss_fn(theta, feats, x, y, mode)
-            print(f"[lattice-{mode}] step {i+1}/{steps} loss={float(l):.4f}")
+            loss = _loss_fn(theta, feats, x, y, mode)
+            print(f"[lattice-{mode}] step {i+1}/{steps} loss={float(loss):.4f}")
     return {"feats": feats, "theta": theta}

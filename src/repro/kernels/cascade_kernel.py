@@ -30,7 +30,7 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_N = 256
 DEFAULT_CHUNK_T = 8
 
-__all__ = ["cascade_pallas", "cascade_chunk_pallas"]
+__all__ = ["cascade_pallas", "cascade_chunk_pallas", "cascade_lane_pallas"]
 
 
 def _threshold_step(g, active, decided_pos, exit_step, f_t, ep, en, step_1b):
@@ -206,6 +206,126 @@ def _cascade_chunk_kernel(
     active_ref[...] = active.astype(jnp.int32)
     dec_ref[...] = decided_pos.astype(jnp.int32)
     exit_ref[...] = exit_step
+
+
+def _cascade_lane_kernel(
+    g0_ref,  # (block_n,) carried partial scores
+    scores_ref,  # (block_n, ct) this chunk's scores, VMEM
+    eps_pos_ref,  # (block_n, ct) PER-LANE thresholds
+    eps_neg_ref,  # (block_n, ct)
+    valid_ref,  # (block_n,) int32: 1 = real row, 0 = padding lane
+    g_ref,  # (block_n,) out
+    active_ref,  # (block_n,) int32 out
+    dec_ref,  # (block_n,) int32 out (1 = exited positive)
+    exit_ref,  # (block_n,) int32 out (RELATIVE 1-based step; 0 = no exit)
+    *,
+    ct: int,
+):
+    """``_cascade_chunk_kernel`` with per-LANE threshold rows: lane i tests
+    column j against ``eps_pos_ref[i, j]`` instead of a stage-shared
+    scalar, so one block can mix lanes sitting at different cascade
+    stages (the streaming executor's admission refill puts stage-0
+    rookies next to veterans mid-cascade).  Exit steps come back RELATIVE
+    (1-based within the chunk); the caller rebases by each lane's own
+    stage start.  Threshold step semantics are ``_threshold_step``,
+    shared with every other decide."""
+
+    def step_cond(state):
+        j, _, active, _, _ = state
+        return (j < ct) & jnp.any(active)
+
+    def step_body(state):
+        j, g, active, decided_pos, exit_step = state
+        f_t = scores_ref[:, j]
+        ep = eps_pos_ref[:, j]  # (block_n,) — per-lane thresholds
+        en = eps_neg_ref[:, j]
+        g, active, decided_pos, exit_step = _threshold_step(
+            g, active, decided_pos, exit_step, f_t, ep, en, j + 1
+        )
+        return j + 1, g, active, decided_pos, exit_step
+
+    block_n = scores_ref.shape[0]
+    init = (
+        jnp.int32(0),
+        g0_ref[...],
+        valid_ref[...] != 0,
+        jnp.zeros((block_n,), dtype=jnp.bool_),
+        jnp.zeros((block_n,), dtype=jnp.int32),
+    )
+    _, g, active, decided_pos, exit_step = jax.lax.while_loop(
+        step_cond, step_body, init
+    )
+    g_ref[...] = g
+    active_ref[...] = active.astype(jnp.int32)
+    dec_ref[...] = decided_pos.astype(jnp.int32)
+    exit_ref[...] = exit_step
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def cascade_lane_pallas(
+    g0: jax.Array,
+    chunk_scores: jax.Array,
+    eps_pos: jax.Array,
+    eps_neg: jax.Array,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+    n_valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-lane-stage decide: threshold tests for one MIXED-stage block.
+
+    Same contract as ``cascade_chunk_pallas`` except ``eps_pos`` /
+    ``eps_neg`` are (m, ct) PER-ROW threshold slabs (each row gathered
+    from the stage table at that lane's own stage) and the returned
+    ``exit_step`` is always RELATIVE (1-based within the chunk, 0 where
+    the row survived) — the caller owns the per-lane rebase.  Rows past
+    ``n_valid`` start inactive, exactly like the chunk decide.
+    """
+    m, ct = chunk_scores.shape
+    bn = block_n
+    m_pad = -m % bn
+    if m_pad:
+        g0 = jnp.pad(g0, (0, m_pad))
+        chunk_scores = jnp.pad(chunk_scores, ((0, m_pad), (0, 0)))
+        eps_pos = jnp.pad(eps_pos, ((0, m_pad), (0, 0)))
+        eps_neg = jnp.pad(eps_neg, ((0, m_pad), (0, 0)))
+    m_total = g0.shape[0]
+    lim = (
+        jnp.int32(m)
+        if n_valid is None
+        else jnp.minimum(jnp.int32(m), jnp.asarray(n_valid, dtype=jnp.int32))
+    )
+    valid = (jnp.arange(m_total, dtype=jnp.int32) < lim).astype(jnp.int32)
+    dt = chunk_scores.dtype
+    g0 = g0.astype(dt)
+    eps_pos = eps_pos.astype(dt)
+    eps_neg = eps_neg.astype(dt)
+    grid = (m_total // bn,)
+    kernel = functools.partial(_cascade_lane_kernel, ct=ct)
+    g, active, dec, exit_step = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, ct), lambda i: (i, 0)),
+            pl.BlockSpec((bn, ct), lambda i: (i, 0)),
+            pl.BlockSpec((bn, ct), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_total,), dt),
+            jax.ShapeDtypeStruct((m_total,), jnp.int32),
+            jax.ShapeDtypeStruct((m_total,), jnp.int32),
+            jax.ShapeDtypeStruct((m_total,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(g0, chunk_scores, eps_pos, eps_neg, valid)
+    return g[:m], active[:m], dec[:m], exit_step[:m]
 
 
 @functools.partial(

@@ -39,6 +39,25 @@ wide-open thresholds (+/-inf) and zeroed scores, so they can never
 change a partial sum or trigger an exit.  Semantics are therefore
 bit-identical to ``core.qwyc.evaluate_cascade`` — asserted per backend
 and mode in ``tests/test_executor.py`` / ``tests/test_serving.py``.
+
+**Streaming admission (DESIGN.md §8).**  ``run`` drains one batch: every
+lane starts at stage 0 together, and as rows exit the tail of the
+cascade runs with the survivor buffers mostly empty — exactly the
+per-query skew the query-level early-exit literature measures (Lucchese
+et al. 2020; Busolin et al. 2021).  ``run_stream`` closes that gap with
+continuous batching: pending rows wait in a device-resident **admission
+ring** (ids + arrival steps, arrival order), and after each stage's
+cumsum-prefix compaction the open slots at the back of the front-packed
+buffers are refilled from the ring.  Admitted rows enter at cascade
+stage 0 while veterans continue mid-cascade, so the single loop counter
+is replaced by a **per-lane stage index**: the score slab, the threshold
+slab and the column-validity mask are gathered per lane from the
+``DevicePlan`` stage tables, and the decide runs through
+``cascade_lane_pallas`` (per-row thresholds, relative exit steps rebased
+by each lane's own stage start).  The same +/-inf threshold padding that
+makes uniformized stages inert makes mixed-stage blocks safe, so each
+row's decisions and exit steps stay bit-identical to the host oracle —
+asserted in ``tests/test_streaming.py``.
 """
 
 from __future__ import annotations
@@ -51,17 +70,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
-from repro.kernels.cascade_kernel import cascade_chunk_pallas
+from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
 __all__ = [
     "DevicePlan",
     "StageScorer",
+    "StreamResult",
     "DeviceExecutor",
     "matrix_stage_scorer",
     "tree_stage_scorer",
     "lattice_stage_scorer",
+    "stream_occupancy",
 ]
 
 # Mirrors repro.kernels.ops.INTERPRET (not imported: ops imports us).
@@ -137,12 +158,19 @@ class StageScorer:
     its block guard really computes at, which the executor uses for
     ``scores_computed`` billing (None = exact producer; billed at the
     executor's block size).
+    ``lane_fn`` (optional): the per-lane-stage variant for the streaming
+    executor — ``lane_fn(x, rows, t0_lane, n_valid) -> (cap, W)`` where
+    ``t0_lane`` is a (cap,) vector of per-lane cascade starts (admission
+    refill mixes stage-0 rookies with mid-cascade veterans in one
+    buffer, DESIGN.md §8).  Scorers without one cannot serve
+    ``run_stream``.
     """
 
     fn: Callable
     prepare: Callable
     width: int
     block_n: int | None = None
+    lane_fn: Callable | None = None
 
 
 def matrix_stage_scorer(dplan: DevicePlan) -> StageScorer:
@@ -163,7 +191,14 @@ def matrix_stage_scorer(dplan: DevicePlan) -> StageScorer:
         xr = jnp.take(x, rows, axis=0)  # OOB (trash) indices clamp
         return jax.lax.dynamic_slice(xr, (0, t0), (xr.shape[0], W))
 
-    return StageScorer(fn=fn, prepare=prepare, width=W)
+    def lane_fn(x, rows, t0_lane, n_valid):
+        # per-lane slab: lane i reads columns [t0_lane[i], t0_lane[i] + W)
+        # — always in range because x is padded to T_pad
+        xr = jnp.take(x, rows, axis=0)
+        idx = t0_lane[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+        return jnp.take_along_axis(xr, idx, axis=1)
+
+    return StageScorer(fn=fn, prepare=prepare, width=W, lane_fn=lane_fn)
 
 
 def tree_stage_scorer(
@@ -199,7 +234,25 @@ def tree_stage_scorer(
             n_valid=n_valid,
         )
 
-    return StageScorer(fn=fn, prepare=prepare, width=W, block_n=block_n)
+    def lane_fn(x, rows, t0_lane, n_valid):
+        # per-lane slab gather: lane i walks trees [t0_lane[i], +W).  Tree
+        # scoring is a pure leaf SELECT (compare -> index -> lookup), so
+        # this jnp formulation is bit-identical to the Pallas kernel's
+        # onehot @ LUT — same comparisons at the same dtype, same leaf.
+        xr = jnp.take(x, rows, axis=0).astype(leaves_p.dtype)  # (cap, d)
+        pos = t0_lane[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+        f = jnp.take(feats_p, pos, axis=0)  # (cap, W, depth)
+        th = jnp.take(thrs_p, pos, axis=0).astype(leaves_p.dtype)
+        lv = jnp.take(leaves_p, pos, axis=0)  # (cap, W, n_leaves)
+        idx = jnp.zeros(pos.shape, dtype=jnp.int32)
+        for j in range(depth):
+            xj = jnp.take_along_axis(xr, f[:, :, j], axis=1)  # (cap, W)
+            idx = 2 * idx + (xj > th[:, :, j]).astype(jnp.int32)
+        return jnp.take_along_axis(lv, idx[:, :, None], axis=2)[:, :, 0]
+
+    return StageScorer(
+        fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn
+    )
 
 
 def lattice_stage_scorer(
@@ -229,7 +282,82 @@ def lattice_stage_scorer(
             n_valid=n_valid,
         )
 
-    return StageScorer(fn=fn, prepare=prepare, width=W, block_n=block_n)
+    def lane_fn(x, rows, t0_lane, n_valid):
+        # per-lane slab gather + the kernel's interleaved-doubling corner
+        # weights, finished with the same (2**S,) contraction per lane
+        xr = jnp.take(x, rows, axis=0)  # (cap, d)
+        cap = xr.shape[0]
+        pos = t0_lane[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+        th = jnp.take(theta_p, pos, axis=0).astype(xr.dtype)  # (cap, W, p)
+        f = jnp.take(feats_p, pos, axis=0).astype(jnp.int32)  # (cap, W, S)
+        w = jnp.ones((cap, W, 1), dtype=xr.dtype)
+        for j in range(S_feats):
+            xj = jnp.take_along_axis(xr, f[:, :, j], axis=1)[:, :, None]
+            w = jnp.stack([w * (1.0 - xj), w * xj], axis=-1).reshape(
+                cap, W, -1
+            )
+        return jnp.einsum("cwp,cwp->cw", w, th)
+
+    return StageScorer(
+        fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn
+    )
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Result of a streaming (continuous-batching) run, DESIGN.md §8.
+
+    Per-row results mirror ``ExecutorResult``; the streaming-specific
+    fields are the loop-step timeline: ``admit_step[i]`` is the loop step
+    at which row i left the admission ring for a survivor slot,
+    ``done_step[i]`` the step at which its decision was recorded, and
+    ``occupancy[s]`` the live slot count at step s (reconstructed
+    host-side from admit/done — a lane is live at every step in
+    [admit, done]).  Latency in steps is ``done_step - arrival + 1``.
+    ``chunk_stats`` stays empty (stages are mixed per step); billing uses
+    the same block-guard accounting as the batch path, applied to the
+    per-step live count.
+    """
+
+    decisions: np.ndarray  # (n,) bool
+    exit_step: np.ndarray  # (n,) int64, 1-based; T if never exited
+    g_final: np.ndarray  # (n,) float32
+    admit_step: np.ndarray  # (n,) int64 — loop step of slot admission
+    done_step: np.ndarray  # (n,) int64 — loop step of the decision
+    steps_run: int  # total loop steps executed
+    occupancy: np.ndarray  # (steps_run,) int64 live slots per step
+    capacity: int  # survivor-slot capacity (occupancy denominator)
+    scores_computed: int
+    scores_possible: int
+    chunk_stats: list = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean live-slot fraction over the run's loop steps."""
+        if self.steps_run == 0:
+            return 0.0
+        return float(self.occupancy.mean()) / max(self.capacity, 1)
+
+    @property
+    def latency_steps(self) -> np.ndarray:
+        """Admission wait + service, in loop steps (admission-relative:
+        callers add their own queue wait before the ring)."""
+        return self.done_step - self.admit_step + 1
+
+
+def stream_occupancy(
+    admit_step: np.ndarray, done_step: np.ndarray, steps_run: int
+) -> np.ndarray:
+    """(steps_run,) live-slot count per loop step from the admit/done
+    timeline: a row occupies its slot (and is scored) at every step in
+    [admit, done].  Shared by the executors' billing, the streaming
+    benchmark and the tests."""
+    occ = np.zeros(steps_run + 1, dtype=np.int64)
+    if steps_run == 0 or admit_step.size == 0:
+        return occ[:steps_run]
+    np.add.at(occ, admit_step, 1)
+    np.add.at(occ, done_step + 1, -1)
+    return np.cumsum(occ[:steps_run])
 
 
 class DeviceExecutor:
@@ -267,6 +395,7 @@ class DeviceExecutor:
         self.interpret = INTERPRET if interpret is None else interpret
         self.traces = 0
         self._jit = jax.jit(self._program)
+        self._stream_jit = jax.jit(self._stream_program, static_argnums=(0,))
 
     def _cap(self, n: int) -> int:
         b = self.block_n
@@ -439,5 +568,208 @@ class DeviceExecutor:
             g_final=g,
             chunk_stats=chunk_stats,
             scores_computed=sum(c.scores_computed for c in chunk_stats),
+            scores_possible=n * T,
+        )
+
+    # -- streaming admission (continuous batching, DESIGN.md §8) --------
+
+    def _stream_program(self, cap, x, ring_ids, arrivals, n_pending):
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        dp = self.dplan
+        S, W, T = dp.S, dp.W, dp.plan.T
+        R = ring_ids.shape[0]  # ring capacity == output size; R = trash id
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        eps_pos = jnp.asarray(dp.eps_pos)
+        eps_neg = jnp.asarray(dp.eps_neg)
+        col_valid = jnp.asarray(dp.col_valid)
+        beta = jnp.float32(dp.plan.beta)
+        lane = jnp.arange(cap, dtype=jnp.int32)
+        ridx = jnp.arange(R, dtype=jnp.int32)
+        lane_scorer = self.scorer.lane_fn
+
+        def body(carry):
+            (step, rows, stage, g, n_live, head,
+             dec, ex, gout, admit, done) = carry
+            # admission refill: open slots at the BACK of the front-packed
+            # buffers take the next pending rows whose arrival step has
+            # come (arrivals are nondecreasing — the ring is the server's
+            # arrival-order queue), entering at cascade stage 0
+            arrived = jnp.sum(
+                (ridx >= head) & (ridx < n_pending) & (arrivals <= step),
+                dtype=jnp.int32,
+            )
+            k = jnp.minimum(cap - n_live, arrived)
+            src = jnp.clip(head + (lane - n_live), 0, R - 1)
+            is_new = (lane >= n_live) & (lane < n_live + k)
+            rows = jnp.where(is_new, jnp.take(ring_ids, src), rows)
+            stage = jnp.where(is_new, 0, stage)
+            g = jnp.where(is_new, 0.0, g)
+            admit = admit.at[jnp.where(is_new, rows, R)].set(
+                step, mode="drop"
+            )
+            n_live = n_live + k
+            head = head + k
+            # mixed-stage fused stage: every per-stage quantity of the
+            # batch body (slab start, thresholds, column validity) is
+            # gathered per LANE from the DevicePlan stage tables
+            t0_lane = jnp.take(stage_t0, stage)
+            scores = lane_scorer(x, rows, t0_lane, n_live)
+            scores = jnp.where(
+                jnp.take(col_valid, stage, axis=0), scores, 0.0
+            )
+            g_new, active, dpos, ex_rel = cascade_lane_pallas(
+                g,
+                scores,
+                jnp.take(eps_pos, stage, axis=0),
+                jnp.take(eps_neg, stage, axis=0),
+                block_n=self.block_n,
+                interpret=self.interpret,
+                n_valid=n_live,
+            )
+            active_b = active.astype(bool)
+            lane_valid = lane < n_live
+            newly = lane_valid & (ex_rel > 0)
+            # lanes that finished the cascade without exiting: classified
+            # by the full ensemble score, same as the batch epilogue
+            ran_out = lane_valid & active_b & (stage >= S - 1)
+            fin = newly | ran_out
+            dec_val = jnp.where(newly, dpos.astype(bool), g_new >= beta)
+            ex_val = jnp.where(newly, ex_rel + t0_lane, T)
+            scat = jnp.where(fin, rows, R)
+            dec = dec.at[scat].set(dec_val, mode="drop")
+            ex = ex.at[scat].set(ex_val, mode="drop")
+            gout = gout.at[scat].set(g_new, mode="drop")
+            done = done.at[scat].set(step, mode="drop")
+            # cumsum-prefix compaction (veterans advance one stage); the
+            # freed back slots are what the NEXT step's refill fills
+            keep = lane_valid & active_b & ~ran_out
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            pack = jnp.where(keep, pos, cap)
+            rows = (
+                jnp.full((cap,), R, dtype=jnp.int32)
+                .at[pack]
+                .set(rows, mode="drop")
+            )
+            stage = (
+                jnp.zeros((cap,), dtype=jnp.int32)
+                .at[pack]
+                .set(stage + 1, mode="drop")
+            )
+            g = (
+                jnp.zeros((cap,), dtype=jnp.float32)
+                .at[pack]
+                .set(g_new, mode="drop")
+            )
+            return (
+                step + 1, rows, stage, g,
+                keep.sum(dtype=jnp.int32), head,
+                dec, ex, gout, admit, done,
+            )
+
+        def cond(carry):
+            _, _, _, _, n_live, head = carry[:6]
+            # quit when you can, stream-wide: no live lanes AND an empty
+            # ring.  (Live-free steps with pending future arrivals idle at
+            # block-guard cost zero.)
+            return (n_live > 0) | (head < n_pending)
+
+        init = (
+            jnp.int32(0),
+            jnp.full((cap,), R, dtype=jnp.int32),
+            jnp.zeros((cap,), dtype=jnp.int32),
+            jnp.zeros((cap,), dtype=jnp.float32),
+            jnp.int32(0),
+            jnp.int32(0),
+            jnp.zeros((R,), dtype=jnp.bool_),
+            jnp.full((R,), T, dtype=jnp.int32),
+            jnp.zeros((R,), dtype=jnp.float32),
+            jnp.zeros((R,), dtype=jnp.int32),
+            jnp.zeros((R,), dtype=jnp.int32),
+        )
+        (s_f, _, _, _, _, _, dec, ex, gout, admit, done) = jax.lax.while_loop(
+            cond, body, init
+        )
+        return dec, ex, gout, admit, done, s_f
+
+    def run_stream(
+        self,
+        batch,
+        n: int,
+        arrivals=None,
+        capacity: int | None = None,
+        ring_capacity: int | None = None,
+        prepared: bool = False,
+    ) -> StreamResult:
+        """Continuously stream ``n`` rows through the survivor buffers.
+
+        ``arrivals`` (optional, (n,) nondecreasing ints) gates admission:
+        row i cannot be admitted before loop step ``arrivals[i]`` — the
+        on-device replay of a request arrival trace (None = everyone is
+        already waiting).  ``capacity`` pins the survivor-slot count (the
+        concurrency, block-padded; default: all ``n`` rows at once, which
+        degenerates to the batch path plus refill plumbing) and
+        ``ring_capacity`` pins the admission-ring size (default ``n``) —
+        a server passes both fixed so every wave reuses ONE compiled
+        trace per (cap, T, chunk_t).  ``prepared=True`` means ``batch``
+        is already the scorer-prepared operand.
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        if self.scorer.lane_fn is None:
+            raise ValueError(
+                "run_stream needs a StageScorer with lane_fn (per-lane "
+                "stage scoring); this scorer only supports batch stages"
+            )
+        if n == 0:
+            return StreamResult(
+                decisions=np.zeros(0, dtype=bool),
+                exit_step=np.zeros(0, dtype=np.int64),
+                g_final=np.zeros(0, dtype=np.float32),
+                admit_step=np.zeros(0, dtype=np.int64),
+                done_step=np.zeros(0, dtype=np.int64),
+                steps_run=0,
+                occupancy=np.zeros(0, dtype=np.int64),
+                capacity=self._cap(capacity or 1),
+                scores_computed=0,
+                scores_possible=0,
+            )
+        cap = self._cap(capacity or n)
+        R = max(n, int(ring_capacity or n))
+        x = batch if prepared else self.scorer.prepare(batch)
+        if x.shape[0] < R:
+            x = jnp.pad(x, ((0, R - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+        ring_ids = np.full(R, R, dtype=np.int32)
+        ring_ids[:n] = np.arange(n, dtype=np.int32)
+        arr = (
+            np.zeros(n, dtype=np.int32)
+            if arrivals is None
+            else np.asarray(arrivals, dtype=np.int32)
+        )
+        assert arr.shape == (n,)
+        assert (np.diff(arr) >= 0).all(), "arrivals must be nondecreasing"
+        arr_pad = np.zeros(R, dtype=np.int32)
+        arr_pad[:n] = arr
+        dec, ex, gout, admit, done, s_f = self._stream_jit(
+            cap, x, jnp.asarray(ring_ids), jnp.asarray(arr_pad), n
+        )
+        steps_run = int(s_f)
+        admit = np.asarray(admit, dtype=np.int64)[:n]
+        done = np.asarray(done, dtype=np.int64)[:n]
+        occ = stream_occupancy(admit, done, steps_run)
+        # block-guard billing per loop step, same accounting as the batch
+        # path: the live lanes are front-packed, so a guarded kernel
+        # computes ceil(live / block) blocks of the W-wide slab
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        scores_computed = int(((-(-occ // bn)) * bn * W).sum())
+        return StreamResult(
+            decisions=np.asarray(dec)[:n].astype(bool),
+            exit_step=np.asarray(ex, dtype=np.int64)[:n],
+            g_final=np.asarray(gout)[:n],
+            admit_step=admit,
+            done_step=done,
+            steps_run=steps_run,
+            occupancy=occ,
+            capacity=cap,
+            scores_computed=scores_computed,
             scores_possible=n * T,
         )

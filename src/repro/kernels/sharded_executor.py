@@ -55,12 +55,14 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
-from repro.kernels.cascade_kernel import cascade_chunk_pallas
+from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
 from repro.kernels.device_executor import (
     DEFAULT_BLOCK_N,
     INTERPRET,
     DevicePlan,
     StageScorer,
+    StreamResult,
+    stream_occupancy,
 )
 
 __all__ = ["ShardedDeviceExecutor", "critical_blocks"]
@@ -125,6 +127,7 @@ class ShardedDeviceExecutor:
         self.traces = 0
         self.last_run_info: dict | None = None
         self._jit = jax.jit(self._program)
+        self._stream_jit = jax.jit(self._stream_program, static_argnums=(0,))
 
     def _cap_local(self, n: int) -> int:
         """Per-shard buffer capacity: the balanced share, block-padded."""
@@ -425,5 +428,274 @@ class ShardedDeviceExecutor:
             g_final=gout,
             chunk_stats=chunk_stats,
             scores_computed=sum(c.scores_computed for c in chunk_stats),
+            scores_possible=n * T,
+        )
+
+    # -- streaming admission, shard-local (DESIGN.md §8) ----------------
+
+    def _stream_per_shard(self, cap_l, ring_x, ring_ids, arrivals, counts):
+        """One shard's streaming loop: the single-device streaming body
+        (admission refill -> per-lane-stage score/decide -> retire ->
+        compaction) over shard-LOCAL buffers and a shard-local admission
+        ring, with the mesh-wide exit condition reading the psum'd
+        pending + live total.
+        """
+        dp = self.dplan
+        S, W, T = dp.S, dp.W, dp.plan.T
+        shards = self.shards
+        ring_x = ring_x[0]
+        ring_ids = ring_ids[0]
+        arrivals = arrivals[0]
+        cnt = counts[0]
+        R_l = ring_ids.shape[0]
+        R_g = shards * R_l  # == the trash/sentinel id
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        eps_pos = jnp.asarray(dp.eps_pos)
+        eps_neg = jnp.asarray(dp.eps_neg)
+        col_valid = jnp.asarray(dp.col_valid)
+        beta = jnp.float32(dp.plan.beta)
+        lane = jnp.arange(cap_l, dtype=jnp.int32)
+        ridx = jnp.arange(R_l, dtype=jnp.int32)
+        lane_scorer = self.scorer.lane_fn
+
+        def body(carry):
+            (step, xbuf, stage, gbuf, idbuf, n_live, head, total,
+             dec, ex, gout, admit, done) = carry
+            # shard-local admission: freed back slots take the next
+            # arrived rows from THIS shard's ring (no collectives)
+            arrived = jnp.sum(
+                (ridx >= head) & (ridx < cnt) & (arrivals <= step),
+                dtype=jnp.int32,
+            )
+            k = jnp.minimum(cap_l - n_live, arrived)
+            src = jnp.clip(head + (lane - n_live), 0, R_l - 1)
+            is_new = (lane >= n_live) & (lane < n_live + k)
+            xbuf = jnp.where(
+                is_new.reshape((cap_l,) + (1,) * (xbuf.ndim - 1)),
+                jnp.take(ring_x, src, axis=0),
+                xbuf,
+            )
+            idbuf = jnp.where(is_new, jnp.take(ring_ids, src), idbuf)
+            stage = jnp.where(is_new, 0, stage)
+            gbuf = jnp.where(is_new, 0.0, gbuf)
+            admit = admit.at[jnp.where(is_new, idbuf, R_g)].set(
+                step, mode="drop"
+            )
+            n_live = n_live + k
+            head = head + k
+            # mixed-stage fused stage, per-lane tables (device_executor
+            # _stream_program mirrors this body on one device — a
+            # semantics change there must be replayed here)
+            t0_lane = jnp.take(stage_t0, stage)
+            scores = lane_scorer(xbuf, lane, t0_lane, n_live)
+            scores = jnp.where(
+                jnp.take(col_valid, stage, axis=0), scores, 0.0
+            )
+            g_new, active, dpos, ex_rel = cascade_lane_pallas(
+                gbuf,
+                scores,
+                jnp.take(eps_pos, stage, axis=0),
+                jnp.take(eps_neg, stage, axis=0),
+                block_n=self.block_n,
+                interpret=self.interpret,
+                n_valid=n_live,
+            )
+            active_b = active.astype(bool)
+            lane_valid = lane < n_live
+            newly = lane_valid & (ex_rel > 0)
+            ran_out = lane_valid & active_b & (stage >= S - 1)
+            fin = newly | ran_out
+            dec_val = jnp.where(
+                newly, dpos != 0, g_new >= beta
+            ).astype(jnp.int32)
+            ex_val = jnp.where(newly, ex_rel + t0_lane, T)
+            scat = jnp.where(fin, idbuf, R_g)
+            dec = dec.at[scat].set(dec_val, mode="drop")
+            ex = ex.at[scat].set(ex_val, mode="drop")
+            gout = gout.at[scat].set(g_new, mode="drop")
+            done = done.at[scat].set(step, mode="drop")
+            # cumsum-prefix compaction, local to the shard
+            keep = lane_valid & active_b & ~ran_out
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            pack = jnp.where(keep, pos, cap_l)
+            xbuf = jnp.zeros_like(xbuf).at[pack].set(xbuf, mode="drop")
+            gbuf = jnp.zeros_like(gbuf).at[pack].set(g_new, mode="drop")
+            stage = (
+                jnp.zeros((cap_l,), dtype=jnp.int32)
+                .at[pack]
+                .set(stage + 1, mode="drop")
+            )
+            idbuf = (
+                jnp.full((cap_l,), R_g, dtype=jnp.int32)
+                .at[pack]
+                .set(idbuf, mode="drop")
+            )
+            n_live = keep.sum(dtype=jnp.int32)
+            # mesh-wide census: the psum'd total now counts pending + live
+            total = jax.lax.psum(n_live + (cnt - head), DATA_AXIS)
+            return (
+                step + 1, xbuf, stage, gbuf, idbuf, n_live, head, total,
+                dec, ex, gout, admit, done,
+            )
+
+        def cond(carry):
+            total = carry[7]
+            # quit when you can, mesh-wide: every shard is out of both
+            # live lanes and pending ring entries
+            return total > 0
+
+        total0 = jax.lax.psum(cnt, DATA_AXIS)
+        init = (
+            jnp.int32(0),
+            jnp.zeros((cap_l,) + ring_x.shape[1:], dtype=ring_x.dtype),
+            jnp.zeros((cap_l,), dtype=jnp.int32),
+            jnp.zeros((cap_l,), dtype=jnp.float32),
+            jnp.full((cap_l,), R_g, dtype=jnp.int32),
+            jnp.int32(0),
+            jnp.int32(0),
+            total0,
+            jnp.zeros((R_g,), dtype=jnp.int32),
+            jnp.zeros((R_g,), dtype=jnp.int32),
+            jnp.zeros((R_g,), dtype=jnp.float32),
+            jnp.zeros((R_g,), dtype=jnp.int32),
+            jnp.zeros((R_g,), dtype=jnp.int32),
+        )
+        (s_f, _, _, _, _, _, _, _, dec, ex, gout, admit, done) = (
+            jax.lax.while_loop(cond, body, init)
+        )
+        # exactly-once id scatter per shard: psum assembles the stream
+        dec = jax.lax.psum(dec, DATA_AXIS)
+        ex = jax.lax.psum(ex, DATA_AXIS)
+        gout = jax.lax.psum(gout, DATA_AXIS)
+        admit = jax.lax.psum(admit, DATA_AXIS)
+        done = jax.lax.psum(done, DATA_AXIS)
+        one = lambda a: jnp.reshape(a, (1,) + a.shape)  # noqa: E731
+        return (
+            one(dec), one(ex), one(gout), one(admit), one(done), one(s_f),
+        )
+
+    def _stream_program(self, cap_l, x, ring_ids, arrivals, counts):
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        shards = self.shards
+        R_l = ring_ids.shape[1]
+        # distribute the ring operands: each shard's ring holds ITS
+        # pending rows (gathered by id outside shard_map, like the batch
+        # path, so the per-shard working set is O(R_l))
+        ring_x = jnp.take(x, ring_ids.reshape(-1), axis=0).reshape(
+            (shards, R_l) + x.shape[1:]
+        )
+        sharded = shard_map(
+            lambda rx, ri, ar, ct: self._stream_per_shard(
+                cap_l, rx, ri, ar, ct
+            ),
+            mesh=self.mesh,
+            in_specs=(P(DATA_AXIS),) * 4,
+            out_specs=(P(DATA_AXIS),) * 6,
+            check_rep=False,
+        )
+        return sharded(ring_x, ring_ids, arrivals, counts)
+
+    def run_stream(
+        self,
+        batch,
+        n: int,
+        arrivals=None,
+        capacity: int | None = None,
+        ring_capacity: int | None = None,
+        prepared: bool = False,
+    ) -> StreamResult:
+        """Continuously stream ``n`` rows, data-parallel over the mesh.
+
+        Same contract as ``DeviceExecutor.run_stream`` with the admission
+        ring split shard-local: pending rows are dealt ROUND-ROBIN in
+        arrival order (request i waits in shard ``i % shards``'s ring),
+        so every shard keeps receiving admissible work as the trace
+        plays out — a contiguous split would starve all but one shard at
+        a time.  ``capacity`` is the GLOBAL slot count (cap/shards slots
+        per shard); per-shard occupancy lands in ``last_run_info``.
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        if self.scorer.lane_fn is None:
+            raise ValueError(
+                "run_stream needs a StageScorer with lane_fn (per-lane "
+                "stage scoring); this scorer only supports batch stages"
+            )
+        shards = self.shards
+        if n == 0:
+            return StreamResult(
+                decisions=np.zeros(0, dtype=bool),
+                exit_step=np.zeros(0, dtype=np.int64),
+                g_final=np.zeros(0, dtype=np.float32),
+                admit_step=np.zeros(0, dtype=np.int64),
+                done_step=np.zeros(0, dtype=np.int64),
+                steps_run=0,
+                occupancy=np.zeros(0, dtype=np.int64),
+                capacity=self._cap(capacity or 1),
+                scores_computed=0,
+                scores_possible=0,
+            )
+        cap_l = self._cap_local(capacity or n)
+        R_l = -(-max(n, int(ring_capacity or n)) // shards)
+        R_g = shards * R_l
+        x = batch if prepared else self.scorer.prepare(batch)
+        if x.shape[0] < R_g:
+            x = jnp.pad(x, ((0, R_g - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+        arr = (
+            np.zeros(n, dtype=np.int32)
+            if arrivals is None
+            else np.asarray(arrivals, dtype=np.int32)
+        )
+        assert arr.shape == (n,)
+        assert (np.diff(arr) >= 0).all(), "arrivals must be nondecreasing"
+        # round-robin deal: shard k's ring slot i holds request i*shards+k
+        ring_ids = np.full((shards, R_l), R_g, dtype=np.int32)
+        ring_arr = np.zeros((shards, R_l), dtype=np.int32)
+        counts = np.zeros(shards, dtype=np.int32)
+        for k in range(shards):
+            ids_k = np.arange(k, n, shards, dtype=np.int32)
+            ring_ids[k, : ids_k.size] = ids_k
+            ring_arr[k, : ids_k.size] = arr[ids_k]
+            counts[k] = ids_k.size
+        dec, ex, gout, admit, done, s_f = self._stream_jit(
+            cap_l,
+            x,
+            jnp.asarray(ring_ids),
+            jnp.asarray(ring_arr),
+            jnp.asarray(counts),
+        )
+        steps_run = int(np.asarray(s_f)[0])
+        dec = np.asarray(dec)[0][:n].astype(bool)
+        ex = np.asarray(ex, dtype=np.int64)[0][:n]
+        gout = np.asarray(gout)[0][:n]
+        admit = np.asarray(admit, dtype=np.int64)[0][:n]
+        done = np.asarray(done, dtype=np.int64)[0][:n]
+        # per-shard block-guard billing, reconstructed from the timeline
+        # (the host knows the round-robin deal, so shard membership is
+        # a function of the row id)
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        per_shard_occ = np.zeros((shards, steps_run), dtype=np.int64)
+        scores_computed = 0
+        for k in range(shards):
+            sel = np.arange(k, n, shards)
+            occ_k = stream_occupancy(admit[sel], done[sel], steps_run)
+            per_shard_occ[k] = occ_k
+            scores_computed += int(((-(-occ_k // bn)) * bn * W).sum())
+        self.last_run_info = {
+            "shards": shards,
+            "stream_steps": steps_run,
+            "per_shard_occupancy": per_shard_occ,
+            "per_shard_admitted": counts.copy(),
+        }
+        return StreamResult(
+            decisions=dec,
+            exit_step=ex,
+            g_final=gout,
+            admit_step=admit,
+            done_step=done,
+            steps_run=steps_run,
+            occupancy=per_shard_occ.sum(axis=0),
+            capacity=shards * cap_l,
+            scores_computed=scores_computed,
             scores_possible=n * T,
         )

@@ -17,12 +17,14 @@ Usage:
 between pairs) and aggregates into benchmarks/results/dryrun_<mesh>.json.
 """
 
-import argparse
-import json
-import pathlib
-import subprocess
-import sys
-import time
+# imports must follow the XLA_FLAGS assignment above (jax reads it at
+# first import), so E402 is deliberate here
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
 
 
 def run_pair(arch: str, shape: str, multi_pod: bool, skip_cost: bool = False,

@@ -31,7 +31,7 @@ from repro.ensembles.gbt import train_gbt
 from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble
 from repro.kernels import device_executor, ops
 from repro.serving.engine import BACKENDS as POLICIES
-from repro.serving.engine import QWYCServer
+from repro.serving.engine import QWYCServer, StreamingServer
 
 # row-block size for the lazy chunked score kernels: survivors are padded
 # up to a multiple of this, so smaller blocks waste less late-stage compute
@@ -91,6 +91,28 @@ def build_parser() -> argparse.ArgumentParser:
         help="recompute early-exited rows' full scores to measure diff vs "
         "full ensemble (extra work that can exceed the lazy savings; off "
         "by default so the CLI reflects production serving cost)",
+    )
+    ap.add_argument(
+        "--streaming", action="store_true",
+        help="continuous batching (DESIGN.md §8): requests wait in an "
+        "arrival-order queue and the device admission ring refills freed "
+        "survivor slots mid-cascade; needs an on-device --backend",
+    )
+    ap.add_argument(
+        "--max-wait", type=float, default=None,
+        help="streaming admission deadline in stage steps: launch a "
+        "partial wave once the oldest queued request has waited this long "
+        "(default: wait for a full window)",
+    )
+    ap.add_argument(
+        "--stream-window", type=int, default=None,
+        help="streaming admission-ring size per device wave (default: "
+        "4x the slot capacity)",
+    )
+    ap.add_argument(
+        "--arrival-rate", type=float, default=4.0,
+        help="streaming Poisson arrival rate in requests per stage step "
+        "(fixed seed, so the trace — and the billing — is deterministic)",
     )
     return ap
 
@@ -243,26 +265,64 @@ def main() -> None:
         producer_kw["device_scorer_factory"] = make_device_scorer_factory(
             qwyc.order
         )
-    server = QWYCServer(
-        qwyc, batch_size=args.batch_size, backend=policy,
+    common_kw = dict(
+        batch_size=args.batch_size,
         chunk_t=args.chunk_t, audit_full_scores=args.audit or args.eager,
         score_block_n=1 if args.eager else SCORE_BLOCK_N,
         exec_backend=backend, backend_opts=backend_opts,
         **producer_kw,
     )
+    if args.streaming:
+        if not getattr(backend.capabilities, "streaming", False):
+            ap.error(
+                f"--streaming needs an on-device backend (resolved "
+                f"{backend.name!r}; see Backend.capabilities.streaming)"
+            )
+        server = StreamingServer(
+            qwyc, window=args.stream_window, max_wait=args.max_wait,
+            **common_kw,
+        )
+        # deterministic Poisson arrival trace (stage-step units): the
+        # same seed the streaming benchmark uses, so the CLI numbers are
+        # reproducible run to run
+        arr_rng = np.random.default_rng(2028)
+        arrivals = np.cumsum(
+            arr_rng.exponential(1.0 / args.arrival_rate, size=len(ds.y_test))
+        )
+    else:
+        server = QWYCServer(qwyc, backend=policy, **common_kw)
+        arrivals = None
     if server.mesh is not None:
         print(f"[serve] sharded serving mesh: {server.mesh}")
     for i in range(len(ds.y_test)):
-        server.submit(ds.x_test[i])
+        if arrivals is None:
+            server.submit(ds.x_test[i])
+        else:
+            server.submit(ds.x_test[i], arrival=arrivals[i])
     results = server.drain()
 
     st = server.stats
     acc = np.mean(
         [r["decision"] == bool(y) for r, y in zip(results, ds.y_test)]
     )
+    if args.streaming:
+        print(
+            f"[serve] streaming: {st.admitted_rows} admitted over "
+            f"{st.stream_steps} stage steps in {st.n_batches} wave(s)  "
+            f"mean occupancy {st.mean_occupancy:.1%}\n"
+            f"        latency (steps) mean {st.latency_mean:.1f}  "
+            f"p50 {st.latency_p50:.0f}  p95 {st.latency_p95:.0f}  "
+            f"p99 {st.latency_p99:.0f}"
+            + (
+                f"  (max_wait={args.max_wait})"
+                if args.max_wait is not None
+                else ""
+            )
+        )
     print(
         f"[serve] {st.n_requests} requests in {st.n_batches} batches "
-        f"({server.exec.name} backend, {policy} policy, "
+        f"({server.exec.name} backend, "
+        f"{'streaming' if args.streaming else policy + ' policy'}, "
         f"{'eager' if args.eager else 'lazy'}"
         f"{f', {server.n_shards} shards' if server.n_shards > 1 else ''})\n"
         f"        mean models {st.mean_models:.2f}/{args.T}  "

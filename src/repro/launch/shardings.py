@@ -146,13 +146,13 @@ def tree_shardings(tree, mesh, pspec_fn) -> Any:
 
 def param_shardings(abs_params, mesh, data_ax):
     return tree_shardings(
-        abs_params, mesh, lambda p, l: param_pspec(p, l, mesh, data_ax)
+        abs_params, mesh, lambda p, lbl: param_pspec(p, lbl, mesh, data_ax)
     )
 
 
 def cache_shardings(abs_cache, mesh, batch_ax, seq_ax):
     return tree_shardings(
-        abs_cache, mesh, lambda p, l: cache_pspec(p, l, mesh, batch_ax, seq_ax)
+        abs_cache, mesh, lambda p, lbl: cache_pspec(p, lbl, mesh, batch_ax, seq_ax)
     )
 
 

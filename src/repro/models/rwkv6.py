@@ -16,7 +16,6 @@ Cache: RWKVCache(state (B, H, hd, hd), last_x (B, d)).
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

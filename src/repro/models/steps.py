@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import forward, init_cache, init_params
+from repro.models.transformer import forward, init_params
 from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
 
 Params = dict[str, Any]

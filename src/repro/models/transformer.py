@@ -22,7 +22,6 @@ the token embeddings.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -51,6 +51,13 @@ Filter-and-Score mode (neg_only): positively classified requests get the
 full ensemble score attached, matching the paper's production setting —
 lazily, since a neg_only positive by construction ran the whole cascade
 (its ``g_final`` IS the full score).
+
+``StreamingServer`` (DESIGN.md §8) replaces batch-at-a-time flushing with
+continuous batching: requests carry arrival steps, wait in an
+arrival-order queue, and the on-device admission ring refills freed
+survivor slots mid-cascade (``run_stream``), so tail requests stop
+holding whole batches hostage.  Per-request enqueue->decision latency
+(in deterministic stage steps) and slot occupancy land in ``ServeStats``.
 """
 
 from __future__ import annotations
@@ -69,7 +76,7 @@ from repro.core.qwyc import QWYCModel
 from repro.kernels import ops
 from repro.kernels.device_executor import DevicePlan, matrix_stage_scorer
 
-__all__ = ["ServeStats", "QWYCServer"]
+__all__ = ["ServeStats", "QWYCServer", "StreamingServer"]
 
 BACKENDS = ("cascade-scan", "kernel", "sorted-kernel")
 
@@ -89,6 +96,14 @@ class ServeStats:
     audit_scores: int = 0  # extra scores for diff auditing (not serving work)
     chunk_survivors: list[int] = dataclasses.field(default_factory=list)
     # chunk_survivors[k] = total rows that entered stage k, summed over batches
+    # streaming accounting (StreamingServer; all in deterministic stage
+    # steps — the perf gate locks these, never wall-clock)
+    admitted_rows: int = 0  # rows admitted into stream survivor slots
+    stream_steps: int = 0  # total streaming loop steps executed
+    stream_slot_steps: int = 0  # sum over steps of live slots (occupancy mass)
+    stream_cap_steps: int = 0  # sum over steps of slot capacity
+    latency_steps: list[int] = dataclasses.field(default_factory=list)
+    # latency_steps[i] = enqueue->decision latency of request i, in steps
 
     @property
     def mean_models(self) -> float:
@@ -106,6 +121,36 @@ class ServeStats:
     def compute_fraction(self) -> float:
         """Scores actually produced / scores the eager path would produce."""
         return self.scores_computed / max(self.scores_possible, 1)
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean live-slot fraction over all streaming loop steps."""
+        return self.stream_slot_steps / max(self.stream_cap_steps, 1)
+
+    def latency_pct(self, q: float) -> float:
+        """q-th percentile of per-request enqueue->decision latency
+        (stage steps)."""
+        if not self.latency_steps:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latency_steps), q))
+
+    @property
+    def latency_mean(self) -> float:
+        if not self.latency_steps:
+            return 0.0
+        return float(np.mean(self.latency_steps))
+
+    @property
+    def latency_p50(self) -> float:
+        return self.latency_pct(50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self.latency_pct(95)
+
+    @property
+    def latency_p99(self) -> float:
+        return self.latency_pct(99)
 
 
 class QWYCServer:
@@ -341,6 +386,17 @@ class QWYCServer:
             self._dev = (executor, scorer, eager_matrix, key_fn)
         return self._dev
 
+    def _eager_or_raw(self, xb, eager_matrix):
+        """(batch_operand, ordered|None) for an on-device run: the eager
+        path materializes the (N, T) score matrix once per batch and
+        permutes it to cascade order (the matrix scorer's operand and the
+        audit/full-score source); lazy scorers consume raw features."""
+        if not eager_matrix:
+            return xb, None
+        scores = np.asarray(self.score_fn(xb))  # (N, T) original order
+        ordered = scores[:, self.qwyc.order]
+        return ordered, ordered
+
     def _run_device(self, xb: np.ndarray, n: int):
         """Device fast path for one batch -> (result, ordered|None, billed).
 
@@ -350,13 +406,7 @@ class QWYCServer:
         """
         executor, scorer, eager_matrix, key_fn = self._device_state()
         cap = executor._cap(max(n, self.flush_size))
-        if eager_matrix:
-            scores = np.asarray(self.score_fn(xb))  # (N, T) original order
-            ordered = scores[:, self.qwyc.order]
-            batch = ordered
-        else:
-            ordered = None
-            batch = xb
+        batch, ordered = self._eager_or_raw(xb, eager_matrix)
         row_order = None
         key_scores = 0
         prepared = False
@@ -389,8 +439,6 @@ class QWYCServer:
         xb = np.stack(self._queue)
         self._queue.clear()
         n = xb.shape[0]
-        m = self.qwyc
-        T = m.T
         plan = self.plan
 
         if self.device:
@@ -517,5 +565,147 @@ class QWYCServer:
 
     def drain(self) -> list[dict]:
         self.flush()
+        res, self._results = self._results, []
+        return res
+
+
+class StreamingServer(QWYCServer):
+    """Continuous-batching server: admit queued requests into freed
+    survivor slots mid-cascade (DESIGN.md §8).
+
+    The flush server (``QWYCServer``) serves batch-at-a-time: a flush's
+    fixed-capacity survivor buffers drain as rows exit, and the mostly
+    idle tail of the cascade holds the NEXT batch's requests hostage.
+    This server keeps an arrival-order queue, stamps every request with
+    an arrival step, and hands windows of pending requests to the
+    executor's on-device admission ring (``run_stream``): freed slots are
+    refilled mid-cascade, admitted rows start at stage 0 next to
+    mid-cascade veterans (per-lane stage index), and decisions stay
+    bit-identical per row id to the host ``ChunkedExecutor`` oracle
+    (``tests/test_streaming.py``).
+
+    * ``batch_size`` is the survivor-slot CAPACITY (the in-flight
+      concurrency; x ``shards`` under a data-parallel backend) — the
+      "equal capacity" knob the streaming benchmark compares at.
+    * ``window`` is the admission-ring size: how many queued requests one
+      device wave streams through (default ``4 x`` the slot capacity).
+      Fixed window + fixed capacity = ONE compiled trace per server
+      across all waves, asserted like the batch path's.
+    * ``max_wait`` (stage steps) is the admission deadline: a submit that
+      finds the oldest queued request waiting ``>= max_wait`` launches a
+      PARTIAL wave instead of holding out for a full window.
+    * latency is accounted end-to-end in deterministic stage steps:
+      queue wait before the wave + ring wait + service
+      (``ServeStats.latency_steps``, p50/p95/p99 properties).
+
+    Streaming admission replaces the sorting policy (the ring is the
+    arrival order), so only the ``kernel`` decide policy is accepted.
+    Requires an execution backend with the ``streaming`` capability
+    (device or sharded — the host loop has no fixed-capacity buffers to
+    refill).
+    """
+
+    def __init__(
+        self,
+        qwyc: QWYCModel,
+        *,
+        window: int | None = None,
+        max_wait: float | None = None,
+        backend: str = "kernel",
+        exec_backend="auto",
+        **kw,
+    ):
+        if backend != "kernel":
+            raise ValueError(
+                "StreamingServer: streaming admission replaces the sorting "
+                f"policy; only backend='kernel' is supported (got {backend!r})"
+            )
+        super().__init__(qwyc, backend=backend, exec_backend=exec_backend, **kw)
+        caps = self.exec.capabilities
+        if not getattr(caps, "streaming", False):
+            raise ValueError(
+                f"exec_backend {self.exec.name!r} does not support streaming "
+                "admission (needs an on-device executor with run_stream)"
+            )
+        self.window = int(window) if window else 4 * self.flush_size
+        if self.window < self.flush_size:
+            raise ValueError(
+                f"window ({self.window}) must be >= the slot capacity "
+                f"({self.flush_size}); a smaller ring can never fill the slots"
+            )
+        self.max_wait = None if max_wait is None else float(max_wait)
+        self._squeue: list[tuple[np.ndarray, float]] = []
+        self._clock = 0.0
+        # per-wave StreamResults (timeline raw material for the
+        # streaming benchmark, like ShardedDeviceExecutor.last_run_info)
+        self.stream_results: list = []
+
+    def submit(self, x: np.ndarray, arrival: float | None = None) -> None:
+        """Enqueue a request at ``arrival`` (stage-step units, must be
+        nondecreasing across submits; default: the last stamp seen).  A
+        full window — or a ``max_wait`` deadline breach — launches a
+        device wave."""
+        a = self._clock if arrival is None else float(arrival)
+        if a < self._clock:
+            raise ValueError(
+                f"arrivals must be nondecreasing (got {a} after {self._clock})"
+            )
+        self._clock = a
+        self._squeue.append((np.asarray(x, dtype=np.float32), a))
+        if len(self._squeue) >= self.window:
+            self.flush()
+        elif (
+            self.max_wait is not None
+            and a - self._squeue[0][1] >= self.max_wait
+        ):
+            self.flush()
+
+    def flush(self) -> list[dict]:
+        """Stream one window (possibly partial) of queued requests."""
+        if not self._squeue:
+            return []
+        t_start = time.time()
+        wave, self._squeue = (
+            self._squeue[: self.window],
+            self._squeue[self.window:],
+        )
+        xb = np.stack([e[0] for e in wave])
+        n = xb.shape[0]
+        base = wave[0][1]
+        arr_steps = np.floor(
+            np.array([e[1] for e in wave]) - base
+        ).astype(np.int32)
+        executor, scorer, eager_matrix, _ = self._device_state()
+        batch, ordered = self._eager_or_raw(xb, eager_matrix)
+        res = executor.run_stream(
+            batch,
+            n,
+            arrivals=arr_steps,
+            capacity=self.flush_size,
+            ring_capacity=self.window,
+        )
+        billed = n * self.qwyc.T if eager_matrix else res.scores_computed
+        audit_read = (
+            self._producers(xb)[0] if self.chunk_score_fn is not None else None
+        )
+        out = self._finish_flush(
+            t_start, xb, n, res, ordered, audit_read, billed
+        )
+        self.stream_results.append(res)
+        st = self.stats
+        st.admitted_rows += n
+        st.stream_steps += res.steps_run
+        st.stream_slot_steps += int(res.occupancy.sum())
+        st.stream_cap_steps += res.steps_run * res.capacity
+        # end-to-end latency: steps queued BEFORE the wave launched
+        # (launch = the wave's first arrival) + ring wait + service
+        st.latency_steps.extend(
+            (res.done_step - arr_steps + 1).astype(int).tolist()
+        )
+        return out
+
+    def drain(self) -> list[dict]:
+        while self._squeue:
+            self.flush()
         res, self._results = self._results, []
         return res

@@ -284,7 +284,6 @@ def test_serve_through_api_matches_direct_server():
     t, d = 18, 6
     W = rng.normal(size=(t, d))
     X = rng.normal(size=(260, d)).astype(np.float32)
-    F = (X @ W.T).astype(np.float64)
 
     def score_fn(x):
         return np.asarray(x) @ W.T

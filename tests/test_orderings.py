@@ -1,6 +1,5 @@
 """Pre-selected orderings (Appendix B)."""
 
-import numpy as np
 
 from conftest import make_scores
 from repro.core import (

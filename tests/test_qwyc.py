@@ -72,7 +72,6 @@ def test_neg_only_never_early_positive(rng):
     assert (m.eps_pos == np.inf).all()
     ev = evaluate_cascade(m, F)
     # every positively-classified example paid the full ensemble
-    full_pos = F.sum(1) >= 0.0
     assert (ev["exit_step"][ev["decisions"]] == 12).all()
 
 

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_scores
 from repro.core import evaluate_cascade, fit_qwyc
 from repro.kernels.device_executor import StageScorer
 from repro.serving.engine import BACKENDS, QWYCServer

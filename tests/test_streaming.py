@@ -1,0 +1,401 @@
+"""Streaming admission (DESIGN.md §8): continuous batching must not
+change a single bit of the paper's semantics.
+
+Covered here:
+
+* ``run_stream`` parity — decisions and exit steps bit-identical per row
+  id to ``evaluate_cascade`` AND the host ``ChunkedExecutor`` oracle,
+  with and without an arrival trace, at shards 1/2/4, with exactly one
+  jit trace per (cap, T, chunk_t, shards) across admission waves.
+* ``StreamingServer`` — end-to-end parity under a seeded Poisson trace,
+  latency/occupancy accounting, ``max_wait`` partial admission, and
+  constructor validation.
+* ``QWYCServer.drain()`` edge cases — empty queue, partial final flush
+  padding under shards 1/2/4, interleaved submit/flush/drain (paths that
+  were previously only exercised implicitly).
+
+Multi-shard cases need multiple XLA devices; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+sharded+streaming parity step does) — with fewer devices they SKIP.
+
+All tests use LOCAL rngs so the session-rng stream stays stable for the
+rest of the suite.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.core.executor import ChunkedExecutor, matrix_producer
+from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    matrix_stage_scorer,
+    stream_occupancy,
+    tree_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.engine import QWYCServer, StreamingServer
+
+N_DEV = len(jax.devices())
+
+
+def _shards_params(counts=(1, 2, 4)):
+    return [
+        pytest.param(
+            k,
+            marks=pytest.mark.skipif(
+                N_DEV < k,
+                reason=f"needs {k} devices (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={k})",
+            ),
+        )
+        for k in counts
+    ]
+
+
+def _fit(rng, n=400, t=24, mode="both", alpha=0.01, beta=0.0):
+    F = make_scores(rng, n=n, t=t)
+    m = fit_qwyc(F, beta=beta, alpha=alpha, mode=mode)
+    return F, m
+
+
+def _poisson_steps(rng, n, rate):
+    """Nondecreasing integer arrival steps from a Poisson trace."""
+    return np.floor(np.cumsum(rng.exponential(1.0 / rate, size=n))).astype(
+        np.int32
+    )
+
+
+# -- executor-level parity ----------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_stream_matrix_parity(mode):
+    """Streaming admission == evaluate_cascade == host executor, bit for
+    bit per row id, with and without an arrival trace — mixed-stage
+    blocks and mid-cascade refill cannot move a partial sum."""
+    rng = np.random.default_rng(61)
+    F, m = _fit(rng, mode=mode)
+    n = F.shape[0]
+    ev = evaluate_cascade(m, F)
+    plan = CascadePlan.from_qwyc(m, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    Fo = F[:, m.order].astype(np.float32)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32)
+    host = ChunkedExecutor(plan, matrix_producer(F[:, m.order])).run(n)
+    arrivals = _poisson_steps(rng, n, rate=24.0)
+    for arr in (None, arrivals):
+        res = dex.run_stream(Fo, n, arrivals=arr, capacity=64)
+        np.testing.assert_array_equal(res.decisions, ev["decisions"])
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+        np.testing.assert_array_equal(res.decisions, host.decisions)
+        np.testing.assert_array_equal(res.exit_step, host.exit_step)
+        if arr is not None:
+            # admission respects the trace: nothing enters before arrival
+            assert (res.admit_step >= arr).all()
+        # occupancy mass == summed per-row residency
+        assert res.occupancy.sum() == (
+            res.done_step - res.admit_step + 1
+        ).sum()
+    # one compiled trace per (cap, T, chunk_t) across admission waves
+    assert dex.traces == 1
+
+
+@pytest.mark.parametrize("shards", _shards_params())
+def test_stream_sharded_parity(shards):
+    """Shard-local admission rings == the single-device stream == the
+    host oracle; the psum'd pending+live total quits the mesh exactly
+    when the last shard empties."""
+    rng = np.random.default_rng(62)
+    F, m = _fit(rng)
+    n = F.shape[0]
+    ev = evaluate_cascade(m, F)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=8))
+    Fo = F[:, m.order].astype(np.float32)
+    arrivals = _poisson_steps(rng, n, rate=24.0)
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32)
+    ref = dex.run_stream(Fo, n, arrivals=arrivals, capacity=64)
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), make_serving_mesh(shards),
+        block_n=32,
+    )
+    res = sx.run_stream(Fo, n, arrivals=arrivals, capacity=64)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    # per-row compute is lane-local: shard placement can't change a sum
+    np.testing.assert_array_equal(res.g_final, ref.g_final)
+    assert (res.admit_step >= arrivals).all()
+    info = sx.last_run_info
+    assert info["per_shard_occupancy"].sum() == res.occupancy.sum()
+    res2 = sx.run_stream(Fo, n, arrivals=arrivals, capacity=64)
+    np.testing.assert_array_equal(res2.exit_step, ev["exit_step"])
+    assert sx.traces == 1
+
+
+def test_stream_tree_scorer_parity():
+    """The per-lane tree scorer (jnp slab gather) inside the streaming
+    loop: tree scoring is a pure leaf select, so streaming results are
+    bit-identical to the batch Pallas-kernel path and the oracle."""
+    rng = np.random.default_rng(63)
+    t, depth, d, n = 16, 3, 8, 192
+    feats = rng.integers(0, d, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    x = rng.uniform(size=(n, d)).astype(np.float32)
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=32,
+        )
+    )
+    m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+    ev = evaluate_cascade(m, F)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
+    scorer = tree_stage_scorer(
+        dplan, feats[m.order], thrs[m.order], leaves[m.order], block_n=32
+    )
+    dex = DeviceExecutor(dplan, scorer, block_n=32)
+    batch = dex.run(x, n)
+    res = dex.run_stream(
+        x, n, arrivals=_poisson_steps(rng, n, rate=16.0), capacity=32
+    )
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    np.testing.assert_array_equal(res.g_final, batch.g_final)
+
+
+def test_stream_requires_lane_scorer():
+    """A scorer without ``lane_fn`` cannot serve mixed-stage buffers —
+    the executor refuses up front instead of mis-scoring."""
+    rng = np.random.default_rng(64)
+    F, m = _fit(rng, t=12)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
+    base = matrix_stage_scorer(dplan)
+    no_lane = dataclasses.replace(base, lane_fn=None)
+    dex = DeviceExecutor(dplan, no_lane, block_n=32)
+    with pytest.raises(ValueError, match="lane_fn"):
+        dex.run_stream(F[:, m.order].astype(np.float32), F.shape[0])
+
+
+def test_stream_empty_and_occupancy_reconstruction():
+    rng = np.random.default_rng(65)
+    F, m = _fit(rng, t=12)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32)
+    res = dex.run_stream(np.zeros((0, m.T), dtype=np.float32), 0)
+    assert res.decisions.shape == (0,) and res.steps_run == 0
+    assert dex.traces == 0
+    # hand case: rows resident [0,2], [1,1], [3,3] -> occupancy 1,2,1,1
+    occ = stream_occupancy(
+        np.array([0, 1, 3]), np.array([2, 1, 3]), steps_run=4
+    )
+    np.testing.assert_array_equal(occ, [1, 2, 1, 1])
+
+
+# -- StreamingServer ----------------------------------------------------
+
+
+def _linear_setup(rng, n=300, t=20, d=6, mode="both"):
+    W = rng.normal(size=(t, d))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    F = (X @ W.T).astype(np.float64)
+    m = fit_qwyc(F, beta=0.0, alpha=0.01, mode=mode)
+
+    def score_fn(x):
+        return np.asarray(x) @ W.T
+
+    return X, F, m, score_fn
+
+
+@pytest.mark.parametrize("shards", _shards_params((1, 2, 4)))
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+def test_streaming_server_parity(shards, mode):
+    """End-to-end: seeded Poisson trace through StreamingServer ==
+    evaluate_cascade per row id; one compiled trace across waves; the
+    latency/occupancy accounting covers every request."""
+    rng = np.random.default_rng(66)
+    X, F, m, score_fn = _linear_setup(rng, mode=mode)
+    n = X.shape[0]
+    ev = evaluate_cascade(m, F)
+    backend = "device" if shards == 1 else "sharded"
+    opts = {} if shards == 1 else {"shards": shards}
+    srv = StreamingServer(
+        m, batch_size=-(-32 // shards), window=128, chunk_t=4,
+        score_fn=score_fn, exec_backend=backend, backend_opts=opts,
+    )
+    arrivals = _poisson_steps(rng, n, rate=16.0).astype(float)
+    for i in range(n):
+        srv.submit(X[i], arrival=arrivals[i])
+    res = srv.drain()
+    assert len(res) == n
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    np.testing.assert_array_equal(
+        np.array([r["models_evaluated"] for r in res]), ev["exit_step"]
+    )
+    st = srv.stats
+    assert st.admitted_rows == n and len(st.latency_steps) == n
+    assert min(st.latency_steps) >= 1
+    assert 0 < st.mean_occupancy <= 1
+    assert st.latency_p99 >= st.latency_p50
+    assert srv._dev[0].traces == 1
+    if mode == "neg_only":
+        # Filter-and-Score: positives carry the full ensemble score
+        full = F.sum(axis=1)
+        for i, r in enumerate(res):
+            if r["decision"]:
+                assert r["full_score"] == pytest.approx(full[i], rel=1e-4)
+
+
+def test_streaming_server_max_wait_partial_wave():
+    """The admission deadline launches partial waves: no request waits
+    longer than ``max_wait`` in the host queue once a later submit sees
+    the breach."""
+    rng = np.random.default_rng(67)
+    X, F, m, score_fn = _linear_setup(rng, n=60)
+    srv = StreamingServer(
+        m, batch_size=16, window=512, max_wait=4.0, chunk_t=4,
+        score_fn=score_fn, exec_backend="device",
+    )
+    for i in range(60):
+        srv.submit(X[i], arrival=float(i))  # 1 step apart: breach every 4
+    assert srv.stats.n_batches >= 5  # deadline fired, window never filled
+    res = srv.drain()
+    ev = evaluate_cascade(m, F)
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+
+
+def test_streaming_server_validation():
+    rng = np.random.default_rng(68)
+    X, F, m, score_fn = _linear_setup(rng, n=40)
+    with pytest.raises(ValueError, match="sorting policy"):
+        StreamingServer(
+            m, score_fn=score_fn, backend="sorted-kernel",
+            exec_backend="device",
+        )
+    with pytest.raises(ValueError, match="streaming"):
+        StreamingServer(m, score_fn=score_fn, exec_backend="host")
+    with pytest.raises(ValueError, match="window"):
+        StreamingServer(
+            m, score_fn=score_fn, batch_size=64, window=32,
+            exec_backend="device",
+        )
+    srv = StreamingServer(
+        m, batch_size=16, score_fn=score_fn, exec_backend="device"
+    )
+    srv.submit(X[0], arrival=5.0)
+    with pytest.raises(ValueError, match="nondecreasing"):
+        srv.submit(X[1], arrival=1.0)
+    assert srv.drain() and not srv._squeue
+
+
+def test_streaming_through_api():
+    """api.fit -> compile -> serve(streaming=True) builds a
+    StreamingServer on the compiled backend; host compiles refuse."""
+    from repro import api
+
+    rng = np.random.default_rng(69)
+    X, F, m, score_fn = _linear_setup(rng, n=80)
+    fitted = api.fit(score_fn, X, beta=0.0, alpha=0.01, chunk_t=4)
+    ev = evaluate_cascade(fitted.model, np.asarray(score_fn(X)))
+    srv = fitted.compile("device").serve(
+        streaming=True, batch_size=16, window=64
+    )
+    assert isinstance(srv, StreamingServer)
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    with pytest.raises(ValueError, match="streaming"):
+        fitted.compile("host").serve(streaming=True)
+    with pytest.raises(ValueError, match="streaming=True"):
+        fitted.compile("device").serve(max_wait=3.0)
+
+
+# -- QWYCServer.drain() edge cases (previously only implicit) -----------
+
+
+def test_drain_empty_queue():
+    """drain() with nothing queued: no flush, no stats movement, [] —
+    for both the flush server and the streaming server."""
+    rng = np.random.default_rng(70)
+    X, F, m, score_fn = _linear_setup(rng, n=20)
+    srv = QWYCServer(m, score_fn=score_fn, batch_size=8, chunk_t=4)
+    assert srv.drain() == []
+    assert srv.stats.n_batches == 0 and srv.stats.n_requests == 0
+    stream = StreamingServer(
+        m, batch_size=8, score_fn=score_fn, exec_backend="device"
+    )
+    assert stream.drain() == []
+    assert stream.stats.n_batches == 0
+
+
+@pytest.mark.parametrize("shards", _shards_params((1, 2, 4)))
+def test_drain_partial_final_flush_padding(shards):
+    """A final partial flush (fewer rows than flush_size) is padded up to
+    the pinned capacity: results stay bit-identical and the padded lanes
+    can't leak into results or retrigger compilation."""
+    rng = np.random.default_rng(71)
+    X, F, m, score_fn = _linear_setup(rng, n=100)
+    ev = evaluate_cascade(m, F)
+    backend = "device" if shards == 1 else "sharded"
+    opts = {} if shards == 1 else {"shards": shards}
+    srv = QWYCServer(
+        m, score_fn=score_fn, batch_size=-(-48 // shards), chunk_t=4,
+        backend="kernel", exec_backend=backend, backend_opts=opts,
+    )
+    flush = srv.flush_size
+    assert 100 % flush != 0  # the final drain really is partial
+    for i in range(100):
+        srv.submit(X[i])
+    res = srv.drain()
+    assert len(res) == 100
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    np.testing.assert_array_equal(
+        np.array([r["models_evaluated"] for r in res]), ev["exit_step"]
+    )
+    assert srv._dev[0].traces == 1  # the padded partial reused the trace
+    assert srv.stats.n_requests == 100
+
+
+def test_interleaved_submit_flush_drain():
+    """submit/flush/drain in arbitrary interleavings: results accumulate
+    in submission order, explicit flushes of partial batches are allowed,
+    and drain returns exactly the undelivered tail."""
+    rng = np.random.default_rng(72)
+    X, F, m, score_fn = _linear_setup(rng, n=90)
+    ev = evaluate_cascade(m, F)
+    srv = QWYCServer(m, score_fn=score_fn, batch_size=64, chunk_t=4)
+    for i in range(10):
+        srv.submit(X[i])
+    first = srv.flush()  # explicit partial flush
+    assert len(first) == 10
+    for i in range(10, 70):
+        srv.submit(X[i])
+    mid = srv.flush()
+    assert len(mid) == 60
+    for i in range(70, 90):
+        srv.submit(X[i])
+    tail = srv.drain()
+    # drain returns EVERYTHING not yet drained (flush results included)
+    assert len(tail) == 90
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in tail]), ev["decisions"]
+    )
+    assert srv.drain() == []  # nothing left
+    assert srv.stats.n_batches == 3 and srv.stats.n_requests == 90

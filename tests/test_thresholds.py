@@ -2,7 +2,6 @@
 plus budget/constraint invariants (hypothesis property tests)."""
 
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 from repro.core.thresholds import (
