@@ -105,6 +105,52 @@ def collect_counters() -> dict[str, int]:
         c[f"{p}.{dk}.stages"] = len(dres.chunk_stats)
         c[f"{p}.{dk}.traces"] = int(dex.traces)
 
+        # megakernel billing identity (DESIGN.md §9): the counters above
+        # already run the FUSED stage step (f32 slabs default it on);
+        # the multi-kernel fallback must bill bit-identically, asserted
+        # here and locked as its own counter family
+        dex_fb = DEVICE.make_executor(
+            dplan, scorer=matrix_stage_scorer(dplan), block_n=64,
+            megakernel=False,
+        )
+        fres = dex_fb.run(F[:, m.order].astype(np.float32), n)
+        assert np.array_equal(fres.decisions, dres.decisions)
+        assert np.array_equal(fres.exit_step, dres.exit_step)
+        assert fres.scores_computed == dres.scores_computed
+        assert len(fres.chunk_stats) == len(dres.chunk_stats)
+        fk = f"{p}.{dk}.multikernel"
+        c[f"{fk}.scores"] = int(fres.scores_computed)
+        c[f"{fk}.stages"] = len(fres.chunk_stats)
+        c[f"{fk}.traces"] = int(dex_fb.traces)
+
+        # quantized param slabs: bf16 storage over a bf16-REPRESENTABLE
+        # fixture (pre-rounded scores), so quantization is lossless and
+        # decisions + bill cannot move between the fused and fallback
+        # paths (the tolerance-oracle certification protocol)
+        import jax.numpy as jnp
+
+        Fq = np.asarray(
+            jnp.asarray(F[:, m.order].astype(np.float32), jnp.bfloat16),
+            np.float32,
+        )
+        dplan_q = DevicePlan.from_plan(plan, quant="bf16")
+        dexq = DEVICE.make_executor(
+            dplan_q, scorer=matrix_stage_scorer(dplan_q), block_n=64,
+            megakernel=True,
+        )
+        dexq_fb = DEVICE.make_executor(
+            dplan_q, scorer=matrix_stage_scorer(dplan_q), block_n=64,
+            megakernel=False,
+        )
+        qres, qfres = dexq.run(Fq, n), dexq_fb.run(Fq, n)
+        assert np.array_equal(qres.decisions, qfres.decisions)
+        assert np.array_equal(qres.exit_step, qfres.exit_step)
+        assert qres.scores_computed == qfres.scores_computed
+        qk = f"{p}.{dk}.bf16mk"
+        c[f"{qk}.scores"] = int(qres.scores_computed)
+        c[f"{qk}.stages"] = len(qres.chunk_stats)
+        c[f"{qk}.traces"] = int(dexq.traces)
+
         for shards in (2, 4):
             for reb in (False, True):
                 sx = SHARDED.make_executor(
@@ -122,6 +168,24 @@ def collect_counters() -> dict[str, int]:
                 )
                 c[f"{q}.rebalances"] = len(info["rebalanced_stages"])
                 c[f"{q}.traces"] = int(sx.traces)
+
+        # sharded megakernel identity at shards 2/4: the fused per-shard
+        # stage step bills exactly what the multi-kernel shards billed
+        for shards in (2, 4):
+            sx_fb = SHARDED.make_executor(
+                dplan, scorer=matrix_stage_scorer(dplan), shards=shards,
+                block_n=64, megakernel=False,
+            )
+            sfres = sx_fb.run(F[:, m.order].astype(np.float32), n)
+            assert np.array_equal(sfres.decisions, ev["decisions"])
+            base = f"{p}.{SHARDED.billing_key(shards=shards)}"
+            assert int(sfres.scores_computed) == c[f"{base}.scores"]
+            assert int(sx_fb.last_run_info["stages_run"]) == c[f"{base}.stages"]
+            assert critical_blocks(
+                sx_fb.last_run_info["per_shard_n_in"], 64
+            ) == c[f"{base}.crit_blocks"]
+            c[f"{base}.multikernel.scores"] = int(sfres.scores_computed)
+            c[f"{base}.multikernel.traces"] = int(sx_fb.traces)
 
     # serving-path billing: lazy host backend and the sharded device path
     rng2 = np.random.default_rng(2027)
@@ -145,8 +209,6 @@ def collect_counters() -> dict[str, int]:
     c["serve.lazy.scores"] = int(srv.stats.scores_computed)
     c["serve.lazy.audit_scores"] = int(srv.stats.audit_scores)
     c["serve.lazy.models"] = int(srv.stats.models_evaluated)
-
-    import jax.numpy as jnp
 
     from repro.kernels.device_executor import StageScorer
 
@@ -222,6 +284,35 @@ def collect_counters() -> dict[str, int]:
         c[f"stream.{key}.slot_steps"] = int(sst.stream_slot_steps)
         c[f"stream.{key}.latency_sum"] = int(sum(sst.latency_steps))
         c[f"stream.{key}.traces"] = int(srv3._dev[0].traces)
+
+    # streaming megakernel identity: the same arrival trace through the
+    # device admission ring with the fused lane kernel ON vs OFF must
+    # produce identical decisions, admit/done timelines and bill — in
+    # ONE compiled trace each (DESIGN.md §9)
+    plan_s = CascadePlan.from_qwyc(ms, chunk_t=6)
+    dplan_s = DevicePlan.from_plan(plan_s)
+    Fso = Fs[:, ms.order].astype(np.float32)
+    arr_steps = np.sort(
+        np.random.default_rng(2029).integers(0, 48, size=ns)
+    ).astype(np.int32)
+    s_mk = None
+    for flag, name in ((True, "stream.device.mk"), (False, "stream.device.multikernel")):
+        dexs = DEVICE.make_executor(
+            dplan_s, scorer=matrix_stage_scorer(dplan_s), block_n=32,
+            megakernel=flag,
+        )
+        sres_s = dexs.run_stream(Fso, ns, arrivals=arr_steps, capacity=64)
+        if s_mk is None:
+            s_mk = sres_s
+        else:
+            assert np.array_equal(s_mk.decisions, sres_s.decisions)
+            assert np.array_equal(s_mk.exit_step, sres_s.exit_step)
+            assert np.array_equal(s_mk.admit_step, sres_s.admit_step)
+            assert np.array_equal(s_mk.done_step, sres_s.done_step)
+            assert s_mk.scores_computed == sres_s.scores_computed
+        c[f"{name}.scores"] = int(sres_s.scores_computed)
+        c[f"{name}.steps"] = int(sres_s.steps_run)
+        c[f"{name}.traces"] = int(dexs.traces)
     return c
 
 

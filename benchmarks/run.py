@@ -240,8 +240,51 @@ def main() -> None:
                 f"{all(r['parity_with_host_oracle'] and r['traces'] == 1 for r in rows)})"
             )
 
-    # Roofline (from the dry-run grid, if present)
+    # Fused stage-step megakernel vs the multi-kernel device path
+    # (DESIGN.md §9) — same availability/skip contract as the device bench
+    mk_ok, mk_why = get_backend("device").available()
+    if not mk_ok:
+        print(f"executor_megakernel,,SKIPPED: {mk_why}")
+    else:
+        try:
+            rows = _cached(
+                "megakernel_adult",
+                lambda: bench_device_executor.run_megakernel(
+                    "adult", T=min(100, T_big), scale=min(scale, 0.25)
+                ),
+                args.recompute,
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"executor_megakernel,,SKIPPED ({type(e).__name__}: {e})")
+            rows = []
+        if rows:
+            print(
+                f"executor_megakernel,,speedup median "
+                f"{_np.median([r['speedup'] for r in rows]):.2f}x over "
+                f"multi-kernel device path (billing identical: "
+                f"{all(r['billing_identical'] for r in rows)}, f32 bit-exact: "
+                f"{all(r['parity_exact'] for r in rows if r['quant'] == 'f32')})"
+            )
+
+    # Roofline: the stage-loop megakernel report (deterministic modeled
+    # HBM traffic; see EXPERIMENTS.md §Roofline protocol) + the dry-run
+    # grid table if its artifact is present
     from benchmarks import roofline
+
+    rf_ok, rf_why = get_backend("device").available()
+    if not rf_ok:
+        print(f"roofline_stage_loop,,SKIPPED: {rf_why}")
+    else:
+        try:
+            roof = roofline.stage_loop_report(repeats=1 if args.quick else 3)
+            print(
+                f"roofline_stage_loop,,modeled HBM bytes "
+                f"x{roof['ratios']['modeled_bytes']:.2f} less fused "
+                f"({roof['modeled']['multikernel_bytes']} -> "
+                f"{roof['modeled']['megakernel_bytes']} bytes/run)"
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"roofline_stage_loop,,SKIPPED ({type(e).__name__}: {e})")
 
     data = roofline.load("16x16")
     if data:

@@ -9,8 +9,11 @@ silently shipping a hollow artifact.
 Supported schema keywords (the subset ``bench_schema.json`` uses, kept
 dependency-free so the repo's no-new-deps floor holds): ``type``
 (object/array/string/number/integer/boolean/null), ``required``,
-``properties``, ``items``, ``minItems``, ``enum``.  Unknown keywords are
-ignored, like a real validator would with unknown annotations.
+``properties``, ``items``, ``minItems``, ``enum``, ``minimum``
+(numeric lower bound — the megakernel/roofline sections use it to lock
+"the modeled traffic numbers are positive and the ratio is a real
+gain").  Unknown keywords are ignored, like a real validator would with
+unknown annotations.
 
     python -m benchmarks.validate_schema BENCH_executor.json \
         benchmarks/results/bench_schema.json
@@ -48,6 +51,13 @@ def validate(doc, schema: dict, path: str = "$") -> list[str]:
         return errors  # structural mismatch: children are meaningless
     if "enum" in schema and doc not in schema["enum"]:
         errors.append(f"{path}: {doc!r} not in enum {schema['enum']}")
+    if (
+        "minimum" in schema
+        and isinstance(doc, (int, float))
+        and not isinstance(doc, bool)
+        and doc < schema["minimum"]
+    ):
+        errors.append(f"{path}: {doc!r} < minimum {schema['minimum']}")
     if isinstance(doc, dict):
         for key in schema.get("required", []):
             if key not in doc:

@@ -199,9 +199,14 @@ class DeviceBackend:
         scorer: StageScorer,
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
+        megakernel: bool | None = None,
     ) -> DeviceExecutor:
+        # megakernel: the fused stage-step path (DESIGN.md §9); None =
+        # auto (on for f32 slabs — bit-identical results AND billing, so
+        # the billing_key does not fork on it)
         return DeviceExecutor(
             _as_device_plan(plan), scorer, block_n=block_n, interpret=interpret,
+            megakernel=megakernel,
         )
 
     def billing_key(self) -> str:
@@ -254,11 +259,13 @@ class ShardedBackend:
         interpret: bool | None = None,
         rebalance: bool = False,
         rebalance_ratio: float = 1.25,
+        megakernel: bool | None = None,
     ) -> ShardedDeviceExecutor:
         return ShardedDeviceExecutor(
             _as_device_plan(plan), scorer, self.resolve_mesh(mesh, shards),
             block_n=block_n, interpret=interpret,
             rebalance=rebalance, rebalance_ratio=rebalance_ratio,
+            megakernel=megakernel,
         )
 
     def billing_key(self, shards: int, rebalance: bool = False) -> str:

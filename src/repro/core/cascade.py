@@ -35,7 +35,7 @@ class CascadeOut(NamedTuple):
 
 
 def _step(carry, xs):
-    # step semantics mirrored by kernels/cascade_kernel._threshold_step and
+    # step semantics mirrored by kernels/cascade_kernel.threshold_step and
     # core/executor.decide_chunk_reference — keep the three in sync
     g, active, decided_pos, exit_step, step_idx = carry
     f_t, eps_pos_t, eps_neg_t = xs

@@ -167,7 +167,7 @@ def decide_chunk_reference(
     """
     m, ct = chunk.shape
     # step semantics mirrored by core/cascade._step and
-    # kernels/cascade_kernel._threshold_step — keep the three in sync
+    # kernels/cascade_kernel.threshold_step — keep the three in sync
     g = np.array(g0, copy=True)
     active = np.ones(m, dtype=bool)
     decided_pos = np.zeros(m, dtype=bool)

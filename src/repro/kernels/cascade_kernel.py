@@ -30,15 +30,23 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_N = 256
 DEFAULT_CHUNK_T = 8
 
-__all__ = ["cascade_pallas", "cascade_chunk_pallas", "cascade_lane_pallas"]
+__all__ = [
+    "cascade_pallas",
+    "cascade_chunk_pallas",
+    "cascade_lane_pallas",
+    "threshold_step",
+]
 
 
-def _threshold_step(g, active, decided_pos, exit_step, f_t, ep, en, step_1b):
+def threshold_step(g, active, decided_pos, exit_step, f_t, ep, en, step_1b):
     """One cascade threshold test — the single source of the step semantics
-    for both Pallas kernels.  Mirrored (bit-identically) by
-    ``core/cascade._step`` and ``core/executor.decide_chunk_reference``;
-    a semantics change here must be replayed there, and the parity tests
-    in tests/test_executor.py / tests/test_kernels.py will catch a skew.
+    for every decide kernel in the repo: the three kernels below AND the
+    fused stage-step megakernel (``kernels/megakernel.py``), which inlines
+    this exact function after its in-kernel scoring.  Mirrored
+    (bit-identically) by ``core/cascade._step`` and
+    ``core/executor.decide_chunk_reference``; a semantics change here must
+    be replayed there, and the parity tests in tests/test_executor.py /
+    tests/test_kernels.py / tests/test_megakernel.py will catch a skew.
     """
     g = g + jnp.where(active, f_t, 0.0)
     out_neg = active & (g < en)  # negative exit priority (matches fit)
@@ -76,7 +84,7 @@ def _cascade_kernel(
             ep = eps_pos_ref[0, tc]
             en = eps_neg_ref[0, tc]
             live = active & in_range
-            g, live, decided_pos, exit_step = _threshold_step(
+            g, live, decided_pos, exit_step = threshold_step(
                 g, live, decided_pos, exit_step, f_t, ep, en, t + 1
             )
             # out-of-range padding steps must not deactivate lanes: a lane
@@ -184,7 +192,7 @@ def _cascade_chunk_kernel(
         f_t = scores_ref[:, j]
         ep = eps_pos_ref[0, j]
         en = eps_neg_ref[0, j]
-        g, active, decided_pos, exit_step = _threshold_step(
+        g, active, decided_pos, exit_step = threshold_step(
             g, active, decided_pos, exit_step, f_t, ep, en, t0 + j + 1
         )
         return j + 1, g, active, decided_pos, exit_step
@@ -227,7 +235,7 @@ def _cascade_lane_kernel(
     stages (the streaming executor's admission refill puts stage-0
     rookies next to veterans mid-cascade).  Exit steps come back RELATIVE
     (1-based within the chunk); the caller rebases by each lane's own
-    stage start.  Threshold step semantics are ``_threshold_step``,
+    stage start.  Threshold step semantics are ``threshold_step``,
     shared with every other decide."""
 
     def step_cond(state):
@@ -239,7 +247,7 @@ def _cascade_lane_kernel(
         f_t = scores_ref[:, j]
         ep = eps_pos_ref[:, j]  # (block_n,) — per-lane thresholds
         en = eps_neg_ref[:, j]
-        g, active, decided_pos, exit_step = _threshold_step(
+        g, active, decided_pos, exit_step = threshold_step(
             g, active, decided_pos, exit_step, f_t, ep, en, j + 1
         )
         return j + 1, g, active, decided_pos, exit_step

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
+from repro.kernels import megakernel as mk
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
@@ -108,13 +109,20 @@ class DevicePlan:
     col_valid: np.ndarray  # (S, W) bool
     W: int  # uniform stage width
     T_pad: int  # model-axis pad target: every [t0, t0 + W) slab is in range
+    # param-slab storage dtype for the fused megakernel path ("f32" |
+    # "bf16" | "int8"): the default scorer factories build their
+    # ParamSlabs at this quant.  f32 is the default because it keeps the
+    # megakernel bit-identical to the multi-kernel path (and hence
+    # auto-selected — see DeviceExecutor); bf16/int8 are the opt-in
+    # quantized storage modes, certified by the tolerance oracle.
+    quant: str = "f32"
 
     @property
     def S(self) -> int:
         return int(self.stage_t0.shape[0])
 
     @classmethod
-    def from_plan(cls, plan: CascadePlan) -> "DevicePlan":
+    def from_plan(cls, plan: CascadePlan, quant: str = "f32") -> "DevicePlan":
         stages = plan.stages
         S = len(stages)
         W = max(t1 - t0 for t0, t1 in stages)
@@ -128,6 +136,8 @@ class DevicePlan:
             eps_pos[s, :w] = plan.eps_pos[t0:t1].astype(np.float32)
             eps_neg[s, :w] = plan.eps_neg[t0:t1].astype(np.float32)
             col_valid[s, :w] = True
+        if quant not in mk.QUANTS:
+            raise ValueError(f"quant must be one of {mk.QUANTS}, got {quant!r}")
         return cls(
             plan=plan,
             stage_t0=stage_t0,
@@ -137,6 +147,7 @@ class DevicePlan:
             col_valid=col_valid,
             W=W,
             T_pad=int(stage_t0.max()) + W,
+            quant=quant,
         )
 
 
@@ -163,7 +174,12 @@ class StageScorer:
     ``t0_lane`` is a (cap,) vector of per-lane cascade starts (admission
     refill mixes stage-0 rookies with mid-cascade veterans in one
     buffer, DESIGN.md §8).  Scorers without one cannot serve
-    ``run_stream``.
+    ``run_stream`` on the multi-kernel fallback path.
+    ``slabs`` (optional): the scorer's params as quantized, stage-stacked
+    ``megakernel.ParamSlabs`` — present on every factory-built scorer and
+    the ticket into the fused stage-step megakernel (DESIGN.md §9);
+    ``fn``/``lane_fn`` stay as the multi-kernel fallback and parity
+    oracle.
     """
 
     fn: Callable
@@ -171,16 +187,22 @@ class StageScorer:
     width: int
     block_n: int | None = None
     lane_fn: Callable | None = None
+    slabs: mk.ParamSlabs | None = None
 
 
-def matrix_stage_scorer(dplan: DevicePlan) -> StageScorer:
+def matrix_stage_scorer(
+    dplan: DevicePlan, quant: str | None = None
+) -> StageScorer:
     """Scorer over a precomputed cascade-ORDERED (n, T) matrix.
 
     The device-loop analogue of ``core.executor.matrix_producer`` — used
     by tests/oracles and by the server's eager ``score_fn`` fallback
     (scoring stays eager; control flow still moves on device).
+    ``quant`` overrides the plan's slab storage dtype (None = the plan's
+    ``dplan.quant``).
     """
     W, T, T_pad = dplan.W, dplan.plan.T, dplan.T_pad
+    slabs = mk.build_matrix_slabs(dplan, quant=quant or dplan.quant)
 
     def prepare(ordered: np.ndarray) -> jax.Array:
         F = jnp.asarray(ordered, dtype=jnp.float32)
@@ -198,7 +220,9 @@ def matrix_stage_scorer(dplan: DevicePlan) -> StageScorer:
         idx = t0_lane[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
         return jnp.take_along_axis(xr, idx, axis=1)
 
-    return StageScorer(fn=fn, prepare=prepare, width=W, lane_fn=lane_fn)
+    return StageScorer(
+        fn=fn, prepare=prepare, width=W, lane_fn=lane_fn, slabs=slabs
+    )
 
 
 def tree_stage_scorer(
@@ -208,15 +232,21 @@ def tree_stage_scorer(
     leaves_ordered: np.ndarray,
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
+    quant: str | None = None,
 ) -> StageScorer:
     """Oblivious-forest scorer: per stage, ``dynamic_slice`` the (W, ...)
     slab of cascade-ordered stacked tree params and run the Pallas tree
     kernel on the gathered survivor rows.  Padded models have zero leaves
-    (inert even before the executor masks their columns)."""
+    (inert even before the executor masks their columns).  ``quant``
+    overrides the plan's slab storage dtype for the megakernel path."""
     W, T_pad = dplan.W, dplan.T_pad
     it = INTERPRET if interpret is None else interpret
     T, depth = np.asarray(feats_ordered).shape
     n_leaves = np.asarray(leaves_ordered).shape[1]
+    slabs = mk.build_tree_slabs(
+        dplan, feats_ordered, thrs_ordered, leaves_ordered,
+        quant=quant or dplan.quant,
+    )
     pad = ((0, T_pad - T), (0, 0))
     feats_p = jnp.asarray(np.pad(np.asarray(feats_ordered), pad))
     thrs_p = jnp.asarray(np.pad(np.asarray(thrs_ordered), pad))
@@ -251,7 +281,8 @@ def tree_stage_scorer(
         return jnp.take_along_axis(lv, idx[:, :, None], axis=2)[:, :, 0]
 
     return StageScorer(
-        fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn
+        fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn,
+        slabs=slabs,
     )
 
 
@@ -261,6 +292,7 @@ def lattice_stage_scorer(
     feats_ordered: np.ndarray,
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
+    quant: str | None = None,
 ) -> StageScorer:
     """Lattice scorer: same slab scheme as ``tree_stage_scorer`` over the
     cascade-ordered (theta, feats) stacks."""
@@ -268,6 +300,9 @@ def lattice_stage_scorer(
     it = INTERPRET if interpret is None else interpret
     T, S_feats = np.asarray(feats_ordered).shape
     p = np.asarray(theta_ordered).shape[1]
+    slabs = mk.build_lattice_slabs(
+        dplan, theta_ordered, feats_ordered, quant=quant or dplan.quant
+    )
     theta_p = jnp.asarray(np.pad(np.asarray(theta_ordered), ((0, T_pad - T), (0, 0))))
     feats_p = jnp.asarray(np.pad(np.asarray(feats_ordered), ((0, T_pad - T), (0, 0))))
 
@@ -296,10 +331,14 @@ def lattice_stage_scorer(
             w = jnp.stack([w * (1.0 - xj), w * xj], axis=-1).reshape(
                 cap, W, -1
             )
-        return jnp.einsum("cwp,cwp->cw", w, th)
+        # elementwise-sum contraction (NOT einsum/dot): the same
+        # accumulation order the megakernel's lane variant uses, keeping
+        # the f32 streaming paths bit-identical to each other
+        return jnp.sum(w * th, axis=-1)
 
     return StageScorer(
-        fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn
+        fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn,
+        slabs=slabs,
     )
 
 
@@ -376,6 +415,17 @@ class DeviceExecutor:
     block granularity, exactly like the host path's ``bill_block``
     accounting.  ``benchmarks/bench_device_executor.py`` measures both
     this and wall-clock.
+
+    ``megakernel`` selects the fused stage-step path (DESIGN.md §9): one
+    Pallas kernel per stage does slab gather + scoring + threshold decide
+    + the block-local compaction prefix, instead of the score kernel /
+    decide kernel / cap-wide cumsum sequence.  ``None`` (default) auto-
+    enables it when the scorer carries f32 ``ParamSlabs`` — bit-identical
+    results AND billing, so it is the default device scorer path for
+    factory-built scorers; quantized (bf16/int8) slabs must be requested
+    explicitly (``megakernel=True``) because their results are certified
+    by the tolerance oracle, not bit equality.  ``False`` forces the
+    multi-kernel path (the fallback and parity oracle).
     """
 
     def __init__(
@@ -384,18 +434,50 @@ class DeviceExecutor:
         scorer: StageScorer,
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
+        megakernel: bool | None = None,
     ):
         self.dplan = plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
         if scorer.width != self.dplan.W:
             raise ValueError(
                 f"scorer width {scorer.width} != plan stage width {self.dplan.W}"
             )
+        if megakernel is None:
+            megakernel = scorer.slabs is not None and scorer.slabs.quant == "f32"
+        if megakernel and scorer.slabs is None:
+            raise ValueError(
+                "megakernel=True needs a scorer with ParamSlabs (factory-"
+                "built scorers carry them; custom scorers fall back to the "
+                "multi-kernel path)"
+            )
+        self.megakernel = bool(megakernel)
         self.scorer = scorer
         self.block_n = max(1, int(block_n))
         self.interpret = INTERPRET if interpret is None else interpret
         self.traces = 0
         self._jit = jax.jit(self._program)
         self._stream_jit = jax.jit(self._stream_program, static_argnums=(0,))
+
+    def _bn_bill(self) -> int:
+        """The kernel row-block granularity billing runs at — the
+        scorer's own block size when it has one.  The megakernel runs at
+        the SAME granularity, which is what keeps its billed counters
+        bit-identical to the multi-kernel path."""
+        return self.scorer.block_n or self.block_n
+
+    def _cast_operand(self, x):
+        """Matrix-variant quantized storage: the payload IS the prepared
+        operand, so the executor casts it once per run (bf16 halves the
+        survivor buffer's HBM footprint; accumulation stays f32
+        in-kernel).  No-op for every other configuration."""
+        sl = self.scorer.slabs
+        if (
+            self.megakernel
+            and sl is not None
+            and sl.x_dtype is not None
+            and x.dtype != sl.x_dtype
+        ):
+            return x.astype(sl.x_dtype)
+        return x
 
     def _cap(self, n: int) -> int:
         b = self.block_n
@@ -420,24 +502,45 @@ class DeviceExecutor:
             s, rows, n_active, g, dec, ex, n_in_log = carry
             n_in_log = n_in_log.at[s].set(n_active)
             t0 = stage_t0[s]
-            # fused stage: score the survivor buffer, then decide.  The
-            # scorer may skip whole blocks past n_active (survivors are
-            # front-packed); padded columns are zeroed so they cannot move
-            # a partial sum.
-            scores = self.scorer.fn(x, rows, t0, n_active)
-            scores = jnp.where(col_valid[s][None, :], scores, 0.0)
             g_rows = jnp.take(g, rows, axis=0)  # trash indices clamp
-            g_new, active, dpos, ex_rel = cascade_chunk_pallas(
-                g_rows,
-                scores,
-                eps_pos[s],
-                eps_neg[s],
-                0,
-                block_n=self.block_n,
-                interpret=self.interpret,
-                n_valid=n_active,
-            )
-            active_b = active.astype(bool)
+            if self.megakernel:
+                # ONE fused kernel: slab select by prefetched stage,
+                # score + decide + block-local compaction prefix — the
+                # survivor buffer makes one round trip, and the pack
+                # positions come back ready to scatter (DESIGN.md §9)
+                xr = jnp.take(x, rows, axis=0)  # trash indices clamp
+                g_new, active, dpos, ex_rel, pack, n_keep = (
+                    mk.mega_stage_pallas(
+                        self.scorer.slabs, xr, g_rows, s, t0, n_active,
+                        eps_pos, eps_neg,
+                        block_n=self._bn_bill(),
+                        interpret=self.interpret,
+                    )
+                )
+            else:
+                # multi-kernel fallback (the parity oracle): score the
+                # survivor buffer, then decide.  The scorer may skip
+                # whole blocks past n_active (survivors are front-
+                # packed); padded columns are zeroed so they cannot move
+                # a partial sum.
+                scores = self.scorer.fn(x, rows, t0, n_active)
+                scores = jnp.where(col_valid[s][None, :], scores, 0.0)
+                g_new, active, dpos, ex_rel = cascade_chunk_pallas(
+                    g_rows,
+                    scores,
+                    eps_pos[s],
+                    eps_neg[s],
+                    0,
+                    block_n=self.block_n,
+                    interpret=self.interpret,
+                    n_valid=n_active,
+                )
+                # cumsum-prefix compaction: rank survivors (stable) and
+                # pack them at the front of the fixed-capacity buffer
+                keep = active.astype(bool) & (lane < n_active)
+                pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+                pack = jnp.where(keep, pos, cap)
+                n_keep = keep.sum(dtype=jnp.int32)
             lane_valid = lane < n_active
             newly = lane_valid & (ex_rel > 0)
             # scatter exits by absolute row index; retired/padding lanes
@@ -446,24 +549,12 @@ class DeviceExecutor:
             dec = dec.at[scat].set(dpos.astype(bool), mode="drop")
             ex = ex.at[scat].set(ex_rel + t0, mode="drop")
             g = g.at[jnp.where(lane_valid, rows, cap)].set(g_new, mode="drop")
-            # cumsum-prefix compaction: rank survivors (stable) and pack
-            # them at the front of the fixed-capacity buffer
-            keep = active_b & lane_valid
-            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
             rows = (
                 jnp.full((cap,), cap, dtype=jnp.int32)
-                .at[jnp.where(keep, pos, cap)]
+                .at[pack]
                 .set(rows, mode="drop")
             )
-            return (
-                s + 1,
-                rows,
-                keep.sum(dtype=jnp.int32),
-                g,
-                dec,
-                ex,
-                n_in_log,
-            )
+            return (s + 1, rows, n_keep, g, dec, ex, n_in_log)
 
         def cond(carry):
             s, _, n_active, _, _, _, _ = carry
@@ -524,7 +615,7 @@ class DeviceExecutor:
                 scores_possible=0,
             )
         cap = self._cap(max(n, capacity or 0))
-        x = batch if prepared else self.scorer.prepare(batch)
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
         if x.shape[0] < cap:
             x = jnp.pad(x, ((0, cap - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
         rows = (
@@ -613,25 +704,62 @@ class DeviceExecutor:
             # batch body (slab start, thresholds, column validity) is
             # gathered per LANE from the DevicePlan stage tables
             t0_lane = jnp.take(stage_t0, stage)
-            scores = lane_scorer(x, rows, t0_lane, n_live)
-            scores = jnp.where(
-                jnp.take(col_valid, stage, axis=0), scores, 0.0
-            )
-            g_new, active, dpos, ex_rel = cascade_lane_pallas(
-                g,
-                scores,
-                jnp.take(eps_pos, stage, axis=0),
-                jnp.take(eps_neg, stage, axis=0),
-                block_n=self.block_n,
-                interpret=self.interpret,
-                n_valid=n_live,
-            )
-            active_b = active.astype(bool)
-            lane_valid = lane < n_live
+            stop = stage >= S - 1  # lanes running their LAST stage
+            if self.megakernel:
+                # ONE fused mixed-stage kernel: per-lane slab gather at
+                # the QUANTIZED storage dtype, then score + decide +
+                # compaction prefix in a single pass (DESIGN.md §9).
+                # Lanes on their last stage are excluded from the
+                # survivor prefix inside the kernel (the stop input).
+                slabs = self.scorer.slabs
+                if slabs.variant == "matrix":
+                    xr = jnp.take(x, rows, axis=0)
+                    idx = (
+                        t0_lane[:, None]
+                        + jnp.arange(W, dtype=jnp.int32)[None, :]
+                    )
+                    x_in = jnp.take_along_axis(xr, idx, axis=1)
+                else:
+                    x_in = jnp.take(x, rows, axis=0)
+                g_new, active, dpos, ex_rel, pack, n_keep = (
+                    mk.mega_lane_pallas(
+                        slabs, x_in, mk.gather_lane_slabs(slabs, stage),
+                        g,
+                        jnp.take(eps_pos, stage, axis=0),
+                        jnp.take(eps_neg, stage, axis=0),
+                        stop, n_live,
+                        block_n=self._bn_bill(),
+                        interpret=self.interpret,
+                    )
+                )
+                active_b = active.astype(bool)
+                lane_valid = lane < n_live
+            else:
+                scores = lane_scorer(x, rows, t0_lane, n_live)
+                scores = jnp.where(
+                    jnp.take(col_valid, stage, axis=0), scores, 0.0
+                )
+                g_new, active, dpos, ex_rel = cascade_lane_pallas(
+                    g,
+                    scores,
+                    jnp.take(eps_pos, stage, axis=0),
+                    jnp.take(eps_neg, stage, axis=0),
+                    block_n=self.block_n,
+                    interpret=self.interpret,
+                    n_valid=n_live,
+                )
+                active_b = active.astype(bool)
+                lane_valid = lane < n_live
+                # cumsum-prefix compaction (veterans advance one stage);
+                # the freed back slots are the NEXT step's refill targets
+                keep = lane_valid & active_b & ~stop
+                pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+                pack = jnp.where(keep, pos, cap)
+                n_keep = keep.sum(dtype=jnp.int32)
             newly = lane_valid & (ex_rel > 0)
             # lanes that finished the cascade without exiting: classified
             # by the full ensemble score, same as the batch epilogue
-            ran_out = lane_valid & active_b & (stage >= S - 1)
+            ran_out = lane_valid & active_b & stop
             fin = newly | ran_out
             dec_val = jnp.where(newly, dpos.astype(bool), g_new >= beta)
             ex_val = jnp.where(newly, ex_rel + t0_lane, T)
@@ -640,11 +768,6 @@ class DeviceExecutor:
             ex = ex.at[scat].set(ex_val, mode="drop")
             gout = gout.at[scat].set(g_new, mode="drop")
             done = done.at[scat].set(step, mode="drop")
-            # cumsum-prefix compaction (veterans advance one stage); the
-            # freed back slots are what the NEXT step's refill fills
-            keep = lane_valid & active_b & ~ran_out
-            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
-            pack = jnp.where(keep, pos, cap)
             rows = (
                 jnp.full((cap,), R, dtype=jnp.int32)
                 .at[pack]
@@ -662,7 +785,7 @@ class DeviceExecutor:
             )
             return (
                 step + 1, rows, stage, g,
-                keep.sum(dtype=jnp.int32), head,
+                n_keep, head,
                 dec, ex, gout, admit, done,
             )
 
@@ -715,10 +838,11 @@ class DeviceExecutor:
         """
         plan = self.dplan.plan
         T = plan.T
-        if self.scorer.lane_fn is None:
+        if self.scorer.lane_fn is None and not self.megakernel:
             raise ValueError(
                 "run_stream needs a StageScorer with lane_fn (per-lane "
-                "stage scoring); this scorer only supports batch stages"
+                "stage scoring) on the multi-kernel path; this scorer "
+                "only supports batch stages"
             )
         if n == 0:
             return StreamResult(
@@ -735,7 +859,7 @@ class DeviceExecutor:
             )
         cap = self._cap(capacity or n)
         R = max(n, int(ring_capacity or n))
-        x = batch if prepared else self.scorer.prepare(batch)
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
         if x.shape[0] < R:
             x = jnp.pad(x, ((0, R - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
         ring_ids = np.full(R, R, dtype=np.int32)

@@ -129,7 +129,9 @@ def score_and_decide(
     jit'd ``lax.while_loop`` with no per-stage host round-trips
     (DESIGN.md §5).  Pass the SAME plan and scorer objects across calls
     to reuse the compiled program.  ``backend_opts`` forwards extra
-    construction options (e.g. ``mesh=`` for ``"sharded"``).
+    construction options (e.g. ``mesh=`` for ``"sharded"``, or
+    ``megakernel=`` to force the fused stage-step path of DESIGN.md §9
+    on or off — the device backends default it on for f32 slabs).
 
     ``bill_block`` defaults to ``block_n``: a kernel producer using the
     same block size really computes ceil(m / block_n) * block_n rows per

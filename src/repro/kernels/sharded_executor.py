@@ -55,6 +55,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
+from repro.kernels import megakernel as mk
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
 from repro.kernels.device_executor import (
     DEFAULT_BLOCK_N,
@@ -107,6 +108,7 @@ class ShardedDeviceExecutor:
         interpret: bool | None = None,
         rebalance: bool = False,
         rebalance_ratio: float = 1.25,
+        megakernel: bool | None = None,
     ):
         self.dplan = plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
         if scorer.width != self.dplan.W:
@@ -117,6 +119,18 @@ class ShardedDeviceExecutor:
             raise ValueError(
                 f"mesh must carry a {DATA_AXIS!r} axis; got {mesh.axis_names}"
             )
+        # same auto policy as DeviceExecutor: fused stage-step megakernel
+        # by default when the scorer carries f32 slabs (bit-identical),
+        # explicit opt-in for quantized slabs (tolerance-oracle parity)
+        if megakernel is None:
+            megakernel = scorer.slabs is not None and scorer.slabs.quant == "f32"
+        if megakernel and scorer.slabs is None:
+            raise ValueError(
+                "megakernel=True needs a scorer with ParamSlabs (factory-"
+                "built scorers carry them; custom scorers fall back to the "
+                "multi-kernel path)"
+            )
+        self.megakernel = bool(megakernel)
         self.scorer = scorer
         self.mesh = mesh
         self.shards = int(mesh.shape[DATA_AXIS])
@@ -137,6 +151,20 @@ class ShardedDeviceExecutor:
     def _cap(self, n: int) -> int:
         """Global padded capacity (``shards`` x the per-shard capacity)."""
         return self.shards * self._cap_local(n)
+
+    def _cast_operand(self, x):
+        """Matrix-variant quantized storage (see
+        ``DeviceExecutor._cast_operand``): cast the prepared operand to
+        the slab storage dtype once per run."""
+        sl = self.scorer.slabs
+        if (
+            self.megakernel
+            and sl is not None
+            and sl.x_dtype is not None
+            and x.dtype != sl.x_dtype
+        ):
+            return x.astype(sl.x_dtype)
+        return x
 
     # -- the per-shard program ------------------------------------------
 
@@ -211,21 +239,39 @@ class ShardedDeviceExecutor:
              n_in_log, reb_log) = carry
             n_in_log = n_in_log.at[s].set(n_live)
             t0 = stage_t0[s]
-            # the survivor buffer IS the row set, so the scorer's gather is
-            # the identity over cap_l local rows (never the global batch)
-            scores = self.scorer.fn(xbuf, lane, t0, n_live)
-            scores = jnp.where(col_valid[s][None, :], scores, 0.0)
-            g_new, active, dpos, ex_rel = cascade_chunk_pallas(
-                gbuf,
-                scores,
-                eps_pos[s],
-                eps_neg[s],
-                0,
-                block_n=self.block_n,
-                interpret=self.interpret,
-                n_valid=n_live,
-            )
-            active_b = active.astype(bool)
+            if self.megakernel:
+                # ONE fused kernel over the shard-local survivor buffer
+                # (which IS the gathered operand here — identity gather),
+                # same contract as DeviceExecutor's batch branch
+                g_new, active, dpos, ex_rel, pack, n_keep = (
+                    mk.mega_stage_pallas(
+                        self.scorer.slabs, xbuf, gbuf, s, t0, n_live,
+                        eps_pos, eps_neg,
+                        block_n=bn_bill,
+                        interpret=self.interpret,
+                    )
+                )
+            else:
+                # the survivor buffer IS the row set, so the scorer's
+                # gather is the identity over cap_l local rows (never the
+                # global batch)
+                scores = self.scorer.fn(xbuf, lane, t0, n_live)
+                scores = jnp.where(col_valid[s][None, :], scores, 0.0)
+                g_new, active, dpos, ex_rel = cascade_chunk_pallas(
+                    gbuf,
+                    scores,
+                    eps_pos[s],
+                    eps_neg[s],
+                    0,
+                    block_n=self.block_n,
+                    interpret=self.interpret,
+                    n_valid=n_live,
+                )
+                # cumsum-prefix compaction, local to the shard
+                keep = active.astype(bool) & (lane < n_live)
+                pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+                pack = jnp.where(keep, pos, cap_l)
+                n_keep = keep.sum(dtype=jnp.int32)
             lane_valid = lane < n_live
             newly = lane_valid & (ex_rel > 0)
             # exactly-once exit scatter: ids of retired/padding lanes aim
@@ -234,10 +280,6 @@ class ShardedDeviceExecutor:
             dec = dec.at[scat].set(dpos, mode="drop")
             ex = ex.at[scat].set(ex_rel + t0, mode="drop")
             gout = gout.at[scat].set(g_new, mode="drop")
-            # cumsum-prefix compaction, local to the shard
-            keep = active_b & lane_valid
-            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
-            pack = jnp.where(keep, pos, cap_l)
             xbuf = jnp.zeros_like(xbuf).at[pack].set(xbuf, mode="drop")
             gbuf = jnp.zeros_like(gbuf).at[pack].set(g_new, mode="drop")
             idbuf = (
@@ -245,7 +287,7 @@ class ShardedDeviceExecutor:
                 .at[pack]
                 .set(idbuf, mode="drop")
             )
-            n_live = keep.sum(dtype=jnp.int32)
+            n_live = n_keep
             # occupancy census: one small all_gather per stage drives both
             # the replicated exit total and the rebalance trigger
             counts = jax.lax.all_gather(n_live, DATA_AXIS)
@@ -364,7 +406,7 @@ class ShardedDeviceExecutor:
         shards = self.shards
         cap_l = self._cap_local(max(n, capacity or 0))
         cap_g = shards * cap_l
-        x = batch if prepared else self.scorer.prepare(batch)
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
         if x.shape[0] < cap_g:
             x = jnp.pad(x, ((0, cap_g - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
         order = (
@@ -457,6 +499,7 @@ class ShardedDeviceExecutor:
         lane = jnp.arange(cap_l, dtype=jnp.int32)
         ridx = jnp.arange(R_l, dtype=jnp.int32)
         lane_scorer = self.scorer.lane_fn
+        bn_bill = self.scorer.block_n or self.block_n
 
         def body(carry):
             (step, xbuf, stage, gbuf, idbuf, n_live, head, total,
@@ -487,23 +530,53 @@ class ShardedDeviceExecutor:
             # _stream_program mirrors this body on one device — a
             # semantics change there must be replayed here)
             t0_lane = jnp.take(stage_t0, stage)
-            scores = lane_scorer(xbuf, lane, t0_lane, n_live)
-            scores = jnp.where(
-                jnp.take(col_valid, stage, axis=0), scores, 0.0
-            )
-            g_new, active, dpos, ex_rel = cascade_lane_pallas(
-                gbuf,
-                scores,
-                jnp.take(eps_pos, stage, axis=0),
-                jnp.take(eps_neg, stage, axis=0),
-                block_n=self.block_n,
-                interpret=self.interpret,
-                n_valid=n_live,
-            )
-            active_b = active.astype(bool)
-            lane_valid = lane < n_live
+            stop = stage >= S - 1  # lanes running their LAST stage
+            if self.megakernel:
+                slabs = self.scorer.slabs
+                if slabs.variant == "matrix":
+                    idx = (
+                        t0_lane[:, None]
+                        + jnp.arange(W, dtype=jnp.int32)[None, :]
+                    )
+                    x_in = jnp.take_along_axis(xbuf, idx, axis=1)
+                else:
+                    x_in = xbuf
+                g_new, active, dpos, ex_rel, pack, n_keep = (
+                    mk.mega_lane_pallas(
+                        slabs, x_in, mk.gather_lane_slabs(slabs, stage),
+                        gbuf,
+                        jnp.take(eps_pos, stage, axis=0),
+                        jnp.take(eps_neg, stage, axis=0),
+                        stop, n_live,
+                        block_n=bn_bill,
+                        interpret=self.interpret,
+                    )
+                )
+                active_b = active.astype(bool)
+                lane_valid = lane < n_live
+            else:
+                scores = lane_scorer(xbuf, lane, t0_lane, n_live)
+                scores = jnp.where(
+                    jnp.take(col_valid, stage, axis=0), scores, 0.0
+                )
+                g_new, active, dpos, ex_rel = cascade_lane_pallas(
+                    gbuf,
+                    scores,
+                    jnp.take(eps_pos, stage, axis=0),
+                    jnp.take(eps_neg, stage, axis=0),
+                    block_n=self.block_n,
+                    interpret=self.interpret,
+                    n_valid=n_live,
+                )
+                active_b = active.astype(bool)
+                lane_valid = lane < n_live
+                # cumsum-prefix compaction, local to the shard
+                keep = lane_valid & active_b & ~stop
+                pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+                pack = jnp.where(keep, pos, cap_l)
+                n_keep = keep.sum(dtype=jnp.int32)
             newly = lane_valid & (ex_rel > 0)
-            ran_out = lane_valid & active_b & (stage >= S - 1)
+            ran_out = lane_valid & active_b & stop
             fin = newly | ran_out
             dec_val = jnp.where(
                 newly, dpos != 0, g_new >= beta
@@ -514,10 +587,6 @@ class ShardedDeviceExecutor:
             ex = ex.at[scat].set(ex_val, mode="drop")
             gout = gout.at[scat].set(g_new, mode="drop")
             done = done.at[scat].set(step, mode="drop")
-            # cumsum-prefix compaction, local to the shard
-            keep = lane_valid & active_b & ~ran_out
-            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
-            pack = jnp.where(keep, pos, cap_l)
             xbuf = jnp.zeros_like(xbuf).at[pack].set(xbuf, mode="drop")
             gbuf = jnp.zeros_like(gbuf).at[pack].set(g_new, mode="drop")
             stage = (
@@ -530,7 +599,7 @@ class ShardedDeviceExecutor:
                 .at[pack]
                 .set(idbuf, mode="drop")
             )
-            n_live = keep.sum(dtype=jnp.int32)
+            n_live = n_keep
             # mesh-wide census: the psum'd total now counts pending + live
             total = jax.lax.psum(n_live + (cnt - head), DATA_AXIS)
             return (
@@ -616,10 +685,11 @@ class ShardedDeviceExecutor:
         """
         plan = self.dplan.plan
         T = plan.T
-        if self.scorer.lane_fn is None:
+        if self.scorer.lane_fn is None and not self.megakernel:
             raise ValueError(
                 "run_stream needs a StageScorer with lane_fn (per-lane "
-                "stage scoring); this scorer only supports batch stages"
+                "stage scoring) on the multi-kernel path; this scorer "
+                "only supports batch stages"
             )
         shards = self.shards
         if n == 0:
@@ -638,7 +708,7 @@ class ShardedDeviceExecutor:
         cap_l = self._cap_local(capacity or n)
         R_l = -(-max(n, int(ring_capacity or n)) // shards)
         R_g = shards * R_l
-        x = batch if prepared else self.scorer.prepare(batch)
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
         if x.shape[0] < R_g:
             x = jnp.pad(x, ((0, R_g - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
         arr = (

@@ -104,6 +104,45 @@ def dominant_term(terms: dict[str, float]) -> str:
     ).replace("_s", "")
 
 
+_FUSION_KINDS = ("fusion", "custom-call", "while", "conditional")
+
+
+def fusion_stats(hlo_text: str) -> dict[str, int]:
+    """Kernel-launch census of a compiled module's HLO text.
+
+    Counts the op kinds that become separate device dispatches — XLA
+    ``fusion`` regions, ``custom-call``s (every Pallas kernel lowers to
+    one), and control-flow ops (``while``/``conditional``) — parsed from
+    the same ``op(`` grammar ``collective_bytes`` uses.  The megakernel
+    claim "one HBM round-trip per stage step" shows up here as a DROP in
+    ``custom_call`` + ``fusion`` count for the stage-loop body: three
+    Pallas launches (score, decide, compact) collapse into one.
+    """
+    counts = {k: 0 for k in _FUSION_KINDS}
+    for line in hlo_text.splitlines():
+        m = re.match(r"%?[\w\.\-]+ = (?:.+?) ([\w\-]+)\(", line.strip())
+        if m and m.group(1) in counts:
+            counts[m.group(1)] += 1
+    return {
+        "fusion": counts["fusion"],
+        "custom_call": counts["custom-call"],
+        "control_flow": counts["while"] + counts["conditional"],
+        "dispatch_total": sum(counts.values()),
+    }
+
+
+def attained_bandwidth(bytes_accessed: float, wall_s: float) -> dict[str, float]:
+    """Attained HBM bandwidth for a measured run: ``bytes_accessed`` from
+    ``cost_stats`` over the measured wall time, plus the fraction of the
+    ``HBM_BW`` hardware peak that represents.  On a CPU interpret-mode
+    run the wall (hence the attained number) is an emulation artifact —
+    the deterministic ``bytes_accessed`` is the comparable quantity."""
+    if wall_s <= 0:
+        return {"gbytes_per_s": 0.0, "peak_fraction": 0.0}
+    bw = float(bytes_accessed) / float(wall_s)
+    return {"gbytes_per_s": bw / 1e9, "peak_fraction": bw / HBM_BW}
+
+
 def memory_stats(compiled) -> dict[str, int]:
     try:
         ma = compiled.memory_analysis()
@@ -120,6 +159,10 @@ def memory_stats(compiled) -> dict[str, int]:
 def cost_stats(compiled) -> dict[str, float]:
     try:
         ca = compiled.cost_analysis()
+        # jax returns one properties dict per device program; some
+        # versions wrap it in a single-element list
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
         return {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -1,0 +1,305 @@
+"""Fused stage-step megakernel (DESIGN.md §9): parity, billing identity
+and the quantized-slab tolerance contract.
+
+The megakernel is the DEFAULT device scorer path for f32 slabs (bit-
+identical to the multi-kernel fallback, so the rest of the suite
+exercises it transparently); these tests pin the contract explicitly —
+against the host cascade oracle, against the fallback with
+``megakernel=False``, across shards 1/2/4 and streaming waves, and for
+bf16/int8 slabs under the tolerance oracle on quantization-grid-
+representable fixtures.
+
+All tests use LOCAL rngs so the session-rng stream stays stable for the
+rest of the suite.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.kernels import megakernel as mk
+from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    lattice_stage_scorer,
+    matrix_stage_scorer,
+    tree_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.launch.mesh import make_serving_mesh
+
+N_DEV = len(jax.devices())
+
+
+def _shards_params(counts=(1, 2, 4)):
+    return [
+        pytest.param(
+            k,
+            marks=pytest.mark.skipif(
+                N_DEV < k,
+                reason=f"needs {k} devices (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={k})",
+            ),
+        )
+        for k in counts
+    ]
+
+
+def _matrix_fixture(seed=3, n=220, t=24, chunk_t=4, quant="f32"):
+    rng = np.random.default_rng(seed)
+    F = make_scores(rng, n=n, t=t)
+    m = fit_qwyc(F, beta=0.0, alpha=0.02)
+    plan = CascadePlan.from_qwyc(m, chunk_t=chunk_t)
+    dplan = DevicePlan.from_plan(plan, quant=quant)
+    Fo = F[:, m.order].astype(np.float32)
+    return F, m, dplan, Fo
+
+
+def _tree_fixture(rng, quant="f32", chunk_t=5, t=16, depth=3, d=8, n=150):
+    feats = rng.integers(0, d, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    if quant == "f32":
+        leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    else:
+        leaves = _representable(rng, quant, (t, 1 << depth))
+    x = rng.uniform(size=(n, d)).astype(np.float32)
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=64,
+        )
+    )
+    m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+    dplan = DevicePlan.from_plan(
+        CascadePlan.from_qwyc(m, chunk_t=chunk_t), quant=quant
+    )
+    scorer = tree_stage_scorer(
+        dplan, feats[m.order], thrs[m.order], leaves[m.order], block_n=32
+    )
+    return F, m, dplan, scorer, x, leaves
+
+
+def _representable(rng, quant, shape):
+    """Payloads already ON the quantization grid, so the quantized slabs
+    are exact (eps_position == 0) and the oracle's decisions cannot move
+    — the certification protocol for bf16/int8 fixtures."""
+    if quant == "bf16":
+        v = rng.normal(size=shape).astype(np.float32)
+        return np.asarray(jnp.asarray(v, jnp.bfloat16), np.float32)
+    sc = 2.0 ** -7  # power-of-two scale: float-exact per-stage scales
+    v = (rng.integers(-127, 128, size=shape) * sc).astype(np.float32)
+    v[:, 0] = 127 * sc  # pin each model's slab max -> computed scale == sc
+    return v
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.decisions, b.decisions)
+    np.testing.assert_array_equal(a.exit_step, b.exit_step)
+    np.testing.assert_array_equal(a.g_final, b.g_final)
+    assert a.scores_computed == b.scores_computed
+
+
+# ---------------------------------------------------------------------------
+# default-on policy
+# ---------------------------------------------------------------------------
+
+
+def test_megakernel_defaults_on_for_f32_slabs_only():
+    _, _, dplan, _ = _matrix_fixture()
+    scorer = matrix_stage_scorer(dplan)
+    assert DeviceExecutor(dplan, scorer, block_n=32).megakernel
+    assert not DeviceExecutor(
+        dplan, scorer, block_n=32, megakernel=False
+    ).megakernel
+    # quantized slabs need the explicit opt-in (results are no longer
+    # bit-identical to the fallback, only tolerance-certified)
+    _, _, dplan_q, _ = _matrix_fixture(quant="bf16")
+    scorer_q = matrix_stage_scorer(dplan_q)
+    assert not DeviceExecutor(dplan_q, scorer_q, block_n=32).megakernel
+    assert DeviceExecutor(
+        dplan_q, scorer_q, block_n=32, megakernel=True
+    ).megakernel
+
+
+def test_megakernel_requires_slabs():
+    _, _, dplan, _ = _matrix_fixture()
+    bare = dataclasses.replace(matrix_stage_scorer(dplan), slabs=None)
+    assert not DeviceExecutor(dplan, bare, block_n=32).megakernel
+    with pytest.raises(ValueError, match="ParamSlabs"):
+        DeviceExecutor(dplan, bare, block_n=32, megakernel=True)
+
+
+def test_int8_matrix_slabs_refused():
+    _, _, dplan, _ = _matrix_fixture()
+    with pytest.raises(ValueError, match="f32/bf16"):
+        mk.build_matrix_slabs(dplan, quant="int8")
+
+
+# ---------------------------------------------------------------------------
+# f32: bit-exact parity + billing identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk_t", [1, 7, 100])
+def test_matrix_f32_bit_parity(chunk_t):
+    # chunk_t=7 on t=24 leaves a 3-wide final stage: the width mask must
+    # zero the slab overhang (those operand columns are REAL next-stage
+    # scores, not padding); chunk_t=100 is the single-stage degenerate
+    F, m, dplan, Fo = _matrix_fixture(chunk_t=chunk_t)
+    ev = evaluate_cascade(m, F)
+    scorer = matrix_stage_scorer(dplan)
+    dex = DeviceExecutor(dplan, scorer, block_n=32)
+    res = dex.run(Fo, F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    fb = DeviceExecutor(dplan, scorer, block_n=32, megakernel=False).run(
+        Fo, F.shape[0]
+    )
+    _assert_identical(res, fb)
+    assert [c.n_in for c in res.chunk_stats] == [c.n_in for c in fb.chunk_stats]
+    assert dex.traces == 1
+
+
+@pytest.mark.parametrize("variant", ["tree", "lattice"])
+def test_scorer_variants_f32_batch_and_stream(variant):
+    rng = np.random.default_rng(11)
+    if variant == "tree":
+        F, m, dplan, scorer, x, _ = _tree_fixture(rng)
+    else:
+        t, s, d, n = 18, 4, 9, 150
+        theta = rng.normal(size=(t, 1 << s)).astype(np.float32)
+        feats = np.stack(
+            [rng.choice(d, s, replace=False) for _ in range(t)]
+        ).astype(np.int32)
+        x = rng.uniform(size=(n, d)).astype(np.float32)
+        F = np.asarray(
+            ops.lattice_scores(
+                jnp.asarray(theta), jnp.asarray(feats), jnp.asarray(x),
+                block_n=64,
+            )
+        )
+        m = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+        dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
+        scorer = lattice_stage_scorer(
+            dplan, theta[m.order], feats[m.order], block_n=32
+        )
+    n = x.shape[0]
+    ev = evaluate_cascade(m, F)
+    dex = DeviceExecutor(dplan, scorer, block_n=32)
+    fbx = DeviceExecutor(dplan, scorer, block_n=32, megakernel=False)
+    assert dex.megakernel and not fbx.megakernel
+    res, fb = dex.run(x, n), fbx.run(x, n)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    _assert_identical(res, fb)
+    arr = np.sort(np.random.default_rng(5).integers(0, 10, size=n)).astype(
+        np.int32
+    )
+    s_mk = dex.run_stream(x, n, arrivals=arr, capacity=32)
+    s_fb = fbx.run_stream(x, n, arrivals=arr, capacity=32)
+    _assert_identical(s_mk, s_fb)
+    np.testing.assert_array_equal(s_mk.admit_step, s_fb.admit_step)
+    np.testing.assert_array_equal(s_mk.done_step, s_fb.done_step)
+
+
+def test_streaming_waves_reuse_one_trace():
+    F, m, dplan, Fo = _matrix_fixture()
+    n = F.shape[0]
+    dex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32)
+    fbx = DeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), block_n=32, megakernel=False
+    )
+    for seed in (0, 1):  # two waves, different arrival traces, one shape
+        arr = np.sort(
+            np.random.default_rng(seed).integers(0, 12, size=n)
+        ).astype(np.int32)
+        s_mk = dex.run_stream(Fo, n, arrivals=arr, capacity=64)
+        s_fb = fbx.run_stream(Fo, n, arrivals=arr, capacity=64)
+        _assert_identical(s_mk, s_fb)
+        np.testing.assert_array_equal(s_mk.admit_step, s_fb.admit_step)
+    assert dex.traces == 1
+
+
+@pytest.mark.parametrize("shards", _shards_params())
+def test_sharded_megakernel_billing_identity(shards):
+    F, m, dplan, Fo = _matrix_fixture(n=256)
+    n = F.shape[0]
+    ev = evaluate_cascade(m, F)
+    mesh = make_serving_mesh(shards)
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), mesh, block_n=32
+    )
+    sx_fb = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), mesh, block_n=32, megakernel=False
+    )
+    assert sx.megakernel and not sx_fb.megakernel
+    res, fb = sx.run(Fo, n), sx_fb.run(Fo, n)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    _assert_identical(res, fb)
+    assert sx.last_run_info["stages_run"] == sx_fb.last_run_info["stages_run"]
+    assert sx.traces == 1 and sx_fb.traces == 1
+
+
+# ---------------------------------------------------------------------------
+# quantized slabs under the tolerance oracle
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_bf16_within_tolerance():
+    F, m, dplan_q, Fo = _matrix_fixture(quant="bf16")
+    scorer = matrix_stage_scorer(dplan_q)
+    res = DeviceExecutor(
+        dplan_q, scorer, block_n=32, megakernel=True
+    ).run(Fo, F.shape[0])
+    oracle = DeviceExecutor(
+        dplan_q, scorer, block_n=32, megakernel=False
+    ).run(Fo, F.shape[0])
+    rep = mk.check_parity(
+        oracle, res, mk.matrix_eps_position(Fo, "bf16"),
+        g_scale=float(np.abs(Fo).sum(axis=1).max()),
+    )
+    assert rep["max_err"] <= rep["max_bound"]
+    assert res.scores_computed == oracle.scores_computed
+
+
+@pytest.mark.parametrize("quant", ["bf16", "int8"])
+def test_tree_quantized_representable_fixture(quant):
+    rng = np.random.default_rng(17)
+    F, m, dplan_q, scorer, x, leaves = _tree_fixture(rng, quant=quant)
+    n = x.shape[0]
+    # representable payloads: the slabs round-trip exactly, so the
+    # tolerance oracle certifies with a zero payload term
+    assert scorer.slabs.quant == quant
+    assert scorer.slabs.eps_position.max() == 0.0
+    res = DeviceExecutor(dplan_q, scorer, block_n=32, megakernel=True).run(x, n)
+    oracle = DeviceExecutor(
+        dplan_q, scorer, block_n=32, megakernel=False
+    ).run(x, n)
+    rep = mk.check_parity(
+        oracle, res, scorer.slabs.eps_position,
+        g_scale=float(np.abs(leaves).max() * F.shape[1]),
+    )
+    assert rep["max_err"] <= rep["max_bound"]
+    assert res.scores_computed == oracle.scores_computed
+    # streaming path under the same certification
+    arr = np.sort(np.random.default_rng(2).integers(0, 8, size=n)).astype(
+        np.int32
+    )
+    s_res = DeviceExecutor(
+        dplan_q, scorer, block_n=32, megakernel=True
+    ).run_stream(x, n, arrivals=arr, capacity=32)
+    s_orc = DeviceExecutor(
+        dplan_q, scorer, block_n=32, megakernel=False
+    ).run_stream(x, n, arrivals=arr, capacity=32)
+    mk.check_parity(
+        s_orc, s_res, scorer.slabs.eps_position,
+        g_scale=float(np.abs(leaves).max() * F.shape[1]),
+    )
+    assert s_res.scores_computed == s_orc.scores_computed

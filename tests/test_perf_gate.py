@@ -67,5 +67,34 @@ def test_committed_baseline_is_wellformed():
     assert counters and all(
         isinstance(v, int) and v >= 0 for v in counters.values()
     )
-    for family in ("both.host.", "both.device.", "both.sharded4", "serve."):
+    for family in (
+        "both.host.", "both.device.", "both.sharded4", "serve.",
+        # megakernel billing-identity families (DESIGN.md §9): the fused
+        # default path, its multi-kernel fallback, the quantized-slab
+        # cells, and the streaming mk-vs-fallback pair
+        "both.device.multikernel.", "both.device.bf16mk.",
+        "both.sharded2.multikernel.", "both.sharded4.multikernel.",
+        "stream.device.mk.", "stream.device.multikernel.",
+    ):
         assert any(k.startswith(family) for k in counters), family
+    # the identity contract itself, as committed: fused and fallback
+    # device counters must be byte-equal in the baseline artifact
+    for p in ("both", "neg_only"):
+        for stat in ("scores", "stages"):
+            assert (
+                counters[f"{p}.device.{stat}"]
+                == counters[f"{p}.device.multikernel.{stat}"]
+            )
+        for shards in (2, 4):
+            assert (
+                counters[f"{p}.sharded{shards}.scores"]
+                == counters[f"{p}.sharded{shards}.multikernel.scores"]
+            )
+    assert (
+        counters["stream.device.mk.scores"]
+        == counters["stream.device.multikernel.scores"]
+    )
+    assert (
+        counters["stream.device.mk.steps"]
+        == counters["stream.device.multikernel.steps"]
+    )

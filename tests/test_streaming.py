@@ -173,16 +173,26 @@ def test_stream_tree_scorer_parity():
 
 
 def test_stream_requires_lane_scorer():
-    """A scorer without ``lane_fn`` cannot serve mixed-stage buffers —
-    the executor refuses up front instead of mis-scoring."""
+    """A scorer with neither ``lane_fn`` nor megakernel slabs cannot
+    serve mixed-stage buffers — the executor refuses up front instead of
+    mis-scoring.  (With slabs present, the megakernel's per-lane slab
+    gather covers streaming and no lane_fn is needed.)"""
     rng = np.random.default_rng(64)
     F, m = _fit(rng, t=12)
     dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(m, chunk_t=4))
     base = matrix_stage_scorer(dplan)
-    no_lane = dataclasses.replace(base, lane_fn=None)
+    no_lane = dataclasses.replace(base, lane_fn=None, slabs=None)
     dex = DeviceExecutor(dplan, no_lane, block_n=32)
     with pytest.raises(ValueError, match="lane_fn"):
         dex.run_stream(F[:, m.order].astype(np.float32), F.shape[0])
+    # slabs without lane_fn: streaming runs on the megakernel path
+    slabs_only = dataclasses.replace(base, lane_fn=None)
+    res = DeviceExecutor(dplan, slabs_only, block_n=32).run_stream(
+        F[:, m.order].astype(np.float32), F.shape[0]
+    )
+    ref = dex.run(F[:, m.order].astype(np.float32), F.shape[0])
+    np.testing.assert_array_equal(res.decisions, ref.decisions)
+    np.testing.assert_array_equal(res.exit_step, ref.exit_step)
 
 
 def test_stream_empty_and_occupancy_reconstruction():

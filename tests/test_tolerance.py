@@ -1,0 +1,103 @@
+"""Tolerance oracle (DESIGN.md §9): the parity bound the quantized
+megakernel is certified against.
+
+``tolerance_bound`` turns the build-time per-position payload error
+(``ParamSlabs.eps_position``) into a per-row |Δg| bound over each row's
+OWN walk length; ``check_parity`` enforces the full contract — decisions
+and exit steps EQUAL, g within the bound — and must REFUSE fixtures the
+bound cannot certify (a loosened bound must never silently pass a
+decision flip).
+"""
+
+import numpy as np
+import pytest
+
+from repro.kernels import megakernel as mk
+
+
+class _Res:
+    """Duck-typed result (decisions / exit_step / g_final), the shape
+    ``check_parity`` documents for ExecutorResult and StreamResult."""
+
+    def __init__(self, dec, ex, g):
+        self.decisions = np.asarray(dec, dtype=bool)
+        self.exit_step = np.asarray(ex, dtype=np.int64)
+        self.g_final = np.asarray(g, dtype=np.float64)
+
+
+def test_bound_is_cumulative_over_each_rows_walk():
+    eps = np.array([1e-3, 1e-4, 1e-5])
+    b = mk.tolerance_bound(eps, np.array([1, 2, 3]), g_scale=0.0)
+    np.testing.assert_allclose(b, np.cumsum(eps))
+
+
+def test_bound_zero_for_exact_payloads_without_accumulation_term():
+    b = mk.tolerance_bound(np.zeros(5), np.array([0, 3, 5]), g_scale=0.0)
+    assert np.all(b == 0.0)
+
+
+def test_bound_accumulation_term_scales_with_steps_and_magnitude():
+    b = mk.tolerance_bound(np.zeros(4), np.array([4]), g_scale=2.0)
+    assert b[0] == pytest.approx(4 * mk.F32_EPS * 2.0)
+    b1 = mk.tolerance_bound(np.zeros(4), np.array([1]), g_scale=2.0)
+    assert b1[0] == pytest.approx(mk.F32_EPS * 2.0)
+
+
+def test_check_parity_known_good_within_bound():
+    oracle = _Res([1, 0, 1], [2, 3, 1], [0.5, -0.25, 0.125])
+    # g perturbed by less than the position-1..2 cumulative error
+    result = _Res([1, 0, 1], [2, 3, 1], [0.5 + 5e-4, -0.25, 0.125])
+    rep = mk.check_parity(oracle, result, np.array([1e-3, 1e-3, 1e-3]))
+    assert rep["rows"] == 3
+    assert not rep["exact"]
+    assert rep["max_err"] <= rep["max_bound"]
+
+
+def test_check_parity_exact_run_reports_exact():
+    r = _Res([1, 0], [2, 2], [0.5, -0.5])
+    rep = mk.check_parity(r, _Res([1, 0], [2, 2], [0.5, -0.5]), np.zeros(2))
+    assert rep["exact"] and rep["max_err"] == 0.0
+
+
+def test_check_parity_refuses_exit_step_mismatch():
+    oracle = _Res([1, 0], [2, 3], [0.5, -0.25])
+    moved = _Res([1, 0], [2, 2], [0.5, -0.25])
+    # a HUGE eps must not rescue a moved exit: the walk itself differed
+    with pytest.raises(AssertionError, match="cannot be certified"):
+        mk.check_parity(oracle, moved, np.full(3, 1e6))
+
+
+def test_check_parity_refuses_decision_mismatch():
+    oracle = _Res([1, 0], [2, 3], [0.5, -0.25])
+    flipped = _Res([1, 1], [2, 3], [0.5, -0.25])
+    with pytest.raises(AssertionError, match="decision mismatch"):
+        mk.check_parity(oracle, flipped, np.full(3, 1e6))
+
+
+def test_check_parity_refuses_g_outside_bound():
+    oracle = _Res([1, 0], [2, 3], [0.5, -0.25])
+    off = _Res([1, 0], [2, 3], [0.5 + 1e-2, -0.25])
+    with pytest.raises(AssertionError, match="outside tolerance"):
+        mk.check_parity(oracle, off, np.full(3, 1e-6), g_scale=0.0)
+
+
+def test_check_parity_refuses_shape_mismatch():
+    with pytest.raises(AssertionError, match="shape mismatch"):
+        mk.check_parity(
+            _Res([1, 0], [1, 1], [0.0, 0.0]),
+            _Res([1], [1], [0.0]),
+            np.zeros(2),
+        )
+
+
+def test_matrix_eps_position_bf16_vs_f32():
+    rng = np.random.default_rng(0)
+    F = rng.normal(size=(64, 6)).astype(np.float32)
+    assert np.all(mk.matrix_eps_position(F, "f32") == 0.0)
+    eps = mk.matrix_eps_position(F, "bf16")
+    assert eps.shape == (6,) and np.all(eps >= 0.0) and eps.max() > 0.0
+    # pre-rounding through bf16 makes the fixture representable: eps -> 0
+    import jax.numpy as jnp
+
+    Fq = np.asarray(jnp.asarray(F, jnp.bfloat16), np.float32)
+    assert np.all(mk.matrix_eps_position(Fq, "bf16") == 0.0)
