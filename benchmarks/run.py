@@ -4,12 +4,18 @@ Prints ``name,us_per_call,derived`` CSV rows (us_per_call = interpreted-
 kernel wall time per example where measured, else blank; derived = the
 table's headline number).  Detailed rows land in benchmarks/results/*.json.
 
+Sections fail SOFT: a crashing benchmark prints a ``FAILED`` row with
+the exception and the driver keeps going, so one broken table never
+hides the rest of the suite's numbers.  The exit code turns nonzero at
+the END iff any section failed.
+
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 
@@ -41,11 +47,27 @@ def main() -> None:
         bench_lattice_rw,
         bench_orderings,
     )
+    from repro.api.registry import get_backend
+
+    import numpy as _np
+
+    failures: list[tuple[str, BaseException]] = []
+
+    def _section(name: str, fn) -> None:
+        """Run one benchmark section fail-soft: record the exception as
+        a FAILED row and keep the driver alive for the remaining
+        sections; ``main`` exits nonzero at the end iff anything
+        failed."""
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 - the whole point
+            failures.append((name, e))
+            print(f"{name},,FAILED: {type(e).__name__}: {e}")
 
     print("name,us_per_call,derived")
 
     # Figures 1 & 3: Adult + Nomao tradeoff curves
-    for dataset in ("adult", "nomao"):
+    def sec_tradeoff(dataset):
         t0 = time.time()
         rows = _cached(
             f"gbt_tradeoff_{dataset}",
@@ -59,69 +81,88 @@ def main() -> None:
             f"/{T_big} diff={best['diff']:.4f} ({time.time()-t0:.0f}s)"
         )
 
+    for dataset in ("adult", "nomao"):
+        _section(f"fig1_{dataset}", lambda d=dataset: sec_tradeoff(d))
+
     # Tables 2-5: lattice Filter-and-Score timings
     # T=500 QWYC fits are O(T^2 N log N) on one CPU core: cap to 150 here
     # (structure preserved; see EXPERIMENTS.md note).
-    rows = _cached(
-        "lattice_rw_tables",
-        lambda: bench_lattice_rw.run(scale=min(scale, 0.5), T_cap=150),
-        args.recompute,
-    )
-    for r in rows:
-        if r["algorithm"] == "qwyc":
-            us = r.get("us_per_example", "")
-            print(
-                f"{r['experiment']},{us:.1f},"
-                f"qwyc mean_models={r['mean_models']:.2f}/{r['T']} "
-                f"diff={r['diff']:.4f} speedup={r['speedup']:.2f}x"
-            )
-        if r["algorithm"] == "fan":
-            print(
-                f"{r['experiment']}_fan,,fan mean_models={r['mean_models']:.2f}"
-                f"/{r['T']} diff={r['diff']:.4f} speedup={r['speedup']:.2f}x"
-            )
+    def sec_lattice():
+        rows = _cached(
+            "lattice_rw_tables",
+            lambda: bench_lattice_rw.run(scale=min(scale, 0.5), T_cap=150),
+            args.recompute,
+        )
+        for r in rows:
+            if r["algorithm"] == "qwyc":
+                us = r.get("us_per_example", "")
+                print(
+                    f"{r['experiment']},{us:.1f},"
+                    f"qwyc mean_models={r['mean_models']:.2f}/{r['T']} "
+                    f"diff={r['diff']:.4f} speedup={r['speedup']:.2f}x"
+                )
+            if r["algorithm"] == "fan":
+                print(
+                    f"{r['experiment']}_fan,,fan mean_models={r['mean_models']:.2f}"
+                    f"/{r['T']} diff={r['diff']:.4f} speedup={r['speedup']:.2f}x"
+                )
+
+    _section("lattice_rw", sec_lattice)
 
     # Appendix B / Figures 2 & 4: orderings comparison
-    rows = _cached(
-        "orderings_adult",
-        lambda: bench_orderings.run("adult", T=min(200, T_big), scale=scale),
-        args.recompute,
-    )
-    joint = next(r for r in rows if r["ordering"] == "qwyc_joint")
-    others = [r for r in rows if r["ordering"] != "qwyc_joint" and "mean_models" in r]
-    best_other = min(others, key=lambda r: r["mean_models"])
-    print(
-        f"appB_orderings,,qwyc_joint={joint['mean_models']:.1f} "
-        f"best_fixed={best_other['ordering']}:{best_other['mean_models']:.1f}"
-    )
+    def sec_orderings():
+        rows = _cached(
+            "orderings_adult",
+            lambda: bench_orderings.run("adult", T=min(200, T_big), scale=scale),
+            args.recompute,
+        )
+        joint = next(r for r in rows if r["ordering"] == "qwyc_joint")
+        others = [
+            r for r in rows if r["ordering"] != "qwyc_joint" and "mean_models" in r
+        ]
+        best_other = min(others, key=lambda r: r["mean_models"])
+        print(
+            f"appB_orderings,,qwyc_joint={joint['mean_models']:.1f} "
+            f"best_fixed={best_other['ordering']}:{best_other['mean_models']:.1f}"
+        )
+
+    _section("appB_orderings", sec_orderings)
 
     # Figures 5-6: exit-step histograms
-    rows = _cached(
-        "histograms_adult",
-        lambda: bench_histograms.run("adult", T=T_big, scale=scale),
-        args.recompute,
-    )
-    q = next(r for r in rows if r["method"] == "qwyc_star")
-    print(f"fig5_histogram,,qwyc mean={q['mean']:.1f} first_bucket={q['hist'][0]}")
+    def sec_histograms():
+        rows = _cached(
+            "histograms_adult",
+            lambda: bench_histograms.run("adult", T=T_big, scale=scale),
+            args.recompute,
+        )
+        q = next(r for r in rows if r["method"] == "qwyc_star")
+        print(
+            f"fig5_histogram,,qwyc mean={q['mean']:.1f} first_bucket={q['hist'][0]}"
+        )
+
+    _section("fig5_histogram", sec_histograms)
 
     # Lazy chunked executor vs eager full-matrix (DESIGN.md §4)
-    rows = _cached(
-        "executor_adult",
-        lambda: bench_executor.run(
-            "adult", T=min(100, T_big), scale=min(scale, 0.25)
-        ),
-        args.recompute,
-    )
-    for r in rows:
-        if r["exit_rate"] > 0:
-            assert r["lazy_skips_work"], "lazy path failed to skip work"
-    busiest = min(rows, key=lambda r: r["compute_fraction"])
-    print(
-        f"executor_lazy,,scores {busiest['scores_lazy']}/{busiest['scores_eager']}"
-        f" ({busiest['compute_fraction']:.0%} of eager) at alpha="
-        f"{busiest['alpha']} exit_rate={busiest['exit_rate']:.2f}"
-        f" wall eager={busiest['eager_s']:.2f}s lazy={busiest['lazy_s']:.2f}s"
-    )
+    def sec_executor():
+        rows = _cached(
+            "executor_adult",
+            lambda: bench_executor.run(
+                "adult", T=min(100, T_big), scale=min(scale, 0.25)
+            ),
+            args.recompute,
+        )
+        for r in rows:
+            if r["exit_rate"] > 0:
+                assert r["lazy_skips_work"], "lazy path failed to skip work"
+        busiest = min(rows, key=lambda r: r["compute_fraction"])
+        print(
+            f"executor_lazy,,scores {busiest['scores_lazy']}/{busiest['scores_eager']}"
+            f" ({busiest['compute_fraction']:.0%} of eager) at alpha="
+            f"{busiest['alpha']} exit_rate={busiest['exit_rate']:.2f}"
+            f" wall eager={busiest['eager_s']:.2f}s lazy={busiest['lazy_s']:.2f}s"
+        )
+
+    _section("executor_lazy", sec_executor)
 
     # Host-looped lazy vs on-device executor — wall-clock (DESIGN.md §5).
     # Device/sharded benches are environment-sensitive (device counts,
@@ -129,14 +170,13 @@ def main() -> None:
     # registry (the ONE place that decides "do we have the devices"), and
     # a RuntimeError (what jax/XLA and mesh construction raise) must SKIP
     # with a clear message, never crash the rest of the suite.  Anything
-    # else is a programming error and propagates.
-    from repro.api.registry import get_backend
-
-    rows = []
-    dev_ok, dev_why = get_backend("device").available()
-    if not dev_ok:
-        print(f"executor_device,,SKIPPED: {dev_why}")
-    else:
+    # else is a programming error and lands as this section's FAILED row.
+    def sec_device():
+        rows = []
+        dev_ok, dev_why = get_backend("device").available()
+        if not dev_ok:
+            print(f"executor_device,,SKIPPED: {dev_why}")
+            return
         try:
             rows = _cached(
                 "device_executor_adult",
@@ -148,34 +188,36 @@ def main() -> None:
         except RuntimeError as e:  # pragma: no cover - environment-dependent
             print(f"executor_device,,SKIPPED ({type(e).__name__}: {e})")
             rows = []
-    big = [r for r in rows if r["n"] >= 1024]
-    # wall-clock is nondeterministic: report losses, don't abort the driver
-    # (tests/test_bench_device.py is the asserting gate, and a cached loss
-    # here would otherwise re-fail every run until --recompute)
-    for r in big:
-        if not r["device_wins"]:
+        big = [r for r in rows if r["n"] >= 1024]
+        # wall-clock is nondeterministic: report losses, don't abort the
+        # driver (tests/test_bench_device.py is the asserting gate, and a
+        # cached loss here would otherwise re-fail every run until
+        # --recompute)
+        for r in big:
+            if not r["device_wins"]:
+                print(
+                    f"executor_device,,WARNING host loop won at n={r['n']} "
+                    f"alpha={r['alpha']} — rerun with --recompute to re-measure"
+                )
+        if big:
             print(
-                f"executor_device,,WARNING host loop won at n={r['n']} "
-                f"alpha={r['alpha']} — rerun with --recompute to re-measure"
+                f"executor_device,,batch>=1024 median speedup "
+                f"{_np.median([r['speedup'] for r in big]):.2f}x over host loop "
+                f"(one trace per batch shape: "
+                f"{all(r['device_traces'] == r['device_shapes'] for r in rows)})"
             )
-    import numpy as _np
 
-    if big:
-        print(
-            f"executor_device,,batch>=1024 median speedup "
-            f"{_np.median([r['speedup'] for r in big]):.2f}x over host loop "
-            f"(one trace per batch shape: "
-            f"{all(r['device_traces'] == r['device_shapes'] for r in rows)})"
-        )
+    _section("executor_device", sec_device)
 
     # Sharded data-parallel executor (DESIGN.md §6): multi-shard cells
     # need multiple XLA devices — the backend's own availability check
     # decides, and on a single device we skip with its reason (and exit 0)
     # instead of crashing mid-suite
-    sh_ok, sh_why = get_backend("sharded").available()
-    if not sh_ok:
-        print(f"executor_sharded,,SKIPPED: {sh_why}")
-    else:
+    def sec_sharded():
+        sh_ok, sh_why = get_backend("sharded").available()
+        if not sh_ok:
+            print(f"executor_sharded,,SKIPPED: {sh_why}")
+            return
         from benchmarks import bench_sharded
 
         try:
@@ -202,13 +244,16 @@ def main() -> None:
                 f"{all(r['occupancy_sums_match_single_device'] for r in rows)})"
             )
 
+    _section("executor_sharded", sec_sharded)
+
     # Streaming admission vs flush serving (DESIGN.md §8): needs the
     # fused device program, so availability — and the SKIPPED reason —
     # comes from the device backend, exactly like the device bench above
-    st_ok, st_why = get_backend("device").available()
-    if not st_ok:
-        print(f"executor_streaming,,SKIPPED: {st_why}")
-    else:
+    def sec_streaming():
+        st_ok, st_why = get_backend("device").available()
+        if not st_ok:
+            print(f"executor_streaming,,SKIPPED: {st_why}")
+            return
         from benchmarks import bench_streaming
 
         try:
@@ -240,12 +285,15 @@ def main() -> None:
                 f"{all(r['parity_with_host_oracle'] and r['traces'] == 1 for r in rows)})"
             )
 
+    _section("executor_streaming", sec_streaming)
+
     # Fused stage-step megakernel vs the multi-kernel device path
     # (DESIGN.md §9) — same availability/skip contract as the device bench
-    mk_ok, mk_why = get_backend("device").available()
-    if not mk_ok:
-        print(f"executor_megakernel,,SKIPPED: {mk_why}")
-    else:
+    def sec_megakernel():
+        mk_ok, mk_why = get_backend("device").available()
+        if not mk_ok:
+            print(f"executor_megakernel,,SKIPPED: {mk_why}")
+            return
         try:
             rows = _cached(
                 "megakernel_adult",
@@ -266,32 +314,81 @@ def main() -> None:
                 f"{all(r['parity_exact'] for r in rows if r['quant'] == 'f32')})"
             )
 
+    _section("executor_megakernel", sec_megakernel)
+
+    # Chaos: fault injection vs the guarded serving stack (DESIGN.md
+    # §10, EXPERIMENTS.md §Chaos protocol) — deterministic seeds, so the
+    # rows are stable run to run; the merge into BENCH_executor.json is
+    # re-applied even on cache hits (idempotent) so the artifact's
+    # "chaos" section can never go stale relative to the cached rows
+    def sec_chaos():
+        from benchmarks import bench_chaos
+
+        kw = (
+            dict(T=40, scale=0.1, n_requests=128)
+            if args.quick
+            else dict(T=60, scale=0.25, n_requests=256)
+        )
+        rows = _cached(
+            "chaos_adult",
+            lambda: bench_chaos.run("adult", **kw),
+            args.recompute,
+        )
+        bench_chaos._merge_root_summary("adult", rows)
+        bad = [r["experiment"] for r in rows if not r.get("ok")]
+        assert not bad, f"chaos scenario(s) failed: {bad}"
+        wd = next(r for r in rows if r["experiment"] == "chaos_watchdog_drift")
+        print(
+            f"chaos,,all {len(rows)} scenarios ok (seed "
+            f"{bench_chaos.CHAOS_SEED}); watchdog recovery "
+            f"{wd['recovery_latency_flushes']} flush(es) / "
+            f"{wd['recovery_latency_stage_steps']} stage steps"
+        )
+
+    _section("chaos", sec_chaos)
+
     # Roofline: the stage-loop megakernel report (deterministic modeled
     # HBM traffic; see EXPERIMENTS.md §Roofline protocol) + the dry-run
     # grid table if its artifact is present
-    from benchmarks import roofline
+    def sec_roofline():
+        from benchmarks import roofline
 
-    rf_ok, rf_why = get_backend("device").available()
-    if not rf_ok:
-        print(f"roofline_stage_loop,,SKIPPED: {rf_why}")
-    else:
-        try:
-            roof = roofline.stage_loop_report(repeats=1 if args.quick else 3)
+        rf_ok, rf_why = get_backend("device").available()
+        if not rf_ok:
+            print(f"roofline_stage_loop,,SKIPPED: {rf_why}")
+        else:
+            try:
+                roof = roofline.stage_loop_report(repeats=1 if args.quick else 3)
+                print(
+                    f"roofline_stage_loop,,modeled HBM bytes "
+                    f"x{roof['ratios']['modeled_bytes']:.2f} less fused "
+                    f"({roof['modeled']['multikernel_bytes']} -> "
+                    f"{roof['modeled']['megakernel_bytes']} bytes/run)"
+                )
+            except RuntimeError as e:  # pragma: no cover - environment-dependent
+                print(f"roofline_stage_loop,,SKIPPED ({type(e).__name__}: {e})")
+
+        data = roofline.load("16x16")
+        if data:
+            ok = sum(1 for v in data.values() if "error" not in v)
             print(
-                f"roofline_stage_loop,,modeled HBM bytes "
-                f"x{roof['ratios']['modeled_bytes']:.2f} less fused "
-                f"({roof['modeled']['multikernel_bytes']} -> "
-                f"{roof['modeled']['megakernel_bytes']} bytes/run)"
+                f"roofline_grid,,{ok}/{len(data)} pairs compiled "
+                "(see EXPERIMENTS.md)"
             )
-        except RuntimeError as e:  # pragma: no cover - environment-dependent
-            print(f"roofline_stage_loop,,SKIPPED ({type(e).__name__}: {e})")
+        else:
+            print(
+                "roofline_grid,,not yet run (python -m repro.launch.dryrun --all)"
+            )
 
-    data = roofline.load("16x16")
-    if data:
-        ok = sum(1 for v in data.values() if "error" not in v)
-        print(f"roofline_grid,,{ok}/{len(data)} pairs compiled (see EXPERIMENTS.md)")
-    else:
-        print("roofline_grid,,not yet run (python -m repro.launch.dryrun --all)")
+    _section("roofline", sec_roofline)
+
+    if failures:
+        names = ", ".join(n for n, _ in failures)
+        print(
+            f"[run] {len(failures)} section(s) FAILED: {names}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
 
 
 if __name__ == "__main__":

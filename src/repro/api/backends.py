@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Protocol, runtime_checkable
+import time
+from typing import Any, Callable, Protocol, runtime_checkable
 
 import jax
 
@@ -43,14 +44,19 @@ from repro.kernels.device_executor import (
 )
 from repro.kernels.sharded_executor import ShardedDeviceExecutor
 from repro.launch.mesh import make_serving_mesh
+from repro.testing import faults
 
 __all__ = [
     "Backend",
     "BackendCapabilities",
+    "BackoffPolicy",
+    "DegradationEvent",
+    "DegradationLadder",
     "HostBackend",
     "DeviceBackend",
     "ShardedBackend",
     "INTERPRET_ONLY",
+    "fallback_rung",
 ]
 
 # Escape hatch for environments where the fused device program must not
@@ -146,7 +152,9 @@ class HostBackend:
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
-        return True, "host stage loop runs anywhere (numpy control flow)"
+        return faults.on_available(
+            self.name, True, "host stage loop runs anywhere (numpy control flow)"
+        )
 
     def make_executor(
         self,
@@ -156,6 +164,7 @@ class HostBackend:
         decide_fn=None,
         bill_block: int = 1,
     ) -> ChunkedExecutor:
+        faults.on_make_executor(self.name)
         return ChunkedExecutor(
             _as_cascade_plan(plan), producer,
             decide_fn=decide_fn, bill_block=bill_block,
@@ -189,8 +198,10 @@ class DeviceBackend:
             )
         nd = _n_devices(n_devices)
         if nd < self.capabilities.min_devices:
-            return False, f"no XLA devices visible (have {nd})"
-        return True, f"{nd} XLA device(s)"
+            return faults.on_available(
+                self.name, False, f"no XLA devices visible (have {nd})"
+            )
+        return faults.on_available(self.name, True, f"{nd} XLA device(s)")
 
     def make_executor(
         self,
@@ -200,13 +211,15 @@ class DeviceBackend:
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
         megakernel: bool | None = None,
+        check_finite: bool = False,
     ) -> DeviceExecutor:
         # megakernel: the fused stage-step path (DESIGN.md §9); None =
         # auto (on for f32 slabs — bit-identical results AND billing, so
         # the billing_key does not fork on it)
+        faults.on_make_executor(self.name)
         return DeviceExecutor(
             _as_device_plan(plan), scorer, block_n=block_n, interpret=interpret,
-            megakernel=megakernel,
+            megakernel=megakernel, check_finite=check_finite,
         )
 
     def billing_key(self) -> str:
@@ -233,11 +246,13 @@ class ShardedBackend:
             )
         nd = _n_devices(n_devices)
         if nd < self.capabilities.min_devices:
-            return False, (
+            return faults.on_available(
+                self.name,
+                False,
                 f"{nd} device(s) < {self.capabilities.min_devices} — run under "
-                "XLA_FLAGS=--xla_force_host_platform_device_count=4"
+                "XLA_FLAGS=--xla_force_host_platform_device_count=4",
             )
-        return True, f"{nd} XLA devices"
+        return faults.on_available(self.name, True, f"{nd} XLA devices")
 
     def resolve_mesh(self, mesh=None, shards: int | None = None):
         """The mesh this backend will run on: an explicit mesh wins, else a
@@ -260,13 +275,151 @@ class ShardedBackend:
         rebalance: bool = False,
         rebalance_ratio: float = 1.25,
         megakernel: bool | None = None,
+        check_finite: bool = False,
     ) -> ShardedDeviceExecutor:
+        faults.on_make_executor(self.name)
         return ShardedDeviceExecutor(
             _as_device_plan(plan), scorer, self.resolve_mesh(mesh, shards),
             block_n=block_n, interpret=interpret,
             rebalance=rebalance, rebalance_ratio=rebalance_ratio,
-            megakernel=megakernel,
+            megakernel=megakernel, check_finite=check_finite,
         )
 
     def billing_key(self, shards: int, rebalance: bool = False) -> str:
         return f"{self.name}{int(shards)}{'r' if rebalance else ''}"
+
+
+# -- graceful degradation (DESIGN.md §10) -------------------------------
+#
+# The negotiation ladder (sharded -> device -> host) picks a backend at
+# compile time; the classes below make it a RUNTIME ladder: when a rung's
+# executor construction or a device wave fails, the caller retries with
+# capped exponential backoff, then falls one rung and records a
+# ``DegradationEvent``.  ``CompiledCascade`` and the serving engines both
+# drive the same ``DegradationLadder``; tests inject faults via
+# ``repro.testing.faults`` and a fake ``sleep`` so every delay is
+# deterministic and no test ever actually waits.
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationEvent:
+    """One recorded degradation: a same-rung recovery (``to_backend ==
+    from_backend``) or a fall to the next rung."""
+
+    kind: str  # "construct" (make_executor failed) | "wave" (run failed)
+    from_backend: str
+    to_backend: str
+    error: str
+    retries: int  # failed attempts on from_backend before this resolution
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Capped exponential backoff: ``retries`` extra attempts after the
+    first failure, waiting ``base_delay * factor**i`` (capped at
+    ``max_delay``) before attempt i+1.  Delays are data, not clock reads,
+    so a test's fake ``sleep`` sees the exact schedule."""
+
+    retries: int = 2
+    base_delay: float = 0.05
+    factor: float = 2.0
+    max_delay: float = 1.0
+
+    def delays(self) -> tuple[float, ...]:
+        return tuple(
+            min(self.base_delay * self.factor**i, self.max_delay)
+            for i in range(max(0, int(self.retries)))
+        )
+
+
+def fallback_rung(name: str, accept: Callable | None = None) -> Backend | None:
+    """The first AVAILABLE backend strictly below ``name`` in the
+    negotiation order (optionally also satisfying ``accept(backend)``),
+    or None at the floor."""
+    from repro.api.registry import NEGOTIATION_ORDER, get_backend
+
+    if name not in NEGOTIATION_ORDER:
+        # third-party backend: any registered rung is a valid fallback
+        start = 0
+    else:
+        start = NEGOTIATION_ORDER.index(name) + 1
+    for lower in NEGOTIATION_ORDER[start:]:
+        b = get_backend(lower)
+        ok, _ = b.available()
+        if ok and (accept is None or accept(b)):
+            return b
+    return None
+
+
+class DegradationLadder:
+    """Retry-then-fall driver shared by ``CompiledCascade`` and the
+    serving engines.
+
+    ``attempt`` runs one callable with same-rung retries under the
+    backoff policy; ``fall`` resolves the next usable rung (recording the
+    event) or re-raises when the floor is reached.  Only
+    ``RuntimeError`` (XLA runtime failures, ``WaveFailure``, injected
+    ``FaultInjected``) is retryable — ``ValueError``/``TypeError`` are
+    caller bugs and propagate untouched.
+    """
+
+    def __init__(
+        self,
+        backoff: BackoffPolicy | None = None,
+        sleep: Callable[[float], None] | None = None,
+        events: list | None = None,
+    ):
+        self.backoff = backoff or BackoffPolicy()
+        self.sleep = time.sleep if sleep is None else sleep
+        self.events: list[DegradationEvent] = events if events is not None else []
+
+    def attempt(self, kind: str, backend_name: str, fn: Callable[[], Any]):
+        """``fn()`` with capped-backoff retries on the SAME rung.  A
+        retry that succeeds records a same-rung recovery event; exhausted
+        retries re-raise the last error for ``fall`` to resolve."""
+        delays = self.backoff.delays()
+        err: RuntimeError | None = None
+        for i in range(len(delays) + 1):
+            try:
+                out = fn()
+            except RuntimeError as e:
+                err = e
+                if i < len(delays):
+                    self.sleep(delays[i])
+                continue
+            if i:
+                self.events.append(
+                    DegradationEvent(
+                        kind=kind,
+                        from_backend=backend_name,
+                        to_backend=backend_name,
+                        error=str(err),
+                        retries=i,
+                    )
+                )
+            return out
+        raise err
+
+    def fall(
+        self,
+        kind: str,
+        from_name: str,
+        error: BaseException,
+        accept: Callable | None = None,
+    ) -> Backend:
+        """Next usable rung below ``from_name``; records the fall.  At
+        the floor the original ``error`` is re-raised — degradation never
+        swallows a failure it cannot route around."""
+        nxt = fallback_rung(from_name, accept=accept)
+        if nxt is None:
+            raise error
+        self.events.append(
+            DegradationEvent(
+                kind=kind,
+                from_backend=from_name,
+                to_backend=nxt.name,
+                error=str(error),
+                retries=self.backoff.retries,
+            )
+        )
+        return nxt

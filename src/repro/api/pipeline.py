@@ -25,8 +25,13 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.api.backends import Backend
-from repro.api.registry import resolve_backend
+from repro.api.backends import (
+    Backend,
+    BackoffPolicy,
+    DegradationEvent,
+    DegradationLadder,
+)
+from repro.api.registry import AUTO, backend_names, get_backend, resolve_backend
 from repro.core.executor import (
     DEFAULT_CHUNK_T,
     CascadePlan,
@@ -168,12 +173,18 @@ class FittedCascade:
         shards: int | None = None,
         rebalance: bool = False,
         n_devices: int | None = None,
+        backoff: BackoffPolicy | None = None,
+        sleep=None,
     ) -> "CompiledCascade":
         """Bind the cascade to an execution backend.
 
         ``backend``: a registered name, ``"auto"`` (negotiates sharded ->
         device -> host from available devices; ``n_devices`` overrides the
-        count for tests), or a ``Backend`` instance.
+        count for tests), or a ``Backend`` instance.  An explicitly named
+        backend that is unavailable on this host raises ``ValueError``
+        naming the rung and the backend's own ``available()`` reason —
+        compile-time, not as an opaque trace error later; ``"auto"``
+        logs each rung it skips on the ``repro.api`` logger instead.
 
         Host-only options: ``decide`` (``"reference"`` numpy oracle, the
         default, or ``"kernel"`` for the Pallas chunk-decide) and
@@ -181,8 +192,46 @@ class FittedCascade:
         On-device options: ``scorer_factory(device_plan) -> StageScorer``
         for fully-lazy scoring (otherwise batches are precomputed score
         matrices).  Sharded-only: ``mesh`` / ``shards`` / ``rebalance``.
+
+        ``backoff``/``sleep`` tune the runtime degradation ladder
+        (DESIGN.md §10): construction and wave failures are retried with
+        capped exponential backoff, then fall one rung (sharded ->
+        device -> host), recording ``DegradationEvent``s on the result.
+        ``sleep`` is injectable so chaos tests never actually wait.
         """
-        b = resolve_backend(backend, n_devices=n_devices)
+        if isinstance(backend, str) and backend != AUTO:
+            # an explicit rung request fails HERE with the backend's own
+            # reason, not later with a registry KeyError or an XLA trace
+            # error from a mesh over zero devices
+            try:
+                b = get_backend(backend)
+            except KeyError:
+                raise ValueError(
+                    f"unknown backend {backend!r}; registered backends: "
+                    f"{list(backend_names())} (or {AUTO!r} to negotiate)"
+                ) from None
+            ok, why = b.available(n_devices=n_devices)
+            if not ok and (mesh is not None or shards is not None):
+                # an explicit mesh / shard count that fits the live
+                # device count overrides the rung's min-device heuristic
+                # (a 1-shard mesh is a legitimate degenerate config);
+                # rechecking at the satisfied count keeps the other
+                # availability reasons (interpret-only, injected outages)
+                import jax
+
+                nd = len(jax.devices()) if n_devices is None else n_devices
+                want = int(shards) if mesh is None else 0
+                if nd >= want:
+                    ok, why = b.available(
+                        n_devices=max(nd, b.capabilities.min_devices)
+                    )
+            if not ok:
+                raise ValueError(
+                    f"backend {backend!r} is unavailable here: {why} "
+                    f"(compile({AUTO!r}) negotiates a usable rung instead)"
+                )
+        else:
+            b = resolve_backend(backend, n_devices=n_devices)
         caps = b.capabilities
         if caps.on_device:
             for opt, val in (("decide", decide), ("bill_block", bill_block)):
@@ -215,6 +264,8 @@ class FittedCascade:
             mesh=mesh,
             shards=shards,
             rebalance=rebalance,
+            backoff=backoff,
+            sleep=sleep,
         )
 
 
@@ -242,6 +293,8 @@ class CompiledCascade:
         mesh=None,
         shards: int | None = None,
         rebalance: bool = False,
+        backoff: BackoffPolicy | None = None,
+        sleep=None,
     ):
         self.fitted = fitted
         self.backend = backend
@@ -258,26 +311,64 @@ class CompiledCascade:
         self.mesh = mesh
         self.shards = shards
         self.rebalance = bool(rebalance)
+        self.ladder = DegradationLadder(backoff=backoff, sleep=sleep)
         self._executor = None
-        if backend.capabilities.on_device:
-            dplan = DevicePlan.from_plan(plan)
-            self.scorer = (
-                scorer_factory(dplan)
-                if scorer_factory is not None
-                else matrix_stage_scorer(dplan)
+        # runtime degradation ladder (DESIGN.md §10): construction
+        # failures retry with backoff, then fall one rung; the recorded
+        # events are the API surface chaos tests assert on
+        try:
+            self._bind_backend(self.backend)
+        except RuntimeError as e:
+            self._fall_and_rebind("construct", e)
+
+    def _fall_and_rebind(self, kind: str, error, accept=None) -> Backend:
+        """Fall down the rung ladder until a backend binds (or the ladder
+        runs out and re-raises the last error)."""
+        err = error
+        while True:
+            nxt = self.ladder.fall(kind, self.backend.name, err, accept=accept)
+            try:
+                self._bind_backend(nxt)
+                return nxt
+            except RuntimeError as e:
+                err = e
+
+    def _bind_backend(self, backend: Backend) -> None:
+        """(Re)build the executor for one rung; the host rung binds at
+        ``evaluate`` time.  Data-parallel options only travel to rungs
+        that understand them, so a sharded -> device fall drops them."""
+        self.backend = backend
+        if not backend.capabilities.on_device:
+            self._executor = None
+            return
+        dplan = DevicePlan.from_plan(self.plan)
+        self.scorer = (
+            self.scorer_factory(dplan)
+            if self.scorer_factory is not None
+            else matrix_stage_scorer(dplan)
+        )
+        opts: dict = dict(
+            scorer=self.scorer,
+            block_n=DEFAULT_BLOCK_N if self.block_n is None else self.block_n,
+            interpret=self.interpret,
+        )
+        if backend.capabilities.data_parallel:
+            opts.update(
+                mesh=self.mesh, shards=self.shards, rebalance=self.rebalance
             )
-            opts: dict = dict(
-                scorer=self.scorer,
-                block_n=DEFAULT_BLOCK_N if block_n is None else block_n,
-                interpret=interpret,
-            )
-            if backend.capabilities.data_parallel:
-                opts.update(mesh=mesh, shards=shards, rebalance=self.rebalance)
-            self._executor = backend.make_executor(dplan, **opts)
+        self._executor = self.ladder.attempt(
+            "construct", backend.name,
+            lambda: backend.make_executor(dplan, **opts),
+        )
 
     @property
     def backend_name(self) -> str:
         return self.backend.name
+
+    @property
+    def degradation_events(self) -> list[DegradationEvent]:
+        """Runtime ladder history: same-rung recoveries and rung falls."""
+        return self.ladder.events
 
     @property
     def traces(self) -> int | None:
@@ -326,53 +417,72 @@ class CompiledCascade:
 
         ``row_order`` / ``capacity`` follow the executor contracts
         (initial active-set ordering; pinned buffer size for trace reuse).
+
+        Wave failures (``RuntimeError`` from the device program) are
+        retried on the same rung with backoff, then fall a rung and
+        re-run — the host floor is only accepted if this call can score
+        there (precomputed ``scores`` or a ``fit``-captured ``score_fn``).
         """
-        caps = self.backend.capabilities
-        if not caps.on_device:
+        while True:
+            if not self.backend.capabilities.on_device:
+                return self._evaluate_host(scores, x, producer, n, row_order)
             if producer is not None:
-                if n is None:
-                    raise ValueError("producer= requires n= (batch row count)")
-                p = producer
-            else:
-                ordered = self._ordered_scores(scores, x)
-                n = ordered.shape[0]
-                p = matrix_producer(ordered)
-            decide_fn = None
-            bill = 1 if self.bill_block is None else self.bill_block
-            if self.decide == "kernel":
-                from repro.kernels import ops
-
-                bn = 256 if self.block_n is None else self.block_n
-                decide_fn = ops.kernel_decide_fn(
-                    block_n=bn, interpret=self.interpret
-                )
-                if self.bill_block is None:
-                    bill = bn
-            ex = self.backend.make_executor(
-                self.plan, producer=p, decide_fn=decide_fn, bill_block=bill
-            )
-            return ex.run(n, row_order=row_order)
-
-        if producer is not None:
-            raise ValueError(
-                "producer= is a host-backend option; compile with "
-                "scorer_factory= for lazy on-device scoring"
-            )
-        if self.scorer_factory is not None:
-            if x is None:
                 raise ValueError(
-                    "compiled with scorer_factory=: pass the scorer's batch "
-                    "operand via x= (it consumes features, not score matrices)"
+                    "producer= is a host-backend option; compile with "
+                    "scorer_factory= for lazy on-device scoring"
                 )
-            operand = x
+            if self.scorer_factory is not None:
+                if x is None:
+                    raise ValueError(
+                        "compiled with scorer_factory=: pass the scorer's "
+                        "batch operand via x= (it consumes features, not "
+                        "score matrices)"
+                    )
+                operand = x
+                run_n = int(np.shape(x)[0]) if n is None else n
+            else:
+                operand = self._ordered_scores(scores, x)
+                run_n = operand.shape[0]
+            ex = self._executor
+            try:
+                return self.ladder.attempt(
+                    "wave", self.backend.name,
+                    lambda: ex.run(
+                        operand, run_n, row_order=row_order, capacity=capacity
+                    ),
+                )
+            except RuntimeError as e:
+                # host can only take over when this call is scoreable there
+                can_host = scores is not None or self.fitted.score_fn is not None
+                self._fall_and_rebind(
+                    "wave", e,
+                    accept=lambda b: b.capabilities.on_device or can_host,
+                )
+
+    def _evaluate_host(self, scores, x, producer, n, row_order) -> ExecutorResult:
+        if producer is not None:
             if n is None:
-                n = int(np.shape(x)[0])
+                raise ValueError("producer= requires n= (batch row count)")
+            p = producer
         else:
-            operand = self._ordered_scores(scores, x)
-            n = operand.shape[0]
-        return self._executor.run(
-            operand, n, row_order=row_order, capacity=capacity
+            ordered = self._ordered_scores(scores, x)
+            n = ordered.shape[0]
+            p = matrix_producer(ordered)
+        decide_fn = None
+        bill = 1 if self.bill_block is None else self.bill_block
+        if self.decide == "kernel":
+            from repro.kernels import ops
+
+            bn = 256 if self.block_n is None else self.block_n
+            decide_fn = ops.kernel_decide_fn(
+                block_n=bn, interpret=self.interpret
+            )
+            if self.bill_block is None:
+                bill = bn
+        ex = self.backend.make_executor(
+            self.plan, producer=p, decide_fn=decide_fn, bill_block=bill
         )
+        return ex.run(n, row_order=row_order)
 
     def serve(
         self,

@@ -16,6 +16,8 @@ program at >= 1, the host stage loop when the device program is disabled
 
 from __future__ import annotations
 
+import logging
+
 from repro.api.backends import (
     Backend,
     DeviceBackend,
@@ -34,6 +36,12 @@ __all__ = [
 ]
 
 AUTO = "auto"
+
+# "auto" negotiation narrates every skipped rung here (INFO) so a
+# surprising landing spot — e.g. host because QWYC_INTERPRET_ONLY leaked
+# into the environment — is one `logging.basicConfig(level="INFO")` away
+# from explaining itself.
+log = logging.getLogger("repro.api")
 
 # "auto" preference: most parallel first, host as the universal floor.
 NEGOTIATION_ORDER = ("sharded", "device", "host")
@@ -81,6 +89,7 @@ def negotiate(
         ok, why = b.available(n_devices=n_devices, interpret_only=interpret_only)
         if ok:
             return b
+        log.info("auto negotiation: skipping %r rung: %s", name, why)
         reasons.append(f"{name}: {why}")
     raise RuntimeError("no backend available: " + "; ".join(reasons))
 

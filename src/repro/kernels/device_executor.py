@@ -74,6 +74,55 @@ from repro.kernels import megakernel as mk
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
+from repro.testing import faults
+
+
+class WaveFailure(RuntimeError):
+    """A device wave (one ``run``/``run_stream`` launch) failed at
+    runtime.  Both on-device executors normalize launch-time failures —
+    injected faults and real XLA runtime errors alike — to this one
+    type, so the degradation ladder has a single retryable signal.
+    Shape/argument errors (``ValueError``/``TypeError``) pass through
+    untouched: those are caller bugs, not transient faults."""
+
+
+def launch_wave(executor_name: str, fn):
+    """Run one device-program launch under the wave fault contract."""
+    try:
+        faults.on_wave(executor_name)
+        return fn()
+    except faults.FaultInjected as e:
+        raise WaveFailure(str(e)) from e
+    except (ValueError, TypeError):
+        raise
+    except Exception as e:  # XLA runtime failures (device loss, OOM, ...)
+        raise WaveFailure(
+            f"{executor_name} wave failed: {type(e).__name__}: {e}"
+        ) from e
+
+
+def check_batch_finite(batch, n: int) -> None:
+    """Reject non-finite rows before they reach a device program.
+
+    The serving quarantine guard normally catches these at admission;
+    this executor-level check (``check_finite=True``) is the belt for
+    callers that feed executors directly.  Raises ``ValueError`` (not
+    retryable — a poisoned batch won't heal with backoff) naming the
+    offending rows.
+    """
+    arr = np.asarray(batch)[:n]
+    if not np.issubdtype(arr.dtype, np.floating):
+        return
+    finite = np.isfinite(arr)
+    bad = ~(finite if arr.ndim == 1 else finite.all(axis=tuple(range(1, arr.ndim))))
+    if bad.any():
+        rows = np.flatnonzero(bad)
+        head = ", ".join(map(str, rows[:8]))
+        more = f", ... ({rows.size} total)" if rows.size > 8 else ""
+        raise ValueError(
+            f"non-finite values in batch rows [{head}{more}]; quarantine "
+            "poisoned rows before submission (see DESIGN.md §10)"
+        )
 
 __all__ = [
     "DevicePlan",
@@ -435,6 +484,7 @@ class DeviceExecutor:
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
         megakernel: bool | None = None,
+        check_finite: bool = False,
     ):
         self.dplan = plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
         if scorer.width != self.dplan.W:
@@ -451,6 +501,7 @@ class DeviceExecutor:
             )
         self.megakernel = bool(megakernel)
         self.scorer = scorer
+        self.check_finite = bool(check_finite)
         self.block_n = max(1, int(block_n))
         self.interpret = INTERPRET if interpret is None else interpret
         self.traces = 0
@@ -614,6 +665,8 @@ class DeviceExecutor:
                 scores_computed=0,
                 scores_possible=0,
             )
+        if self.check_finite:
+            check_batch_finite(batch, n)
         cap = self._cap(max(n, capacity or 0))
         x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
         if x.shape[0] < cap:
@@ -626,8 +679,8 @@ class DeviceExecutor:
         assert rows.shape == (n,)
         rows_init = np.full(cap, cap, dtype=np.int32)
         rows_init[:n] = rows
-        dec, ex, g, s_f, n_f, n_in_log = self._jit(
-            x, jnp.asarray(rows_init), n
+        dec, ex, g, s_f, n_f, n_in_log = launch_wave(
+            "device", lambda: self._jit(x, jnp.asarray(rows_init), n)
         )
         dec = np.asarray(dec)[:n]
         ex = np.asarray(ex, dtype=np.int64)[:n]
@@ -857,6 +910,8 @@ class DeviceExecutor:
                 scores_computed=0,
                 scores_possible=0,
             )
+        if self.check_finite:
+            check_batch_finite(batch, n)
         cap = self._cap(capacity or n)
         R = max(n, int(ring_capacity or n))
         x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
@@ -873,8 +928,11 @@ class DeviceExecutor:
         assert (np.diff(arr) >= 0).all(), "arrivals must be nondecreasing"
         arr_pad = np.zeros(R, dtype=np.int32)
         arr_pad[:n] = arr
-        dec, ex, gout, admit, done, s_f = self._stream_jit(
-            cap, x, jnp.asarray(ring_ids), jnp.asarray(arr_pad), n
+        dec, ex, gout, admit, done, s_f = launch_wave(
+            "device",
+            lambda: self._stream_jit(
+                cap, x, jnp.asarray(ring_ids), jnp.asarray(arr_pad), n
+            ),
         )
         steps_run = int(s_f)
         admit = np.asarray(admit, dtype=np.int64)[:n]

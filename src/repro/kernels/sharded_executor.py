@@ -63,6 +63,9 @@ from repro.kernels.device_executor import (
     DevicePlan,
     StageScorer,
     StreamResult,
+    WaveFailure,  # noqa: F401 — re-export: sharded waves raise the same type
+    check_batch_finite,
+    launch_wave,
     stream_occupancy,
 )
 
@@ -109,6 +112,7 @@ class ShardedDeviceExecutor:
         rebalance: bool = False,
         rebalance_ratio: float = 1.25,
         megakernel: bool | None = None,
+        check_finite: bool = False,
     ):
         self.dplan = plan if isinstance(plan, DevicePlan) else DevicePlan.from_plan(plan)
         if scorer.width != self.dplan.W:
@@ -132,6 +136,7 @@ class ShardedDeviceExecutor:
             )
         self.megakernel = bool(megakernel)
         self.scorer = scorer
+        self.check_finite = bool(check_finite)
         self.mesh = mesh
         self.shards = int(mesh.shape[DATA_AXIS])
         self.block_n = max(1, int(block_n))
@@ -403,6 +408,8 @@ class ShardedDeviceExecutor:
                 scores_computed=0,
                 scores_possible=0,
             )
+        if self.check_finite:
+            check_batch_finite(batch, n)
         shards = self.shards
         cap_l = self._cap_local(max(n, capacity or 0))
         cap_g = shards * cap_l
@@ -426,8 +433,9 @@ class ShardedDeviceExecutor:
             idbuf[k, :cnt] = order[start : start + cnt]
             n_live0[k] = cnt
             start += cnt
-        dec, ex, gout, s_f, n_f, n_in_log, reb_log = self._jit(
-            x, jnp.asarray(idbuf), jnp.asarray(n_live0)
+        dec, ex, gout, s_f, n_f, n_in_log, reb_log = launch_wave(
+            "sharded",
+            lambda: self._jit(x, jnp.asarray(idbuf), jnp.asarray(n_live0)),
         )
         dec = np.asarray(dec)[0][:n].astype(bool)
         ex = np.asarray(ex, dtype=np.int64)[0][:n]
@@ -705,6 +713,8 @@ class ShardedDeviceExecutor:
                 scores_computed=0,
                 scores_possible=0,
             )
+        if self.check_finite:
+            check_batch_finite(batch, n)
         cap_l = self._cap_local(capacity or n)
         R_l = -(-max(n, int(ring_capacity or n)) // shards)
         R_g = shards * R_l
@@ -727,12 +737,15 @@ class ShardedDeviceExecutor:
             ring_ids[k, : ids_k.size] = ids_k
             ring_arr[k, : ids_k.size] = arr[ids_k]
             counts[k] = ids_k.size
-        dec, ex, gout, admit, done, s_f = self._stream_jit(
-            cap_l,
-            x,
-            jnp.asarray(ring_ids),
-            jnp.asarray(ring_arr),
-            jnp.asarray(counts),
+        dec, ex, gout, admit, done, s_f = launch_wave(
+            "sharded",
+            lambda: self._stream_jit(
+                cap_l,
+                x,
+                jnp.asarray(ring_ids),
+                jnp.asarray(ring_arr),
+                jnp.asarray(counts),
+            ),
         )
         steps_run = int(np.asarray(s_f)[0])
         dec = np.asarray(dec)[0][:n].astype(bool)

@@ -19,6 +19,7 @@ deprecation shims that forward to ``--backend device`` /
 from __future__ import annotations
 
 import argparse
+import signal
 import warnings
 
 import jax.numpy as jnp
@@ -113,6 +114,38 @@ def build_parser() -> argparse.ArgumentParser:
         "--arrival-rate", type=float, default=4.0,
         help="streaming Poisson arrival rate in requests per stage step "
         "(fixed seed, so the trace — and the billing — is deterministic)",
+    )
+    # guarded serving (DESIGN.md §10)
+    ap.add_argument(
+        "--chaos-seed", type=int, default=None,
+        help="arm a deterministic fault-injection plan "
+        "(repro.testing.faults) around the serving loop; combine with "
+        "the other --chaos-* flags to pick the faults",
+    )
+    ap.add_argument(
+        "--chaos-poison", type=float, default=0.0,
+        help="fraction of test rows poisoned with non-finite values "
+        "under --chaos-seed (quarantine should catch every one)",
+    )
+    ap.add_argument(
+        "--chaos-wave-failures", type=int, default=0,
+        help="number of device waves to fail under --chaos-seed (drives "
+        "the retry/degradation ladder)",
+    )
+    ap.add_argument(
+        "--chaos-drop-device", action="store_true",
+        help="report the sharded rung's devices as lost under "
+        "--chaos-seed (ladder falls sharded -> device)",
+    )
+    ap.add_argument(
+        "--watchdog", action="store_true",
+        help="run the sequential drift watchdog over the audit stream "
+        "and degrade the decide policy on alarm (implies --audit)",
+    )
+    ap.add_argument(
+        "--no-quarantine", dest="quarantine", action="store_false",
+        help="disable the submit-time validation guard (bad rows then "
+        "raise instead of draining with a quarantined verdict)",
     )
     return ap
 
@@ -265,11 +298,14 @@ def main() -> None:
         producer_kw["device_scorer_factory"] = make_device_scorer_factory(
             qwyc.order
         )
+    audit = args.audit or args.eager or args.watchdog
     common_kw = dict(
         batch_size=args.batch_size,
-        chunk_t=args.chunk_t, audit_full_scores=args.audit or args.eager,
+        chunk_t=args.chunk_t, audit_full_scores=audit,
         score_block_n=1 if args.eager else SCORE_BLOCK_N,
         exec_backend=backend, backend_opts=backend_opts,
+        quarantine=args.quarantine,
+        watchdog=True if args.watchdog else None,
         **producer_kw,
     )
     if args.streaming:
@@ -294,16 +330,75 @@ def main() -> None:
         arrivals = None
     if server.mesh is not None:
         print(f"[serve] sharded serving mesh: {server.mesh}")
-    for i in range(len(ds.y_test)):
-        if arrivals is None:
-            server.submit(ds.x_test[i])
-        else:
-            server.submit(ds.x_test[i], arrival=arrivals[i])
-    results = server.drain()
+
+    # chaos plan (DESIGN.md §10): every fault below is derived from
+    # --chaos-seed, so a run reproduces bit-for-bit
+    x_test = ds.x_test
+    chaos = None
+    if args.chaos_seed is not None:
+        from repro.testing import FaultPlan
+
+        chaos = FaultPlan(
+            seed=args.chaos_seed,
+            poison_fraction=args.chaos_poison,
+            poison_mode="mix",
+            wave_failures=args.chaos_wave_failures,
+            # device loss means the SHARDED rung's waves die; the rungs
+            # below must stay healthy or there is nowhere to degrade to
+            wave_fail_backend="sharded" if args.chaos_drop_device else None,
+            drop_device=args.chaos_drop_device,
+        )
+        if args.chaos_poison > 0:
+            x_test, poisoned = chaos.poison(x_test)
+            print(
+                f"[serve] chaos seed {args.chaos_seed}: poisoned "
+                f"{int(poisoned.sum())}/{len(x_test)} rows"
+            )
+        chaos.__enter__()
+
+    # a SIGINT/SIGTERM during the submit loop stops admission, drains the
+    # queue (partial final flush) and still prints the final ServeStats
+    stop: dict = {}
+    prev_handlers = {}
+
+    def _on_signal(signum, frame):
+        stop["sig"] = signal.Signals(signum).name
+
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        try:
+            prev_handlers[sig] = signal.signal(sig, _on_signal)
+        except ValueError:  # non-main thread (tests): run unguarded
+            pass
+
+    try:
+        for i in range(len(ds.y_test)):
+            if stop:
+                print(
+                    f"[serve] caught {stop['sig']} after {i} submit(s): "
+                    f"draining queued requests"
+                )
+                break
+            if arrivals is None:
+                server.submit(x_test[i])
+            else:
+                server.submit(x_test[i], arrival=arrivals[i])
+        results = server.drain()
+    finally:
+        for sig, h in prev_handlers.items():
+            signal.signal(sig, h)
+        if chaos is not None:
+            chaos.__exit__(None, None, None)
 
     st = server.stats
-    acc = np.mean(
-        [r["decision"] == bool(y) for r, y in zip(results, ds.y_test)]
+    served = [
+        (r, y)
+        for r, y in zip(results, ds.y_test)
+        if not r.get("quarantined", False)
+    ]
+    acc = (
+        np.mean([r["decision"] == bool(y) for r, y in served])
+        if served
+        else float("nan")
     )
     if args.streaming:
         print(
@@ -337,6 +432,34 @@ def main() -> None:
         )
         + f" (alpha={args.alpha})  test acc {acc:.4f}"
     )
+    # guarded-serving counters (additive; not part of the perf-gate
+    # baseline — see benchmarks/perf_gate.py)
+    guard_bits = []
+    if st.quarantined:
+        guard_bits.append(f"quarantined {st.quarantined}")
+    if st.degradation_events:
+        falls = [
+            f"{e.from_backend}->{e.to_backend}"
+            for e in st.degradation_events
+            if e.from_backend != e.to_backend
+        ]
+        recoveries = len(st.degradation_events) - len(falls)
+        guard_bits.append(
+            "ladder " + ", ".join(falls + ([f"{recoveries} same-rung recovery(ies)"] if recoveries else []))
+        )
+    if args.watchdog:
+        guard_bits.append(
+            f"watchdog {st.watchdog_state} (alarms {st.watchdog_alarms}, "
+            f"llr {st.watchdog_stat:.2f}"
+            + (
+                f", recovered at flush {st.watchdog_recovery_step}"
+                if st.watchdog_recovery_step is not None
+                else ""
+            )
+            + ")"
+        )
+    if guard_bits:
+        print("[serve] guards: " + "  |  ".join(guard_bits))
 
 
 if __name__ == "__main__":

@@ -1,3 +1,10 @@
-from repro.serving.engine import QWYCServer, ServeStats
+from repro.serving.engine import QWYCServer, ServeStats, StreamingServer
+from repro.serving.watchdog import DriftWatchdog, WatchdogConfig
 
-__all__ = ["QWYCServer", "ServeStats"]
+__all__ = [
+    "DriftWatchdog",
+    "QWYCServer",
+    "ServeStats",
+    "StreamingServer",
+    "WatchdogConfig",
+]

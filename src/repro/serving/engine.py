@@ -71,10 +71,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.backends import BackoffPolicy, DegradationLadder
 from repro.core.executor import CascadePlan, matrix_producer
 from repro.core.qwyc import QWYCModel
 from repro.kernels import ops
 from repro.kernels.device_executor import DevicePlan, matrix_stage_scorer
+from repro.serving.watchdog import DriftWatchdog, WatchdogConfig, widen_plan
 
 __all__ = ["ServeStats", "QWYCServer", "StreamingServer"]
 
@@ -104,6 +106,16 @@ class ServeStats:
     stream_cap_steps: int = 0  # sum over steps of slot capacity
     latency_steps: list[int] = dataclasses.field(default_factory=list)
     # latency_steps[i] = enqueue->decision latency of request i, in steps
+    # guarded-serving accounting (DESIGN.md §10) — additive chaos
+    # counters, deliberately OUTSIDE the perf gate's baseline set
+    quarantined: int = 0  # rows rejected at admission (never batched)
+    degradation_events: list = dataclasses.field(default_factory=list)
+    # DegradationEvent per ladder action: same-rung recovery or rung fall
+    watchdog_alarms: int = 0
+    watchdog_state: str = "off"  # off | ok | alarmed | recovering
+    watchdog_stat: float = 0.0  # current sequential llr
+    watchdog_margin: float = 0.0  # threshold widening in force next flush
+    watchdog_recovery_step: int | None = None  # flush index of last recovery
 
     @property
     def mean_models(self) -> float:
@@ -171,6 +183,10 @@ class QWYCServer:
         rebalance: bool = False,
         exec_backend=None,
         backend_opts: dict | None = None,
+        quarantine: bool = True,
+        watchdog: bool | WatchdogConfig | DriftWatchdog | None = None,
+        backoff: BackoffPolicy | None = None,
+        sleep: Callable[[float], None] | None = None,
     ):
         """At least one of ``score_fn`` (eager, ORIGINAL model order),
         ``chunk_score_fn`` (lazy, cascade order — see module docstring) or
@@ -210,6 +226,20 @@ class QWYCServer:
         still used for diff auditing.  The ``cascade-scan`` policy's numpy
         decide is host-only, so on device it executes identically to
         ``kernel`` (policies keep their sorting behavior).
+
+        Guarded serving (DESIGN.md §10): ``quarantine`` (default on)
+        validates every ``submit`` — float32-convertible, shape-locked to
+        the first accepted row, all-finite — and rejected rows come back
+        from ``drain`` with an explicit ``quarantined`` verdict instead
+        of poisoning a whole device batch.  ``watchdog`` (True, a
+        ``WatchdogConfig``, or a ``DriftWatchdog``) runs the sequential
+        drift test over the audit stream and degrades the decide policy
+        on alarm; it requires an audited configuration (``score_fn``, or
+        ``chunk_score_fn`` with ``audit_full_scores=True``).
+        ``backoff``/``sleep`` tune the runtime degradation ladder that
+        retries failed waves and falls sharded -> device -> host
+        (``sleep`` is injectable so chaos tests never wait); ladder
+        history lands in ``ServeStats.degradation_events``.
 
         DEPRECATED: ``device=True/False`` (forwards to
         ``exec_backend="device"``/``"host"`` with a ``DeprecationWarning``).
@@ -317,11 +347,82 @@ class QWYCServer:
         self.plan = CascadePlan.from_qwyc(qwyc, chunk_t=chunk_t)
         self.stats = ServeStats()
         self._queue: list[np.ndarray] = []
-        self._results: list[dict] = []
-        self._dev: tuple | None = None  # lazily built device-executor state
+        self._qseqs: list[int] = []  # submission seq of each queued row
+        self._results: list[tuple[int, dict]] = []  # (seq, result)
+        self._quarantined: list[tuple[int, dict]] = []
+        self._seq = 0
+        self._dev: tuple | None = None  # ACTIVE device-executor state
+        # executor state per (rung, watchdog margin): a widened plan is a
+        # different compiled trace, and a rung fall a different executor
+        self._dev_cache: dict[tuple, tuple] = {}
+        self.quarantine = bool(quarantine)
+        self._row_shape: tuple | None = None  # admission shape lock
+        self.ladder = DegradationLadder(
+            backoff=backoff, sleep=sleep, events=self.stats.degradation_events
+        )
+        if watchdog is True:
+            alpha = float(getattr(qwyc, "alpha", 0.0) or 0.0)
+            watchdog = WatchdogConfig(p0=alpha)
+        if isinstance(watchdog, WatchdogConfig):
+            watchdog = DriftWatchdog(watchdog)
+        self._watchdog: DriftWatchdog | None = watchdog or None
+        self._wd_margin = 0.0
+        if self._watchdog is not None:
+            audited = (chunk_score_fn is not None and audit_full_scores) or (
+                score_fn is not None and device_scorer_factory is None
+            )
+            if not audited:
+                raise ValueError(
+                    "watchdog needs the per-flush audit signal: pass "
+                    "score_fn, or chunk_score_fn with audit_full_scores=True"
+                )
+            self.stats.watchdog_state = self._watchdog.state
+
+    def _admit(self, x) -> tuple[int, np.ndarray | None]:
+        """Admission guard: (seq, float32 row) for a clean request, or
+        (seq, None) after quarantining a poisoned one.
+
+        The guard runs pre-admission so one poisoned row can never NaN a
+        whole device batch (or trip the executors' finite check mid-
+        flush); the row still gets a ``drain`` entry — ``quarantined:
+        True, decision: None`` — at its submission position.  With
+        ``quarantine=False`` conversion errors raise as they always did.
+        """
+        seq = self._seq
+        self._seq += 1
+        if not self.quarantine:
+            return seq, np.asarray(x, dtype=np.float32)
+        reason = None
+        row = None
+        try:
+            row = np.asarray(x, dtype=np.float32)
+        except (TypeError, ValueError) as e:
+            reason = f"not convertible to float32: {e}"
+        if reason is None:
+            if self._row_shape is None:
+                self._row_shape = row.shape
+            elif row.shape != self._row_shape:
+                reason = (
+                    f"shape {row.shape} != locked request shape "
+                    f"{self._row_shape}"
+                )
+        if reason is None and not np.isfinite(row).all():
+            reason = "non-finite feature value (NaN/inf)"
+        if reason is None:
+            return seq, row
+        self._quarantined.append(
+            (seq, {"quarantined": True, "decision": None,
+                   "models_evaluated": 0, "reason": reason})
+        )
+        self.stats.quarantined += 1
+        return seq, None
 
     def submit(self, x: np.ndarray) -> None:
-        self._queue.append(np.asarray(x, dtype=np.float32))
+        seq, row = self._admit(x)
+        if row is None:
+            return
+        self._queue.append(row)
+        self._qseqs.append(seq)
         if len(self._queue) >= self.flush_size:
             self.flush()
 
@@ -355,35 +456,47 @@ class QWYCServer:
         flush — partial final batches are padded up to ``flush_size``
         (= ``batch_size``, or ``shards x batch_size`` under a mesh) via
         ``run(capacity=...)``.
+
+        Keyed by (rung, watchdog margin): an alarmed watchdog widens the
+        thresholds — a different device plan, hence a different compiled
+        trace — and a ladder fall changes the executor class.  Each
+        variant is built once and cached; ``self._dev`` always holds the
+        ACTIVE variant.
         """
-        if self._dev is None:
-            plan = self.plan
-            if self.backend == "sorted-kernel":
-                plan = dataclasses.replace(plan, lead_t=1)
-            dplan = DevicePlan.from_plan(plan)
-            if self.device_scorer_factory is not None:
-                scorer = self.device_scorer_factory(dplan)
-                eager_matrix = False
-            else:
-                scorer = matrix_stage_scorer(dplan)
-                eager_matrix = True
-            # executor construction goes through the Backend protocol —
-            # the server never names an executor class (DESIGN.md §7)
-            executor = self.exec.make_executor(
-                dplan, scorer=scorer, block_n=self.block_n, **self._exec_opts
-            )
-            key_fn = None
-            if self.backend == "sorted-kernel" and not eager_matrix:
-                # sort key = first cascade model's scores, computed on
-                # device from the same stage-0 slab the loop body uses
-                cap = executor._cap(self.flush_size)
-                rows_all = jnp.arange(cap, dtype=jnp.int32)
+        key = (self.exec.name, self._wd_margin)
+        cached = self._dev_cache.get(key)
+        if cached is not None:
+            self._dev = cached
+            return cached
+        plan = widen_plan(self.plan, self._wd_margin)
+        if self.backend == "sorted-kernel":
+            plan = dataclasses.replace(plan, lead_t=1)
+        dplan = DevicePlan.from_plan(plan)
+        if self.device_scorer_factory is not None:
+            scorer = self.device_scorer_factory(dplan)
+            eager_matrix = False
+        else:
+            scorer = matrix_stage_scorer(dplan)
+            eager_matrix = True
+        # executor construction goes through the Backend protocol — the
+        # server never names an executor class (DESIGN.md §7); retried
+        # and rung-degraded by the caller's ladder on RuntimeError
+        executor = self.exec.make_executor(
+            dplan, scorer=scorer, block_n=self.block_n, **self._exec_opts
+        )
+        key_fn = None
+        if self.backend == "sorted-kernel" and not eager_matrix:
+            # sort key = first cascade model's scores, computed on
+            # device from the same stage-0 slab the loop body uses
+            cap = executor._cap(self.flush_size)
+            rows_all = jnp.arange(cap, dtype=jnp.int32)
 
-                def key_fn(x, n, _s=scorer, _r=rows_all):
-                    return _s.fn(x, _r, jnp.int32(0), n)[:, 0]
+            def key_fn(x, n, _s=scorer, _r=rows_all):
+                return _s.fn(x, _r, jnp.int32(0), n)[:, 0]
 
-                key_fn = jax.jit(key_fn)
-            self._dev = (executor, scorer, eager_matrix, key_fn)
+            key_fn = jax.jit(key_fn)
+        self._dev = (executor, scorer, eager_matrix, key_fn)
+        self._dev_cache[key] = self._dev
         return self._dev
 
     def _eager_or_raw(self, xb, eager_matrix):
@@ -432,29 +545,82 @@ class QWYCServer:
         billed = n * self.qwyc.T if eager_matrix else res.scores_computed + key_scores
         return res, ordered, billed
 
+    def _fall_rung(self, error, *, streaming: bool = False) -> None:
+        """Fall one rung after a failed wave and rebind executor state;
+        re-raises ``error`` when no acceptable rung remains."""
+
+        def accept(b):
+            caps = b.capabilities
+            if streaming and not getattr(caps, "streaming", False):
+                return False
+            if caps.on_device:
+                return (
+                    self.device_scorer_factory is not None
+                    or self.score_fn is not None
+                )
+            # the host floor needs a host-side score source
+            return self.score_fn is not None or self.chunk_score_fn is not None
+
+        nxt = self.ladder.fall("wave", self.exec.name, error, accept=accept)
+        self.exec = nxt
+        caps = nxt.capabilities
+        self.device = caps.on_device
+        if not caps.data_parallel:
+            # data-parallel construction options don't travel down-rung;
+            # flush_size stays fixed (the device path pads via capacity=)
+            for k in ("mesh", "shards", "rebalance", "rebalance_ratio"):
+                self._exec_opts.pop(k, None)
+            self.rebalance = False
+        if not caps.on_device:
+            self.device_scorer_factory = None
+        self._dev = None
+        self._dev_cache.clear()
+
     def flush(self) -> list[dict]:
         if not self._queue:
             return []
         t_start = time.time()
         xb = np.stack(self._queue)
-        self._queue.clear()
+        seqs = self._qseqs
+        self._queue = []
+        self._qseqs = []
         n = xb.shape[0]
-        plan = self.plan
 
-        if self.device:
-            res, ordered, device_billed = self._run_device(xb, n)
-            # the host chunk producer (escape hatch) doubles as the
-            # unbilled audit path; _producers builds the same wrapper the
-            # host path uses
-            audit_read = (
-                self._producers(xb)[0]
-                if self.chunk_score_fn is not None
-                else None
-            )
-            return self._finish_flush(
-                t_start, xb, n, res, ordered, audit_read, device_billed
-            )
+        # the wave ladder: retry the rung with backoff, then fall one
+        # rung and re-run the SAME batch — no request is lost to a fault
+        while True:
+            try:
+                if self.device:
+                    res, ordered, device_billed = self.ladder.attempt(
+                        "wave", self.exec.name,
+                        lambda: self._run_device(xb, n),
+                    )
+                    # the host chunk producer (escape hatch) doubles as
+                    # the unbilled audit path; _producers builds the same
+                    # wrapper the host path uses
+                    audit_read = (
+                        self._producers(xb)[0]
+                        if self.chunk_score_fn is not None
+                        else None
+                    )
+                else:
+                    res, ordered, audit_read, device_billed = (
+                        self.ladder.attempt(
+                            "wave", self.exec.name,
+                            lambda: self._run_host(xb, n),
+                        )
+                    )
+                break
+            except RuntimeError as e:
+                self._fall_rung(e)
+        return self._finish_flush(
+            t_start, xb, n, res, ordered, audit_read, device_billed, seqs
+        )
 
+    def _run_host(self, xb: np.ndarray, n: int):
+        """Host stage-loop path for one batch ->
+        (result, ordered|None, audit_read, billed=None)."""
+        plan = widen_plan(self.plan, self._wd_margin)
         producer, ordered = self._producers(xb)
         audit_read = producer  # unbilled access path for diff auditing
 
@@ -486,10 +652,10 @@ class QWYCServer:
             decide_fn=decide_fn,
             bill_block=self.score_block_n if ordered is None else 1,
         ).run(n, row_order=row_order)
-        return self._finish_flush(t_start, xb, n, res, ordered, audit_read, None)
+        return res, ordered, audit_read, None
 
     def _finish_flush(
-        self, t_start, xb, n, res, ordered, audit_read, device_billed
+        self, t_start, xb, n, res, ordered, audit_read, device_billed, seqs
     ) -> list[dict]:
         """Audit, result assembly and stats — shared by host & device paths.
 
@@ -532,7 +698,7 @@ class QWYCServer:
                     full_score[i] if full_score is not None else res.g_final[i]
                 )
             out.append(r)
-        self._results.extend(out)
+        self._results.extend(zip(seqs, out))
 
         st = self.stats
         st.n_requests += n
@@ -555,7 +721,18 @@ class QWYCServer:
             st.chunk_survivors[k] += s.n_in
         if full_score is not None:
             full_dec = full_score >= m.beta
-            st.diffs_vs_full += int((dec != full_dec).sum())
+            diffs = int((dec != full_dec).sum())
+            st.diffs_vs_full += diffs
+            if self._watchdog is not None:
+                # fold this flush into the sequential drift statistic;
+                # the returned margin degrades the NEXT flush's decide
+                # policy (DESIGN.md §10)
+                self._wd_margin = self._watchdog.observe(n, diffs)
+                st.watchdog_alarms = self._watchdog.alarms
+                st.watchdog_state = self._watchdog.state
+                st.watchdog_stat = self._watchdog.llr
+                st.watchdog_margin = self._wd_margin
+                st.watchdog_recovery_step = self._watchdog.recovery_step
         else:
             # unaudited: survivors' decision IS the full decision (0 diffs);
             # early-exit rows are unknown and intentionally not guessed at
@@ -563,10 +740,17 @@ class QWYCServer:
         st.wall_s += time.time() - t_start
         return out
 
+    def _merge_results(self) -> list[dict]:
+        """Drain-time merge: flushed results + quarantined verdicts, back
+        in submission order."""
+        merged = sorted(self._results + self._quarantined, key=lambda t: t[0])
+        self._results = []
+        self._quarantined = []
+        return [d for _, d in merged]
+
     def drain(self) -> list[dict]:
         self.flush()
-        res, self._results = self._results, []
-        return res
+        return self._merge_results()
 
 
 class StreamingServer(QWYCServer):
@@ -634,7 +818,7 @@ class StreamingServer(QWYCServer):
                 f"({self.flush_size}); a smaller ring can never fill the slots"
             )
         self.max_wait = None if max_wait is None else float(max_wait)
-        self._squeue: list[tuple[np.ndarray, float]] = []
+        self._squeue: list[tuple[np.ndarray, float, int]] = []
         self._clock = 0.0
         # per-wave StreamResults (timeline raw material for the
         # streaming benchmark, like ShardedDeviceExecutor.last_run_info)
@@ -651,7 +835,10 @@ class StreamingServer(QWYCServer):
                 f"arrivals must be nondecreasing (got {a} after {self._clock})"
             )
         self._clock = a
-        self._squeue.append((np.asarray(x, dtype=np.float32), a))
+        seq, row = self._admit(x)
+        if row is None:
+            return
+        self._squeue.append((row, a, seq))
         if len(self._squeue) >= self.window:
             self.flush()
         elif (
@@ -670,26 +857,37 @@ class StreamingServer(QWYCServer):
             self._squeue[self.window:],
         )
         xb = np.stack([e[0] for e in wave])
+        seqs = [e[2] for e in wave]
         n = xb.shape[0]
         base = wave[0][1]
         arr_steps = np.floor(
             np.array([e[1] for e in wave]) - base
         ).astype(np.int32)
-        executor, scorer, eager_matrix, _ = self._device_state()
-        batch, ordered = self._eager_or_raw(xb, eager_matrix)
-        res = executor.run_stream(
-            batch,
-            n,
-            arrivals=arr_steps,
-            capacity=self.flush_size,
-            ring_capacity=self.window,
-        )
+        # wave ladder, streaming edition: only rungs with the streaming
+        # capability are acceptable (the host loop has no admission ring)
+        while True:
+            try:
+                executor, scorer, eager_matrix, _ = self._device_state()
+                batch, ordered = self._eager_or_raw(xb, eager_matrix)
+                res = self.ladder.attempt(
+                    "wave", self.exec.name,
+                    lambda: executor.run_stream(
+                        batch,
+                        n,
+                        arrivals=arr_steps,
+                        capacity=self.flush_size,
+                        ring_capacity=self.window,
+                    ),
+                )
+                break
+            except RuntimeError as e:
+                self._fall_rung(e, streaming=True)
         billed = n * self.qwyc.T if eager_matrix else res.scores_computed
         audit_read = (
             self._producers(xb)[0] if self.chunk_score_fn is not None else None
         )
         out = self._finish_flush(
-            t_start, xb, n, res, ordered, audit_read, billed
+            t_start, xb, n, res, ordered, audit_read, billed, seqs
         )
         self.stream_results.append(res)
         st = self.stats
@@ -707,5 +905,4 @@ class StreamingServer(QWYCServer):
     def drain(self) -> list[dict]:
         while self._squeue:
             self.flush()
-        res, self._results = self._results, []
-        return res
+        return self._merge_results()

@@ -1,0 +1,11 @@
+"""Test-support harnesses that ship with the library.
+
+``repro.testing.faults`` is the deterministic fault-injection layer the
+chaos suite (``tests/test_chaos.py``) and ``benchmarks/bench_chaos.py``
+drive: production code carries zero-overhead injection points that a
+``FaultPlan`` context manager arms from a seed (DESIGN.md §10).
+"""
+
+from repro.testing.faults import FaultInjected, FaultPlan, active
+
+__all__ = ["FaultInjected", "FaultPlan", "active"]

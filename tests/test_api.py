@@ -69,10 +69,28 @@ def test_unknown_backend_lists_registered_names():
     msg = str(ei.value)
     for name in api.backend_names():
         assert name in msg
-    # the same error propagates from the public compile entrypoint
+    # the public compile entrypoint raises ValueError (not a bare
+    # registry KeyError), still listing every registered name
     _, fitted = _setup()
-    with pytest.raises(KeyError):
+    with pytest.raises(ValueError) as ei:
         fitted.compile("warp-drive")
+    msg = str(ei.value)
+    assert "warp-drive" in msg
+    for name in api.backend_names():
+        assert name in msg
+
+
+def test_compile_unavailable_backend_names_rung_and_reason():
+    # an explicitly requested rung that can't run here fails at compile
+    # time with the backend's own available() reason, not an opaque
+    # trace error later
+    _, fitted = _setup()
+    with pytest.raises(ValueError) as ei:
+        fitted.compile("sharded", n_devices=1)
+    msg = str(ei.value)
+    assert "sharded" in msg
+    ok, why = api.get_backend("sharded").available(n_devices=1)
+    assert not ok and why in msg
 
 
 def test_registry_register_and_overwrite_guard():
