@@ -1,0 +1,187 @@
+"""Neural cascade bench: QWYC early exit over transformer depth
+(DESIGN.md §11, EXPERIMENTS.md §Neural-cascade protocol).
+
+A seeded toy decoder with exit heads every ``exit_interval`` layers is
+treated as a cascade: stage t's score is the per-block logit-margin
+delta, thresholds are fit by Algorithm 2 on the calibration split, and
+the compiled executors run only the layers each sequence pays for,
+carrying the residual stream through the survivor buffers.  Per
+(alpha, backend/shards) cell the bench records:
+
+* **layers paid** — ``mean(exit_step) * exit_interval`` vs ``n_layers``.
+  The headline gate: strictly below full depth at every fitted alpha.
+* **exit rate / accuracy** — fraction of rows exiting before the last
+  head, and the disagreement rate vs the full-depth verdict on the
+  calibration split (guaranteed <= alpha by Algorithm 2; asserted) and
+  on the held-out split (reported).
+* **parity** — decisions AND exit steps bit-identical per row to the
+  host ``ChunkedExecutor`` oracle driving the same ``StageScorer``
+  protocol, in ONE compiled trace per executor (asserted).
+
+Everything is fixture-seeded (``NEURAL_SEED``): rows are deterministic,
+so they merge into the repo-root ``BENCH_executor.json`` under the
+``"neural"`` key validated by ``benchmarks/validate_schema.py``.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src:. python -m benchmarks.bench_neural [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_rows
+from repro import api
+from repro.core import exit_scores
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+NEURAL_SEED = 2030  # params = PRNGKey(SEED), tokens = PRNGKey(SEED + 1)
+ALPHAS = (0.005, 0.02, 0.05)
+SHARDS = (1, 2, 4)
+
+
+def neural_fixture(quick: bool = False):
+    """(params, cfg, tokens) for the seeded toy decoder — the ONE fixture
+    the bench, the conformance tests and EXPERIMENTS.md all reference."""
+    cfg = ModelConfig(
+        name="neural-bench", arch_type="dense",
+        n_layers=8 if quick else 12, d_model=32 if quick else 64,
+        n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64 if quick else 128,
+        vocab_size=256, exit_interval=2,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(NEURAL_SEED))
+    n = 256 if quick else 1024
+    toks = np.asarray(
+        jax.random.randint(
+            jax.random.PRNGKey(NEURAL_SEED + 1), (n, 16), 0, cfg.vocab_size
+        )
+    )
+    return params, cfg, toks
+
+
+def run(quick: bool = False, alphas=ALPHAS, shards_list=SHARDS) -> list[dict]:
+    n_dev = len(jax.devices())
+    usable = [s for s in shards_list if s <= n_dev]
+    skipped = [s for s in shards_list if s > n_dev]
+    if skipped:
+        print(
+            f"[bench_neural] skipping shards {skipped}: only {n_dev} XLA "
+            "device(s) (XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    params, cfg, toks = neural_fixture(quick)
+    half = toks.shape[0] // 2
+    calib, test = toks[:half], toks[half:]
+    scorer = api.NeuralScorer(params, cfg, seq_len=toks.shape[1])
+    E = scorer.n_exits
+    # full-depth verdict = sign of the LAST exit head's margin — the
+    # decision the cascade's running sum reconstructs at margin-infinity
+    full_calib = np.asarray(exit_scores(params, cfg, calib))[:, -1] >= 0.0
+    full_test = np.asarray(exit_scores(params, cfg, test))[:, -1] >= 0.0
+    rows = []
+    for alpha in alphas:
+        fitted = api.fit(scorer, calib, alpha=alpha, chunk_t=2)
+        host = fitted.compile("host")
+        oracle = {"calib": host.evaluate(x=calib), "test": host.evaluate(x=test)}
+        diff_calib = float(
+            np.mean(np.asarray(oracle["calib"].decisions) != full_calib)
+        )
+        assert diff_calib <= alpha + 1e-12, (
+            f"Algorithm 2 guarantee violated: calib diff {diff_calib} > {alpha}"
+        )
+        diff_test = float(
+            np.mean(np.asarray(oracle["test"].decisions) != full_test)
+        )
+        for shards in usable:
+            backend = "device" if shards == 1 else "sharded"
+            opts = {} if shards == 1 else {"shards": shards}
+            compiled = fitted.compile(backend, **opts)
+            res = compiled.evaluate(x=test)
+            # parity gate before any accounting: bit-identical per row
+            # to the host oracle driving the same StageScorer protocol
+            assert np.array_equal(res.decisions, oracle["test"].decisions)
+            assert np.array_equal(res.exit_step, oracle["test"].exit_step)
+            assert compiled.traces == 1, compiled.traces
+            layers = np.asarray(res.exit_step) * cfg.exit_interval
+            mean_layers = float(layers.mean())
+            assert mean_layers < cfg.n_layers, (
+                f"no layers saved at alpha={alpha}: {mean_layers}"
+            )
+            rows.append(
+                {
+                    "experiment": "neural_depth",
+                    "alpha": alpha,
+                    "backend": backend,
+                    "shards": shards,
+                    "n": int(test.shape[0]),
+                    "seq_len": int(test.shape[1]),
+                    "n_layers": cfg.n_layers,
+                    "exit_interval": cfg.exit_interval,
+                    "n_exits": E,
+                    "chunk_t": 2,
+                    "seed": NEURAL_SEED,
+                    "exit_rate": float(np.mean(np.asarray(res.exit_step) < E)),
+                    "mean_layers": mean_layers,
+                    "full_layers": cfg.n_layers,
+                    "layers_saved_frac": 1.0 - mean_layers / cfg.n_layers,
+                    "speedup": cfg.n_layers / mean_layers,
+                    "diff_calib": diff_calib,
+                    "diff_test": diff_test,
+                    "diff_within_alpha": True,
+                    "parity_with_host_oracle": True,
+                    "traces": int(compiled.traces),
+                }
+            )
+    save_rows("neural_synth", rows)
+    _merge_root_summary(rows)
+    return rows
+
+
+def _merge_root_summary(rows: list[dict]) -> None:
+    """Add/replace the ``"neural"`` section of BENCH_executor.json (the
+    device-executor bench owns the rest of the file; this section is
+    preserved across its rewrites like ``"sharded"``/``"streaming"``)."""
+    path = REPO_ROOT / "BENCH_executor.json"
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["neural"] = {
+        "protocol": "EXPERIMENTS.md §Neural-cascade protocol",
+        "fixture": "seeded toy decoder (benchmarks.bench_neural.neural_fixture)",
+        "seed": NEURAL_SEED,
+        "rows": rows,
+        "headline": {
+            "layers_below_full_all_cells": bool(
+                all(r["mean_layers"] < r["full_layers"] for r in rows)
+            ),
+            "diff_within_alpha_all_cells": bool(
+                all(r["diff_within_alpha"] for r in rows)
+            ),
+            "parity_with_host_oracle": bool(
+                all(r["parity_with_host_oracle"] for r in rows)
+            ),
+            "one_trace_per_executor": bool(all(r["traces"] == 1 for r in rows)),
+            "best_speedup": max((r["speedup"] for r in rows), default=None),
+            "max_shards_measured": max((r["shards"] for r in rows), default=0),
+        },
+    }
+    path.write_text(json.dumps(doc, indent=1))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(
+            f"alpha={r['alpha']:<6} backend={r['backend']:<8} "
+            f"shards={r['shards']} layers {r['mean_layers']:5.2f}/"
+            f"{r['full_layers']}  exit_rate={r['exit_rate']:.2f}  "
+            f"diff calib={r['diff_calib']:.4f} test={r['diff_test']:.4f}"
+        )

@@ -42,6 +42,7 @@ from benchmarks.common import gbt_ensemble_for, save_rows
 from repro.core import CascadePlan, fit_qwyc
 from repro.core.executor import ChunkedExecutor, matrix_producer
 from repro.api.registry import get_backend
+from repro.api.scorers import FunctionScorer
 from repro.kernels.device_executor import DevicePlan, tree_stage_scorer
 from repro.serving.engine import StreamingServer
 
@@ -152,7 +153,7 @@ def run(
                     m,
                     batch_size=cap // shards,
                     window=4 * cap,
-                    device_scorer_factory=factory,
+                    scorer=FunctionScorer(factory),
                     audit_full_scores=False,
                     chunk_t=chunk_t,
                     block_n=block_n,

@@ -210,7 +210,8 @@ def collect_counters() -> dict[str, int]:
     c["serve.lazy.audit_scores"] = int(srv.stats.audit_scores)
     c["serve.lazy.models"] = int(srv.stats.models_evaluated)
 
-    from repro.kernels.device_executor import StageScorer
+    from repro.api.scorers import FunctionScorer
+    from repro.kernels.device_executor import BoundScorer
 
     Wo_j = jnp.asarray(Wo, dtype=jnp.float32)
 
@@ -221,7 +222,7 @@ def collect_counters() -> dict[str, int]:
             slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
             return jnp.take(x, rows, axis=0) @ slab.T
 
-        return StageScorer(
+        return BoundScorer(
             fn=fn, prepare=lambda xb: jnp.asarray(xb, jnp.float32),
             width=dplan.W,
         )
@@ -229,7 +230,7 @@ def collect_counters() -> dict[str, int]:
     srv2 = QWYCServer(
         ms, batch_size=64, backend="kernel", chunk_t=6,
         exec_backend="sharded", backend_opts={"shards": 4},
-        device_scorer_factory=factory, audit_full_scores=False,
+        scorer=FunctionScorer(factory), audit_full_scores=False,
     )
     for row in X:
         srv2.submit(row)
@@ -267,7 +268,7 @@ def collect_counters() -> dict[str, int]:
         srv3 = StreamingServer(
             ms, batch_size=32 if backend == "device" else 8, window=128,
             chunk_t=6, exec_backend=backend, backend_opts=opts,
-            device_scorer_factory=lane_factory, audit_full_scores=False,
+            scorer=FunctionScorer(lane_factory), audit_full_scores=False,
         )
         for row, a in zip(X, arrivals):
             srv3.submit(row, arrival=a)

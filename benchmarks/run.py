@@ -316,6 +316,39 @@ def main() -> None:
 
     _section("executor_megakernel", sec_megakernel)
 
+    # Neural cascade: QWYC over transformer depth (DESIGN.md §11) — the
+    # executors carry the residual stream through the survivor buffers,
+    # so this needs the fused device program; availability and the
+    # SKIPPED reason come from the device backend like the sections above
+    def sec_neural():
+        ne_ok, ne_why = get_backend("device").available()
+        if not ne_ok:
+            print(f"neural_depth,,SKIPPED: {ne_why}")
+            return
+        from benchmarks import bench_neural
+
+        try:
+            rows = _cached(
+                "neural_synth",
+                lambda: bench_neural.run(quick=args.quick),
+                args.recompute,
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"neural_depth,,SKIPPED ({type(e).__name__}: {e})")
+            rows = []
+        if rows:
+            bench_neural._merge_root_summary(rows)
+            best = max(rows, key=lambda r: r["speedup"])
+            print(
+                f"neural_depth,,mean layers {best['mean_layers']:.2f}/"
+                f"{best['full_layers']} at alpha={best['alpha']} "
+                f"(exit_rate={best['exit_rate']:.2f}, calib diff "
+                f"{best['diff_calib']:.4f} <= alpha, parity+one-trace: "
+                f"{all(r['parity_with_host_oracle'] and r['traces'] == 1 for r in rows)})"
+            )
+
+    _section("neural_depth", sec_neural)
+
     # Chaos: fault injection vs the guarded serving stack (DESIGN.md
     # §10, EXPERIMENTS.md §Chaos protocol) — deterministic seeds, so the
     # rows are stable run to run; the merge into BENCH_executor.json is

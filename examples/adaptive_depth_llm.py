@@ -4,7 +4,12 @@ inside a MoE layer (expert level).
 1. Depth: a small decoder with exit heads every 2 layers classifies
    sequences; QWYC Algorithm-2 thresholds let easy inputs leave the network
    early while agreeing with the full-depth decision (ordering is pinned to
-   depth — see DESIGN.md §Arch-applicability).
+   depth — see DESIGN.md §Arch-applicability).  The whole path rides
+   ``repro.api``: ``api.NeuralScorer`` treats the per-block exit-head
+   margins as cascade stages, ``api.fit`` calibrates thresholds on them,
+   and the compiled executor runs only the layers each sequence pays for,
+   carrying the residual stream through the survivor buffers
+   (DESIGN.md §11).
 2. Experts: the routed experts of a MoE layer form an exchangeable additive
    ensemble, so the FULL joint optimization (Algorithm 1) applies: QWYC
    picks which experts to evaluate first and when to stop.
@@ -15,9 +20,8 @@ inside a MoE layer (expert level).
 import jax
 import numpy as np
 
+from repro import api
 from repro.core import (
-    calibrate_early_exit,
-    evaluate_early_exit,
     exit_scores,
     expert_contributions,
     fit_moe_qwyc,
@@ -34,15 +38,23 @@ def depth_level() -> None:
         n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=256, exit_interval=2,
     )
     params = init_params(cfg, jax.random.PRNGKey(0))
-    toks = jax.random.randint(jax.random.PRNGKey(1), (1024, 16), 0, cfg.vocab_size)
-    scores = np.asarray(exit_scores(params, cfg, toks))  # (N, 6 exits)
-    calib, test = scores[:512], scores[512:]
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (1024, 16), 0, cfg.vocab_size)
+    )
+    calib, test = toks[:512], toks[512:]
+    # full-depth verdict = sign of the LAST exit head's margin (the exact
+    # decision the cascade's running sum g reconstructs at margin-infinity)
+    full = np.asarray(exit_scores(params, cfg, test))[:, -1] >= 0.0
+    scorer = api.NeuralScorer(params, cfg, seq_len=toks.shape[1])
     for alpha in (0.005, 0.02, 0.05):
-        m = calibrate_early_exit(calib, cfg, alpha=alpha)
-        rep = evaluate_early_exit(m, test, cfg)
+        fitted = api.fit(scorer, calib, alpha=alpha, chunk_t=2)
+        res = fitted.compile("auto").evaluate(x=test)
+        layers = np.asarray(res.exit_step) * cfg.exit_interval
+        diff = float(np.mean(np.asarray(res.decisions) != full))
         print(
-            f"[depth] alpha={alpha:<6} mean layers {rep.mean_layers:5.2f}/"
-            f"{rep.full_layers}  speedup {rep.speedup:4.2f}x  diff {rep.diff_rate:.4f}"
+            f"[depth] alpha={alpha:<6} mean layers {layers.mean():5.2f}/"
+            f"{cfg.n_layers}  speedup {cfg.n_layers / layers.mean():4.2f}x"
+            f"  diff {diff:.4f}"
         )
 
 

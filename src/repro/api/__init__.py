@@ -5,7 +5,7 @@ evaluation order and early-stopping thresholds over a trained ensemble,
 then serve the resulting cascade so early-exited examples genuinely skip
 the remaining base models.  This package is that pipeline as three
 calls, with every execution substrate behind one pluggable ``Backend``
-protocol:
+protocol and every stage producer behind one ``StageScorer`` protocol:
 
     from repro import api
 
@@ -36,16 +36,26 @@ protocol:
         stream.submit(row, arrival=float(step))
     outputs = stream.drain()
 
+Model-backed cascades (DESIGN.md §11) ride the same three calls: a
+``StageScorer`` turns any staged evaluator — matrix columns, oblivious
+trees, lattices, or the per-block exit heads of a transformer — into
+cascade stages with optional carried per-row state:
+
+    scorer = api.NeuralScorer(params, cfg, seq_len=tokens.shape[1])
+    fitted = api.fit(scorer, tokens_calib, y_calib, alpha=0.02)
+    result = fitted.compile("device").evaluate(x=tokens_test)
+    # result.exit_step * cfg.exit_interval == layers paid per row
+
 Backends live in a registry (``api.registry``, mirroring
 ``configs/registry.py``); ``api.backend_names()`` lists them and
 ``api.register_backend`` is how future substrates (async batching,
 multi-host, new accelerators) plug in without touching any caller.
-The legacy boolean-flag spellings (``QWYCServer(device=True)``,
-``ops.score_and_decide(device=True)``, ``serve.py --device/--shards``)
-still work as thin deprecation shims that forward here.
+Scorers live in their own registry (``api.scorers``): built-ins under
+``api.scorer_names()``, extensions via ``api.register_scorer``.
 
-Architecture: DESIGN.md §7.  ``from repro import api`` is the documented
-import path; everything in ``__all__`` below is the stable surface.
+Architecture: DESIGN.md §7 (backends), §11 (stage scorers).  ``from
+repro import api`` is the documented import path; everything in
+``__all__`` below is the stable surface.
 """
 
 from repro.api.backends import (
@@ -64,6 +74,17 @@ from repro.api.registry import (
     negotiate,
     register_backend,
     resolve_backend,
+)
+from repro.api.scorers import (
+    FunctionScorer,
+    LatticeScorer,
+    MatrixScorer,
+    NeuralScorer,
+    StageScorer,
+    TreeScorer,
+    get_scorer,
+    register_scorer,
+    scorer_names,
 )
 
 __all__ = [
@@ -86,4 +107,14 @@ __all__ = [
     "backend_names",
     "negotiate",
     "resolve_backend",
+    # stage scorers (DESIGN.md §11)
+    "StageScorer",
+    "MatrixScorer",
+    "TreeScorer",
+    "LatticeScorer",
+    "NeuralScorer",
+    "FunctionScorer",
+    "register_scorer",
+    "get_scorer",
+    "scorer_names",
 ]

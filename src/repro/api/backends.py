@@ -40,7 +40,7 @@ from repro.kernels.device_executor import (
     DEFAULT_BLOCK_N,
     DeviceExecutor,
     DevicePlan,
-    StageScorer,
+    BoundScorer,
 )
 from repro.kernels.sharded_executor import ShardedDeviceExecutor
 from repro.launch.mesh import make_serving_mesh
@@ -207,7 +207,7 @@ class DeviceBackend:
         self,
         plan: CascadePlan | DevicePlan,
         *,
-        scorer: StageScorer,
+        scorer: BoundScorer,
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
         megakernel: bool | None = None,
@@ -267,7 +267,7 @@ class ShardedBackend:
         self,
         plan: CascadePlan | DevicePlan,
         *,
-        scorer: StageScorer,
+        scorer: BoundScorer,
         mesh=None,
         shards: int | None = None,
         block_n: int = DEFAULT_BLOCK_N,

@@ -38,6 +38,7 @@ from repro.core.executor import (
     ExecutorResult,
     matrix_producer,
 )
+from repro.api.scorers import StageScorer, host_producer
 from repro.core.qwyc import QWYCModel, fit_qwyc
 from repro.kernels.device_executor import (
     DEFAULT_BLOCK_N,
@@ -90,13 +91,20 @@ def fit(
     """Jointly optimize evaluation order + early-exit thresholds.
 
     Args:
-      ensemble: either a precomputed calibration score matrix ``(N, T)``
-        with ``F[i, t] = f_t(x_i)`` (original model order), or a callable
-        ``score_fn(X) -> (N, T)`` — the trained ensemble's batched scorer
-        (e.g. a closure over ``ops.gbt_scores``).  A callable is kept on
-        the result so ``compile(...).evaluate(x=...)`` and ``serve()``
-        can score with it.
-      X: calibration features; required iff ``ensemble`` is callable.
+      ensemble: one of
+        * a precomputed calibration score matrix ``(N, T)`` with
+          ``F[i, t] = f_t(x_i)`` (original model order);
+        * a callable ``score_fn(X) -> (N, T)`` — the trained ensemble's
+          batched scorer (e.g. a closure over ``ops.gbt_scores``), kept
+          on the result so ``compile(...).evaluate(x=...)`` and
+          ``serve()`` can score with it;
+        * a ``StageScorer`` that can self-score (model-backed fit):
+          ``api.NeuralScorer(params, cfg, seq_len)`` calibrates on its
+          per-block logit margins (``calibration_scores``), pins the
+          config fields its family requires (depth order, layer costs),
+          and becomes the default scorer ``compile``/``serve`` bind.
+      X: calibration features (tokens, for the neural scorer); required
+        iff ``ensemble`` is callable or a ``StageScorer``.
       y: unused by QWYC (calibration is label-free — the objective is
         agreement with the full ensemble); accepted for pipeline symmetry.
       config / **overrides: a ``FitConfig`` (or dict), with keyword
@@ -106,7 +114,21 @@ def fit(
     """
     cfg = _normalize_config(config, overrides)
     score_fn = None
-    if callable(ensemble):
+    scorer = None
+    if isinstance(ensemble, StageScorer):
+        if X is None:
+            raise ValueError(
+                "fit(scorer, ...) needs calibration inputs X to score"
+            )
+        scorer = ensemble
+        score_fn = scorer.calibration_scores
+        F = np.asarray(score_fn(X))
+        forced = dict(scorer.fit_overrides())
+        if cfg.costs is not None:
+            forced.pop("costs", None)  # explicit user costs win
+        if forced:
+            cfg = dataclasses.replace(cfg, **forced)
+    elif callable(ensemble):
         if X is None:
             raise ValueError(
                 "fit(score_fn, ...) needs calibration features X to score"
@@ -128,7 +150,8 @@ def fit(
         verbose=cfg.verbose,
     )
     return FittedCascade(
-        model=model, config=cfg, score_fn=score_fn, calibration_scores=F
+        model=model, config=cfg, score_fn=score_fn, calibration_scores=F,
+        scorer=scorer,
     )
 
 
@@ -149,6 +172,9 @@ class FittedCascade:
     calibration_scores: np.ndarray | None = dataclasses.field(
         default=None, repr=False
     )
+    #: the StageScorer template fit() calibrated (model-backed fit);
+    #: compile()/serve() bind it by default
+    scorer: StageScorer | None = None
 
     @property
     def T(self) -> int:
@@ -168,7 +194,8 @@ class FittedCascade:
         interpret: bool | None = None,
         decide: str | None = None,
         bill_block: int | None = None,
-        scorer_factory: Callable | None = None,
+        scorer: StageScorer | None = None,
+        scorer_factory=None,
         mesh=None,
         shards: int | None = None,
         rebalance: bool = False,
@@ -189,9 +216,14 @@ class FittedCascade:
         Host-only options: ``decide`` (``"reference"`` numpy oracle, the
         default, or ``"kernel"`` for the Pallas chunk-decide) and
         ``bill_block`` (producer row-quantization billing granularity).
-        On-device options: ``scorer_factory(device_plan) -> StageScorer``
-        for fully-lazy scoring (otherwise batches are precomputed score
-        matrices).  Sharded-only: ``mesh`` / ``shards`` / ``rebalance``.
+
+        ``scorer``: a ``StageScorer`` template (DESIGN.md §11) for fully
+        lazy scoring — ``evaluate(x=...)`` feeds the raw batch operand
+        straight to the bound scorer on every backend (the host rung
+        drives it through ``host_producer``).  Defaults to the template
+        ``fit`` calibrated (model-backed fit); otherwise batches are
+        precomputed score matrices.  Sharded-only: ``mesh`` / ``shards``
+        / ``rebalance``.
 
         ``backoff``/``sleep`` tune the runtime degradation ladder
         (DESIGN.md §10): construction and wave failures are retried with
@@ -199,6 +231,21 @@ class FittedCascade:
         device -> host), recording ``DegradationEvent``s on the result.
         ``sleep`` is injectable so chaos tests never actually wait.
         """
+        if scorer_factory is not None:
+            raise TypeError(
+                "scorer_factory= was removed: pass scorer= with a "
+                "repro.api.StageScorer template (MatrixScorer/TreeScorer/"
+                "LatticeScorer/NeuralScorer, or any bind(dplan) "
+                "implementation — DESIGN.md §11)"
+            )
+        if scorer is None:
+            scorer = self.scorer
+        if scorer is not None and not isinstance(scorer, StageScorer):
+            raise TypeError(
+                f"scorer= must be a repro.api.StageScorer, got "
+                f"{type(scorer).__name__} (bare factories/BoundScorers are "
+                "internal; wrap them in a StageScorer with a bind() method)"
+            )
         if isinstance(backend, str) and backend != AUTO:
             # an explicit rung request fails HERE with the backend's own
             # reason, not later with a registry KeyError or an XLA trace
@@ -239,12 +286,6 @@ class FittedCascade:
                     raise ValueError(
                         f"{opt!r} is a host-backend option; backend is {b.name!r}"
                     )
-        else:
-            if scorer_factory is not None:
-                raise ValueError(
-                    "scorer_factory is an on-device option; the host backend "
-                    "takes producer= at evaluate() time instead"
-                )
         if not caps.data_parallel and (
             mesh is not None or shards is not None or rebalance
         ):
@@ -260,7 +301,7 @@ class FittedCascade:
             interpret=interpret,
             decide=decide,
             bill_block=bill_block,
-            scorer_factory=scorer_factory,
+            scorer=scorer,
             mesh=mesh,
             shards=shards,
             rebalance=rebalance,
@@ -289,7 +330,7 @@ class CompiledCascade:
         interpret: bool | None = None,
         decide: str | None = None,
         bill_block: int | None = None,
-        scorer_factory: Callable | None = None,
+        scorer: StageScorer | None = None,
         mesh=None,
         shards: int | None = None,
         rebalance: bool = False,
@@ -307,7 +348,7 @@ class CompiledCascade:
                 f"decide must be 'reference' or 'kernel', got {decide!r}"
             )
         self.bill_block = bill_block
-        self.scorer_factory = scorer_factory
+        self.scorer_template = scorer
         self.mesh = mesh
         self.shards = shards
         self.rebalance = bool(rebalance)
@@ -343,8 +384,8 @@ class CompiledCascade:
             return
         dplan = DevicePlan.from_plan(self.plan)
         self.scorer = (
-            self.scorer_factory(dplan)
-            if self.scorer_factory is not None
+            self.scorer_template.bind(dplan)
+            if self.scorer_template is not None
             else matrix_stage_scorer(dplan)
         )
         opts: dict = dict(
@@ -379,10 +420,10 @@ class CompiledCascade:
         if scores is None:
             if x is None:
                 raise ValueError("evaluate() needs scores=, x=, or producer=")
-            if self.fitted.score_fn is None and self.scorer_factory is None:
+            if self.fitted.score_fn is None and self.scorer_template is None:
                 raise ValueError(
                     "evaluate(x=...) needs a score_fn captured by fit() "
-                    "(or compile with scorer_factory= on a device backend)"
+                    "(or compile with scorer= for fully-lazy scoring)"
                 )
             scores = self.fitted.score_fn(x)
         F = np.asarray(scores)
@@ -409,9 +450,10 @@ class CompiledCascade:
           * ``scores``: precomputed ``(N, T)`` matrix in ORIGINAL model
             order (works on every backend; permuted to cascade order
             internally).
-          * ``x``: raw features — scored through the ``fit``-captured
-            ``score_fn`` (any backend), or fed straight to the compiled
-            ``scorer_factory`` scorer (on-device backends, fully lazy).
+          * ``x``: the raw batch operand — fed straight to the compiled
+            ``scorer=`` template (fully lazy, every backend; the host
+            rung drives it through ``host_producer``), else scored
+            through the ``fit``-captured ``score_fn``.
           * ``producer(rows, t0, t1)``: host-backend lazy producer in
             cascade order (requires ``n``).
 
@@ -429,13 +471,13 @@ class CompiledCascade:
             if producer is not None:
                 raise ValueError(
                     "producer= is a host-backend option; compile with "
-                    "scorer_factory= for lazy on-device scoring"
+                    "scorer= for lazy on-device scoring"
                 )
-            if self.scorer_factory is not None:
+            if self.scorer_template is not None:
                 if x is None:
                     raise ValueError(
-                        "compiled with scorer_factory=: pass the scorer's "
-                        "batch operand via x= (it consumes features, not "
+                        "compiled with scorer=: pass the scorer's batch "
+                        "operand via x= (it consumes raw inputs, not "
                         "score matrices)"
                     )
                 operand = x
@@ -453,7 +495,11 @@ class CompiledCascade:
                 )
             except RuntimeError as e:
                 # host can only take over when this call is scoreable there
-                can_host = scores is not None or self.fitted.score_fn is not None
+                can_host = (
+                    scores is not None
+                    or self.fitted.score_fn is not None
+                    or (self.scorer_template is not None and x is not None)
+                )
                 self._fall_and_rebind(
                     "wave", e,
                     accept=lambda b: b.capabilities.on_device or can_host,
@@ -464,6 +510,13 @@ class CompiledCascade:
             if n is None:
                 raise ValueError("producer= requires n= (batch row count)")
             p = producer
+        elif self.scorer_template is not None and scores is None:
+            if x is None:
+                raise ValueError(
+                    "compiled with scorer=: pass the scorer's batch "
+                    "operand via x="
+                )
+            p, n = host_producer(self.scorer_template, self.plan, x)
         else:
             ordered = self._ordered_scores(scores, x)
             n = ordered.shape[0]
@@ -504,7 +557,7 @@ class CompiledCascade:
         ``backend=`` kwarg has always named: ``cascade-scan`` | ``kernel``
         | ``sorted-kernel``) — orthogonal to the execution backend.
         ``score_fn`` defaults to the one captured by ``fit``; a compiled
-        ``scorer_factory`` becomes the server's device scorer.  The
+        ``scorer=`` template becomes the server's device scorer.  The
         server builds its own executor sized to the flush capacity, so
         compiled-evaluate traces and serving traces are independent.
 
@@ -535,8 +588,8 @@ class CompiledCascade:
             chunk_t=self.plan.chunk_t,
             audit_full_scores=audit_full_scores,
             score_block_n=score_block_n,
-            device_scorer_factory=(
-                self.scorer_factory
+            scorer=(
+                self.scorer_template
                 if self.backend.capabilities.on_device
                 else None
             ),

@@ -17,7 +17,7 @@ from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
 from repro.kernels.device_executor import (
     DeviceExecutor,
     DevicePlan,
-    StageScorer,
+    BoundScorer,
     lattice_stage_scorer,
     matrix_stage_scorer,
     tree_stage_scorer,
@@ -37,7 +37,7 @@ __all__ = [
     "gbt_scores_pallas",
     "DeviceExecutor",
     "DevicePlan",
-    "StageScorer",
+    "BoundScorer",
     "matrix_stage_scorer",
     "tree_stage_scorer",
     "lattice_stage_scorer",

@@ -126,7 +126,7 @@ def check_batch_finite(batch, n: int) -> None:
 
 __all__ = [
     "DevicePlan",
-    "StageScorer",
+    "BoundScorer",
     "StreamResult",
     "DeviceExecutor",
     "matrix_stage_scorer",
@@ -201,8 +201,28 @@ class DevicePlan:
 
 
 @dataclasses.dataclass(frozen=True)
-class StageScorer:
-    """A traceable score producer for the device loop body.
+class BoundScorer:
+    """The plan-bound, traceable form of the ``repro.api`` ``StageScorer``
+    protocol — what the executors actually call.
+
+    The one protocol method, shared by ChunkedExecutor (via
+    ``repro.api.scorers.host_producer``), DeviceExecutor,
+    ShardedDeviceExecutor and the streaming lanes (DESIGN.md §11):
+
+        ``stage(state, t0, t1, rows, x, n_valid) -> (scores, state)``
+
+    ``state`` is a per-row pytree matching ``state_spec`` with a leading
+    capacity axis; the executors carry it through the survivor buffers and
+    repack it with the SAME cumsum-prefix compaction as the row ids.  A
+    row's state at its FIRST stage (``t0 == 0``) is undefined — stateful
+    scorers must initialize it from the prepared operand there (streaming
+    admission drops rookies into recycled lanes mid-loop).  Stateless
+    scorers declare ``state_spec = ()`` and the state threading compiles
+    away to the exact pre-state program (billing stays byte-identical).
+
+    Stateless implementations provide ``fn``/``lane_fn`` and get
+    ``stage``/``lane_stage`` for free; stateful ones provide
+    ``stage_fn``/``lane_stage_fn`` directly:
 
     ``fn(x, rows, t0, n_valid) -> (cap, W)``: scores of cascade positions
     [t0, t0 + W) for the given (fixed-capacity, front-packed) row buffer.
@@ -212,36 +232,84 @@ class StageScorer:
     compacted at the front) to skip whole row-blocks past the live count
     (the Pallas kernels' block guard).
     ``prepare(batch) -> x``: one host-side call per batch producing the
-    operand ``fn`` closes the loop over (params stay baked into the
+    operand ``stage`` closes the loop over (params stay baked into the
     trace; only ``x`` streams through).
     ``block_n``: the scorer's OWN kernel row-block size — the granularity
     its block guard really computes at, which the executor uses for
     ``scores_computed`` billing (None = exact producer; billed at the
     executor's block size).
-    ``lane_fn`` (optional): the per-lane-stage variant for the streaming
-    executor — ``lane_fn(x, rows, t0_lane, n_valid) -> (cap, W)`` where
-    ``t0_lane`` is a (cap,) vector of per-lane cascade starts (admission
-    refill mixes stage-0 rookies with mid-cascade veterans in one
-    buffer, DESIGN.md §8).  Scorers without one cannot serve
-    ``run_stream`` on the multi-kernel fallback path.
+    ``lane_fn`` / ``lane_stage_fn``: the per-lane-stage variant for the
+    streaming executors — same signature with ``t0_lane`` a (cap,) vector
+    of per-lane cascade starts (admission refill mixes stage-0 rookies
+    with mid-cascade veterans in one buffer, DESIGN.md §8).  Scorers
+    without one cannot serve ``run_stream`` on the multi-kernel fallback
+    path.
     ``slabs`` (optional): the scorer's params as quantized, stage-stacked
-    ``megakernel.ParamSlabs`` — present on every factory-built scorer and
+    ``megakernel.ParamSlabs`` — present on the stateless built-ins and
     the ticket into the fused stage-step megakernel (DESIGN.md §9);
     ``fn``/``lane_fn`` stay as the multi-kernel fallback and parity
-    oracle.
+    oracle.  Stateful scorers carry none (the megakernel has no state
+    lane), so the fused path can never silently engage for them.
+    ``state_spec``: pytree of ``jax.ShapeDtypeStruct`` with PER-ROW
+    shapes (no capacity axis); ``()`` declares a stateless scorer.
     """
 
-    fn: Callable
+    fn: Callable | None
     prepare: Callable
     width: int
     block_n: int | None = None
     lane_fn: Callable | None = None
     slabs: mk.ParamSlabs | None = None
+    state_spec: object = ()
+    stage_fn: Callable | None = None
+    lane_stage_fn: Callable | None = None
+
+    @property
+    def stateful(self) -> bool:
+        return len(jax.tree_util.tree_leaves(self.state_spec)) > 0
+
+    @property
+    def has_lanes(self) -> bool:
+        return self.lane_fn is not None or self.lane_stage_fn is not None
+
+    def init_state(self, cap: int):
+        """Zero state buffers at capacity ``cap`` (leading axis added to
+        every ``state_spec`` leaf).  ``()`` for stateless scorers — the
+        executors' state threading then adds no leaves to their carries."""
+        return jax.tree_util.tree_map(
+            lambda sd: jnp.zeros((cap,) + tuple(sd.shape), sd.dtype),
+            self.state_spec,
+        )
+
+    def stage(self, state, t0, t1, rows, x, n_valid):
+        """The protocol: scores for cascade positions [t0, t1) of the
+        buffer's rows, plus the carried-forward state."""
+        if self.stage_fn is not None:
+            return self.stage_fn(state, t0, t1, rows, x, n_valid)
+        return self.fn(x, rows, t0, n_valid), state
+
+    def lane_stage(self, state, t0_lane, rows, x, n_valid):
+        """Per-lane-stage protocol variant (streaming admission)."""
+        if self.lane_stage_fn is not None:
+            return self.lane_stage_fn(state, t0_lane, rows, x, n_valid)
+        return self.lane_fn(x, rows, t0_lane, n_valid), state
+
+
+def repack_state(state, state_new, pack):
+    """Front-pack a survivor-state pytree with the compaction's ``pack``
+    indices: surviving lanes' updated state lands at its packed position,
+    retired lanes scatter out of bounds and drop, vacated lanes zero.
+    The no-op for stateless scorers (empty pytree, zero leaves)."""
+    return jax.tree_util.tree_map(
+        lambda b, v: jnp.zeros_like(b).at[pack].set(v, mode="drop"),
+        state,
+        state_new,
+    )
 
 
 def matrix_stage_scorer(
     dplan: DevicePlan, quant: str | None = None
-) -> StageScorer:
+) -> BoundScorer:
     """Scorer over a precomputed cascade-ORDERED (n, T) matrix.
 
     The device-loop analogue of ``core.executor.matrix_producer`` — used
@@ -269,7 +337,7 @@ def matrix_stage_scorer(
         idx = t0_lane[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
         return jnp.take_along_axis(xr, idx, axis=1)
 
-    return StageScorer(
+    return BoundScorer(
         fn=fn, prepare=prepare, width=W, lane_fn=lane_fn, slabs=slabs
     )
 
@@ -282,7 +350,7 @@ def tree_stage_scorer(
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
     quant: str | None = None,
-) -> StageScorer:
+) -> BoundScorer:
     """Oblivious-forest scorer: per stage, ``dynamic_slice`` the (W, ...)
     slab of cascade-ordered stacked tree params and run the Pallas tree
     kernel on the gathered survivor rows.  Padded models have zero leaves
@@ -329,7 +397,7 @@ def tree_stage_scorer(
             idx = 2 * idx + (xj > th[:, :, j]).astype(jnp.int32)
         return jnp.take_along_axis(lv, idx[:, :, None], axis=2)[:, :, 0]
 
-    return StageScorer(
+    return BoundScorer(
         fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn,
         slabs=slabs,
     )
@@ -342,7 +410,7 @@ def lattice_stage_scorer(
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
     quant: str | None = None,
-) -> StageScorer:
+) -> BoundScorer:
     """Lattice scorer: same slab scheme as ``tree_stage_scorer`` over the
     cascade-ordered (theta, feats) stacks."""
     W, T_pad = dplan.W, dplan.T_pad
@@ -385,7 +453,7 @@ def lattice_stage_scorer(
         # the f32 streaming paths bit-identical to each other
         return jnp.sum(w * th, axis=-1)
 
-    return StageScorer(
+    return BoundScorer(
         fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn,
         slabs=slabs,
     )
@@ -480,7 +548,7 @@ class DeviceExecutor:
     def __init__(
         self,
         plan: CascadePlan | DevicePlan,
-        scorer: StageScorer,
+        scorer: BoundScorer,
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
         megakernel: bool | None = None,
@@ -493,6 +561,13 @@ class DeviceExecutor:
             )
         if megakernel is None:
             megakernel = scorer.slabs is not None and scorer.slabs.quant == "f32"
+        if megakernel and scorer.stateful:
+            raise ValueError(
+                "megakernel=True is incompatible with a stateful scorer "
+                "(non-empty state_spec): the fused stage step has no "
+                "survivor-state carry.  Use the multi-kernel path "
+                "(megakernel=False / the auto default)."
+            )
         if megakernel and scorer.slabs is None:
             raise ValueError(
                 "megakernel=True needs a scorer with ParamSlabs (factory-"
@@ -550,7 +625,7 @@ class DeviceExecutor:
             # (scatter targets differ: buffer rows here, global ids there)
             # — a semantics change here must be replayed there; the
             # parity tests in tests/test_sharded.py catch a skew
-            s, rows, n_active, g, dec, ex, n_in_log = carry
+            s, rows, n_active, g, dec, ex, n_in_log, state = carry
             n_in_log = n_in_log.at[s].set(n_active)
             t0 = stage_t0[s]
             g_rows = jnp.take(g, rows, axis=0)  # trash indices clamp
@@ -568,13 +643,17 @@ class DeviceExecutor:
                         interpret=self.interpret,
                     )
                 )
+                state_new = state  # megakernel path is stateless-only
             else:
                 # multi-kernel fallback (the parity oracle): score the
                 # survivor buffer, then decide.  The scorer may skip
                 # whole blocks past n_active (survivors are front-
                 # packed); padded columns are zeroed so they cannot move
-                # a partial sum.
-                scores = self.scorer.fn(x, rows, t0, n_active)
+                # a partial sum.  Stateful scorers return the carried
+                # per-lane state alongside the scores.
+                scores, state_new = self.scorer.stage(
+                    state, t0, t0 + W, rows, x, n_active
+                )
                 scores = jnp.where(col_valid[s][None, :], scores, 0.0)
                 g_new, active, dpos, ex_rel = cascade_chunk_pallas(
                     g_rows,
@@ -605,10 +684,14 @@ class DeviceExecutor:
                 .at[pack]
                 .set(rows, mode="drop")
             )
-            return (s + 1, rows, n_keep, g, dec, ex, n_in_log)
+            # the survivor-state pytree is compacted with the SAME pack
+            # indices as the rows buffer (a no-op for stateless scorers:
+            # the tree is empty, so no carry leaves are added)
+            state = repack_state(state, state_new, pack)
+            return (s + 1, rows, n_keep, g, dec, ex, n_in_log, state)
 
         def cond(carry):
-            s, _, n_active, _, _, _, _ = carry
+            s, _, n_active, _, _, _, _, _ = carry
             # quit when you can: stop as soon as every row has exited
             return (s < S) & (n_active > 0)
 
@@ -620,8 +703,9 @@ class DeviceExecutor:
             jnp.zeros((cap,), dtype=jnp.bool_),
             jnp.full((cap,), T, dtype=jnp.int32),
             jnp.zeros((S,), dtype=jnp.int32),
+            self.scorer.init_state(cap),
         )
-        s_f, rows_f, n_f, g, dec, ex, n_in_log = jax.lax.while_loop(
+        s_f, rows_f, n_f, g, dec, ex, n_in_log, _ = jax.lax.while_loop(
             cond, body, init
         )
         # rows that never exited: classified by the full ensemble score
@@ -729,11 +813,10 @@ class DeviceExecutor:
         beta = jnp.float32(dp.plan.beta)
         lane = jnp.arange(cap, dtype=jnp.int32)
         ridx = jnp.arange(R, dtype=jnp.int32)
-        lane_scorer = self.scorer.lane_fn
 
         def body(carry):
             (step, rows, stage, g, n_live, head,
-             dec, ex, gout, admit, done) = carry
+             dec, ex, gout, admit, done, state) = carry
             # admission refill: open slots at the BACK of the front-packed
             # buffers take the next pending rows whose arrival step has
             # come (arrivals are nondecreasing — the ring is the server's
@@ -787,8 +870,15 @@ class DeviceExecutor:
                 )
                 active_b = active.astype(bool)
                 lane_valid = lane < n_live
+                state_new = state  # megakernel path is stateless-only
             else:
-                scores = lane_scorer(x, rows, t0_lane, n_live)
+                # rookies admitted above sit at stage 0: the t0==0 contract
+                # (BoundScorer docs) makes the scorer (re)initialize their
+                # lane state from the prepared operand, so the zero-filled
+                # slots left by compaction are never read as real state
+                scores, state_new = self.scorer.lane_stage(
+                    state, t0_lane, rows, x, n_live
+                )
                 scores = jnp.where(
                     jnp.take(col_valid, stage, axis=0), scores, 0.0
                 )
@@ -836,10 +926,11 @@ class DeviceExecutor:
                 .at[pack]
                 .set(g_new, mode="drop")
             )
+            state = repack_state(state, state_new, pack)
             return (
                 step + 1, rows, stage, g,
                 n_keep, head,
-                dec, ex, gout, admit, done,
+                dec, ex, gout, admit, done, state,
             )
 
         def cond(carry):
@@ -861,9 +952,10 @@ class DeviceExecutor:
             jnp.zeros((R,), dtype=jnp.float32),
             jnp.zeros((R,), dtype=jnp.int32),
             jnp.zeros((R,), dtype=jnp.int32),
+            self.scorer.init_state(cap),
         )
-        (s_f, _, _, _, _, _, dec, ex, gout, admit, done) = jax.lax.while_loop(
-            cond, body, init
+        (s_f, _, _, _, _, _, dec, ex, gout, admit, done, _) = (
+            jax.lax.while_loop(cond, body, init)
         )
         return dec, ex, gout, admit, done, s_f
 
@@ -891,11 +983,11 @@ class DeviceExecutor:
         """
         plan = self.dplan.plan
         T = plan.T
-        if self.scorer.lane_fn is None and not self.megakernel:
+        if not self.scorer.has_lanes and not self.megakernel:
             raise ValueError(
-                "run_stream needs a StageScorer with lane_fn (per-lane "
-                "stage scoring) on the multi-kernel path; this scorer "
-                "only supports batch stages"
+                "run_stream needs a scorer with per-lane stage scoring "
+                "(lane_fn or lane_stage_fn) on the multi-kernel path; "
+                "this scorer only supports batch stages"
             )
         if n == 0:
             return StreamResult(

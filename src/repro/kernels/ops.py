@@ -8,8 +8,6 @@ with a pure-jnp oracle in ``ref.py``.
 
 from __future__ import annotations
 
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +15,7 @@ import numpy as np
 from repro.core.executor import CascadePlan, ExecutorResult
 from repro.kernels import ref
 from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_pallas
-from repro.kernels.device_executor import StageScorer
+from repro.kernels.device_executor import BoundScorer
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 
@@ -123,7 +121,7 @@ def score_and_decide(
     the Pallas chunk-decide kernel; survivors are compacted on host
     before the next stage.
 
-    On-device mode: ``producer`` must be a ``device_executor.StageScorer``
+    On-device mode: ``producer`` must be a ``device_executor.BoundScorer``
     and ``x`` the batch operand its ``prepare`` consumes; the entire
     stage loop — scoring, decide, compaction, early exit — runs as one
     jit'd ``lax.while_loop`` with no per-stage host round-trips
@@ -137,27 +135,23 @@ def score_and_decide(
     same block size really computes ceil(m / block_n) * block_n rows per
     stage, and scores_computed bills that, not the rows requested.
 
-    DEPRECATED: ``device=True/False`` forwards to
-    ``backend="device"``/``"host"`` with a ``DeprecationWarning``.
+    (The legacy ``device=True/False`` boolean was retired after its
+    deprecation cycle; it raises naming the ``backend=`` replacement.)
     """
     from repro.api.registry import resolve_backend
 
     if device is not None:
-        warnings.warn(
-            "score_and_decide(device=...) is deprecated; pass "
-            "backend='device' (or 'host'/'sharded'/'auto' — see repro.api) "
-            "instead",
-            DeprecationWarning,
-            stacklevel=2,
+        raise TypeError(
+            "score_and_decide(device=...) was removed after its "
+            "deprecation cycle; pass backend='device' (or "
+            "'host'/'sharded'/'auto' — see repro.api) instead"
         )
-        if backend is None:
-            backend = "device" if device else "host"
     b = resolve_backend("host" if backend is None else backend)
     opts = dict(backend_opts or {})
     if b.capabilities.on_device:
-        if not isinstance(producer, StageScorer):
+        if not isinstance(producer, BoundScorer):
             raise TypeError(
-                f"backend {b.name!r} requires a device_executor.StageScorer "
+                f"backend {b.name!r} requires a device_executor.BoundScorer "
                 "producer"
             )
         if x is None:

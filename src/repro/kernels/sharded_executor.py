@@ -60,12 +60,13 @@ from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pall
 from repro.kernels.device_executor import (
     DEFAULT_BLOCK_N,
     INTERPRET,
+    BoundScorer,
     DevicePlan,
-    StageScorer,
     StreamResult,
     WaveFailure,  # noqa: F401 — re-export: sharded waves raise the same type
     check_batch_finite,
     launch_wave,
+    repack_state,
     stream_occupancy,
 )
 
@@ -105,7 +106,7 @@ class ShardedDeviceExecutor:
     def __init__(
         self,
         plan: CascadePlan | DevicePlan,
-        scorer: StageScorer,
+        scorer: BoundScorer,
         mesh: jax.sharding.Mesh,
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
@@ -133,6 +134,13 @@ class ShardedDeviceExecutor:
                 "megakernel=True needs a scorer with ParamSlabs (factory-"
                 "built scorers carry them; custom scorers fall back to the "
                 "multi-kernel path)"
+            )
+        if megakernel and scorer.stateful:
+            raise ValueError(
+                "megakernel=True is incompatible with a stateful scorer "
+                "(non-empty state_spec): the fused stage step has no "
+                "survivor-state carry.  Use the multi-kernel path "
+                "(megakernel=False / the auto default)."
             )
         self.megakernel = bool(megakernel)
         self.scorer = scorer
@@ -197,41 +205,49 @@ class ShardedDeviceExecutor:
         lane = jnp.arange(cap_l, dtype=jnp.int32)
         bn_bill = self.scorer.block_n or self.block_n
 
-        def _rebalance(xbuf, gbuf, idbuf, n_live, counts, total):
+        def _rebalance(xbuf, state, gbuf, idbuf, n_live, counts, total):
             """All-gather the survivor buffers, repack globally (stable,
             shard-major), re-split evenly.  Ids ride along, so ownership
-            moves but result scatter is unaffected."""
+            moves but result scatter is unaffected.  The survivor-state
+            pytree is bundled with the operand payload: its per-lane
+            leaves migrate shards with their rows (a no-op for stateless
+            scorers — the tree is empty)."""
             k = jax.lax.axis_index(DATA_AXIS)
-            flat_x = jax.lax.all_gather(xbuf, DATA_AXIS).reshape(
-                (cap_g,) + xbuf.shape[1:]
-            )
-            flat_g = jax.lax.all_gather(gbuf, DATA_AXIS).reshape(cap_g)
-            flat_id = jax.lax.all_gather(idbuf, DATA_AXIS).reshape(cap_g)
             valid = (
                 jnp.arange(cap_l, dtype=jnp.int32)[None, :] < counts[:, None]
             ).reshape(cap_g)
             pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
             scat = jnp.where(valid, pos, cap_g)
-            packed_x = (
-                jnp.zeros_like(flat_x).at[scat].set(flat_x, mode="drop")
-            )
-            packed_g = jnp.zeros_like(flat_g).at[scat].set(flat_g, mode="drop")
+            base, rem = total // shards, total % shards
+            start = k * base + jnp.minimum(k, rem)
+            cnt = base + (k < rem).astype(jnp.int32)
+
+            def migrate(buf):
+                # gather -> global stable repack -> even re-split, one
+                # per-lane leaf at a time (operand and state alike)
+                flat = jax.lax.all_gather(buf, DATA_AXIS).reshape(
+                    (cap_g,) + buf.shape[1:]
+                )
+                packed = (
+                    jnp.zeros_like(flat).at[scat].set(flat, mode="drop")
+                )
+                return jax.lax.dynamic_slice(
+                    packed,
+                    (start,) + (0,) * (packed.ndim - 1),
+                    (cap_l,) + packed.shape[1:],
+                )
+
+            xbuf = migrate(xbuf)
+            state = jax.tree_util.tree_map(migrate, state)
+            gbuf = migrate(gbuf)
+            flat_id = jax.lax.all_gather(idbuf, DATA_AXIS).reshape(cap_g)
             packed_id = (
                 jnp.full((cap_g,), cap_g, dtype=jnp.int32)
                 .at[scat]
                 .set(flat_id, mode="drop")
             )
-            base, rem = total // shards, total % shards
-            start = k * base + jnp.minimum(k, rem)
-            cnt = base + (k < rem).astype(jnp.int32)
-            xbuf = jax.lax.dynamic_slice(
-                packed_x,
-                (start,) + (0,) * (packed_x.ndim - 1),
-                (cap_l,) + packed_x.shape[1:],
-            )
-            gbuf = jax.lax.dynamic_slice(packed_g, (start,), (cap_l,))
             idbuf = jax.lax.dynamic_slice(packed_id, (start,), (cap_l,))
-            return xbuf, gbuf, idbuf, cnt
+            return xbuf, state, gbuf, idbuf, cnt
 
         def body(carry):
             # fused stage semantics mirror DeviceExecutor._program's body
@@ -241,7 +257,7 @@ class ShardedDeviceExecutor:
             # (the cross-executor parity tests in tests/test_sharded.py
             # catch a skew)
             (s, xbuf, gbuf, idbuf, n_live, total, dec, ex, gout,
-             n_in_log, reb_log) = carry
+             n_in_log, reb_log, state) = carry
             n_in_log = n_in_log.at[s].set(n_live)
             t0 = stage_t0[s]
             if self.megakernel:
@@ -256,11 +272,14 @@ class ShardedDeviceExecutor:
                         interpret=self.interpret,
                     )
                 )
+                state_new = state  # megakernel path is stateless-only
             else:
                 # the survivor buffer IS the row set, so the scorer's
                 # gather is the identity over cap_l local rows (never the
                 # global batch)
-                scores = self.scorer.fn(xbuf, lane, t0, n_live)
+                scores, state_new = self.scorer.stage(
+                    state, t0, t0 + W, lane, xbuf, n_live
+                )
                 scores = jnp.where(col_valid[s][None, :], scores, 0.0)
                 g_new, active, dpos, ex_rel = cascade_chunk_pallas(
                     gbuf,
@@ -292,6 +311,7 @@ class ShardedDeviceExecutor:
                 .at[pack]
                 .set(idbuf, mode="drop")
             )
+            state = repack_state(state, state_new, pack)
             n_live = n_keep
             # occupancy census: one small all_gather per stage drives both
             # the replicated exit total and the rebalance trigger
@@ -308,15 +328,15 @@ class ShardedDeviceExecutor:
                 )
                 trigger = (total > 0) & worth_a_block & skewed
                 reb_log = reb_log.at[s].set(trigger.astype(jnp.int32))
-                xbuf, gbuf, idbuf, n_live = jax.lax.cond(
+                xbuf, state, gbuf, idbuf, n_live = jax.lax.cond(
                     trigger,
                     lambda a: _rebalance(*a, counts, total),
                     lambda a: a,
-                    (xbuf, gbuf, idbuf, n_live),
+                    (xbuf, state, gbuf, idbuf, n_live),
                 )
             return (
                 s + 1, xbuf, gbuf, idbuf, n_live, total, dec, ex, gout,
-                n_in_log, reb_log,
+                n_in_log, reb_log, state,
             )
 
         def cond(carry):
@@ -338,9 +358,10 @@ class ShardedDeviceExecutor:
             jnp.zeros((cap_g,), dtype=jnp.float32),
             jnp.zeros((S,), dtype=jnp.int32),
             jnp.zeros((S,), dtype=jnp.int32),
+            self.scorer.init_state(cap_l),
         )
         (s_f, xbuf, gbuf, idbuf, n_live, total, dec, ex, gout,
-         n_in_log, reb_log) = jax.lax.while_loop(cond, body, init)
+         n_in_log, reb_log, _) = jax.lax.while_loop(cond, body, init)
         # rows that never exited: classified by the full ensemble score,
         # written through the same exactly-once id scatter
         lane_valid = lane < n_live
@@ -506,12 +527,11 @@ class ShardedDeviceExecutor:
         beta = jnp.float32(dp.plan.beta)
         lane = jnp.arange(cap_l, dtype=jnp.int32)
         ridx = jnp.arange(R_l, dtype=jnp.int32)
-        lane_scorer = self.scorer.lane_fn
         bn_bill = self.scorer.block_n or self.block_n
 
         def body(carry):
             (step, xbuf, stage, gbuf, idbuf, n_live, head, total,
-             dec, ex, gout, admit, done) = carry
+             dec, ex, gout, admit, done, state) = carry
             # shard-local admission: freed back slots take the next
             # arrived rows from THIS shard's ring (no collectives)
             arrived = jnp.sum(
@@ -562,8 +582,15 @@ class ShardedDeviceExecutor:
                 )
                 active_b = active.astype(bool)
                 lane_valid = lane < n_live
+                state_new = state  # megakernel path is stateless-only
             else:
-                scores = lane_scorer(xbuf, lane, t0_lane, n_live)
+                # rookies admitted above sit at stage 0: the t0==0
+                # contract (BoundScorer docs) reinitializes their lane
+                # state from the operand, so the zero-filled slots left
+                # by compaction are never read as real state
+                scores, state_new = self.scorer.lane_stage(
+                    state, t0_lane, lane, xbuf, n_live
+                )
                 scores = jnp.where(
                     jnp.take(col_valid, stage, axis=0), scores, 0.0
                 )
@@ -607,12 +634,13 @@ class ShardedDeviceExecutor:
                 .at[pack]
                 .set(idbuf, mode="drop")
             )
+            state = repack_state(state, state_new, pack)
             n_live = n_keep
             # mesh-wide census: the psum'd total now counts pending + live
             total = jax.lax.psum(n_live + (cnt - head), DATA_AXIS)
             return (
                 step + 1, xbuf, stage, gbuf, idbuf, n_live, head, total,
-                dec, ex, gout, admit, done,
+                dec, ex, gout, admit, done, state,
             )
 
         def cond(carry):
@@ -636,8 +664,9 @@ class ShardedDeviceExecutor:
             jnp.zeros((R_g,), dtype=jnp.float32),
             jnp.zeros((R_g,), dtype=jnp.int32),
             jnp.zeros((R_g,), dtype=jnp.int32),
+            self.scorer.init_state(cap_l),
         )
-        (s_f, _, _, _, _, _, _, _, dec, ex, gout, admit, done) = (
+        (s_f, _, _, _, _, _, _, _, dec, ex, gout, admit, done, _) = (
             jax.lax.while_loop(cond, body, init)
         )
         # exactly-once id scatter per shard: psum assembles the stream
@@ -693,11 +722,11 @@ class ShardedDeviceExecutor:
         """
         plan = self.dplan.plan
         T = plan.T
-        if self.scorer.lane_fn is None and not self.megakernel:
+        if not self.scorer.has_lanes and not self.megakernel:
             raise ValueError(
-                "run_stream needs a StageScorer with lane_fn (per-lane "
-                "stage scoring) on the multi-kernel path; this scorer "
-                "only supports batch stages"
+                "run_stream needs a scorer with per-lane stage scoring "
+                "(lane_fn or lane_stage_fn) on the multi-kernel path; "
+                "this scorer only supports batch stages"
             )
         shards = self.shards
         if n == 0:

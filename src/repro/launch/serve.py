@@ -11,9 +11,10 @@ reports speedup / faithfulness — the paper's production scenario.
 (``repro.api``): ``auto`` (default — negotiates sharded -> device -> host
 from the available devices), ``host``, ``device``, or ``sharded``.
 ``--policy`` is the server's sorting/decide policy (what ``--backend``
-used to mean).  The old ``--device`` / ``--shards N`` flags still work as
-deprecation shims that forward to ``--backend device`` /
-``--backend sharded --backend-shards N``.
+used to mean).  The old ``--device`` / ``--shards N`` flags were retired
+after their deprecation cycle: they now fail fast, naming the
+``--backend device`` / ``--backend sharded --backend-shards N``
+replacements.
 """
 
 from __future__ import annotations
@@ -25,12 +26,13 @@ import warnings
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import scorers
 from repro.api.registry import backend_names, resolve_backend
 from repro.core import fit_qwyc
 from repro.data.synthetic import make_dataset
 from repro.ensembles.gbt import train_gbt
 from repro.ensembles.lattice import init_lattice_ensemble, train_lattice_ensemble
-from repro.kernels import device_executor, ops
+from repro.kernels import ops
 from repro.serving.engine import BACKENDS as POLICIES
 from repro.serving.engine import QWYCServer, StreamingServer
 
@@ -70,11 +72,11 @@ def build_parser() -> argparse.ArgumentParser:
     )
     ap.add_argument(
         "--device", action="store_true",
-        help="DEPRECATED: use --backend device",
+        help="REMOVED: use --backend device",
     )
     ap.add_argument(
         "--shards", type=int, default=None,
-        help="DEPRECATED: use --backend sharded --backend-shards N",
+        help="REMOVED: use --backend sharded --backend-shards N",
     )
     ap.add_argument(
         "--backend-shards", type=int, default=None,
@@ -153,11 +155,22 @@ def build_parser() -> argparse.ArgumentParser:
 def resolve_backend_args(args) -> tuple[str, dict, str]:
     """(exec_backend_name, backend_opts, policy) from parsed CLI args.
 
-    The deprecated spellings (``--device``, ``--shards N``, a policy name
-    under ``--backend``) emit ``DeprecationWarning`` and forward to the
-    backend-registry equivalents — tests assert both the warning and the
-    identical resolution.
+    A policy name under ``--backend`` still emits ``DeprecationWarning``
+    and forwards to ``--policy``.  The boolean-era ``--device`` /
+    ``--shards N`` spellings were retired after their warning cycle:
+    they raise ``ValueError`` naming the replacement (tests assert the
+    pointed message).
     """
+    if args.device:
+        raise ValueError(
+            "--device was removed after its deprecation cycle; "
+            "use --backend device"
+        )
+    if args.shards is not None:
+        raise ValueError(
+            "--shards was removed after its deprecation cycle; "
+            "use --backend sharded --backend-shards N"
+        )
     backend, policy = args.backend, args.policy
     if backend in POLICIES:
         warnings.warn(
@@ -175,25 +188,6 @@ def resolve_backend_args(args) -> tuple[str, dict, str]:
             # backend — don't let auto negotiate down to device/host and
             # then reject the shards option
             backend = "sharded"
-    if args.device:
-        warnings.warn(
-            "--device is deprecated; use --backend device",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if backend == "auto":
-            backend = "device"
-    if args.shards is not None:
-        warnings.warn(
-            "--shards is deprecated; use --backend sharded "
-            "--backend-shards N",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if args.shards > 1:
-            if backend in ("auto", "device"):
-                backend = "sharded"
-            opts.setdefault("shards", int(args.shards))
     if args.rebalance:
         opts["rebalance"] = True
     return backend, opts, policy
@@ -238,17 +232,15 @@ def main() -> None:
 
             return chunk_score_fn
 
-        def make_device_scorer_factory(order):
-            of = np.asarray(stacked["feats"])[order]
-            ot = np.asarray(stacked["thrs"])[order]
-            ol = np.asarray(stacked["leaves"])[order]
-
-            def factory(dplan):
-                return device_executor.tree_stage_scorer(
-                    dplan, of, ot, ol, block_n=SCORE_BLOCK_N
-                )
-
-            return factory
+        def make_scorer():
+            # StageScorer templates take ORIGINAL-order params; the bind
+            # step applies the plan's cascade order itself (DESIGN.md §11)
+            return scorers.TreeScorer(
+                np.asarray(stacked["feats"]),
+                np.asarray(stacked["thrs"]),
+                np.asarray(stacked["leaves"]),
+                block_n=SCORE_BLOCK_N,
+            )
 
     else:
         lat = init_lattice_ensemble(args.T, ds.D, S=min(8, ds.D), seed=0)
@@ -270,16 +262,12 @@ def main() -> None:
 
             return chunk_score_fn
 
-        def make_device_scorer_factory(order):
-            th = np.asarray(lat["theta"])[order]
-            fe = np.asarray(lat["feats"])[order]
-
-            def factory(dplan):
-                return device_executor.lattice_stage_scorer(
-                    dplan, th, fe, block_n=SCORE_BLOCK_N
-                )
-
-            return factory
+        def make_scorer():
+            return scorers.LatticeScorer(
+                np.asarray(lat["theta"]),
+                np.asarray(lat["feats"]),
+                block_n=SCORE_BLOCK_N,
+            )
 
     F_train = np.asarray(score_fn(ds.x_train))
     qwyc = fit_qwyc(F_train, beta=beta, alpha=args.alpha, mode=args.mode)
@@ -295,9 +283,7 @@ def main() -> None:
     )
     if on_device and not args.eager:
         # fully lazy device path; chunk_score_fn stays as the audit reader
-        producer_kw["device_scorer_factory"] = make_device_scorer_factory(
-            qwyc.order
-        )
+        producer_kw["scorer"] = make_scorer()
     audit = args.audit or args.eager or args.watchdog
     common_kw = dict(
         batch_size=args.batch_size,

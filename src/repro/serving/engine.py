@@ -31,11 +31,11 @@ Score producers:
     fallback: the matrix is materialized once per batch and the executor
     reads from it (no base-model work is skipped; ``ServeStats``
     scores_computed records the difference).
-  * ``exec_backend="device"`` + ``device_scorer_factory`` — the serving
-    fast path (DESIGN.md §5): the whole stage loop (scoring, decide,
-    compaction, early exit) runs as ONE jit'd device program; the host
-    stage loop above stays as the oracle and the host-producer escape
-    hatch.
+  * ``exec_backend="device"`` + ``scorer=`` (a ``repro.api.StageScorer``
+    template, DESIGN.md §11) — the serving fast path (DESIGN.md §5): the
+    whole stage loop (scoring, decide, compaction, early exit) runs as
+    ONE jit'd device program; the host stage loop above stays as the
+    oracle and the host-producer escape hatch.
   * ``exec_backend="sharded"`` (DESIGN.md §6) — the device program
     additionally runs under ``shard_map`` with the microbatch split over
     a ``("data",)`` mesh axis: each flush serves ``shards x batch_size``
@@ -44,8 +44,9 @@ Score producers:
 Execution backends are resolved by name through the backend registry
 (``repro.api``, DESIGN.md §7) — the server never constructs an executor
 class directly, so new substrates plug in without touching this module.
-The legacy ``device=True`` boolean is a deprecation shim that forwards
-to ``exec_backend="device"``.
+(The legacy ``device=True`` boolean and ``device_scorer_factory=``
+spellings were retired after their deprecation cycle; both raise with
+the replacement named.)
 
 Filter-and-Score mode (neg_only): positively classified requests get the
 full ensemble score attached, matching the paper's production setting —
@@ -64,7 +65,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable
 
 import jax
@@ -178,7 +178,8 @@ class QWYCServer:
         audit_full_scores: bool = True,
         score_block_n: int = 1,
         device: bool | None = None,
-        device_scorer_factory: Callable | None = None,
+        scorer=None,
+        device_scorer_factory=None,
         mesh=None,
         rebalance: bool = False,
         exec_backend=None,
@@ -190,8 +191,9 @@ class QWYCServer:
     ):
         """At least one of ``score_fn`` (eager, ORIGINAL model order),
         ``chunk_score_fn`` (lazy, cascade order — see module docstring) or
-        ``device_scorer_factory`` (with an on-device ``exec_backend``) is
-        required; when several are given the laziest serving path wins.
+        ``scorer`` (a ``repro.api.StageScorer`` template, with an
+        on-device ``exec_backend``) is required; when several are given
+        the laziest serving path wins.
         ``audit_full_scores`` controls whether
         early-exited rows' full scores are recomputed for diff-vs-full
         accounting (audit work, tracked separately from serving work;
@@ -217,10 +219,12 @@ class QWYCServer:
         ``shards=``, ``rebalance=``, ``rebalance_ratio=``) to the
         backend's ``make_executor``.
 
-        On-device scoring comes from ``device_scorer_factory(device_plan)
-        -> StageScorer`` (fully lazy, on device) or falls back to
-        ``score_fn`` (matrix materialized eagerly per batch; control flow
-        still moves on device).  The host executor remains the oracle and
+        On-device scoring comes from ``scorer`` — a ``StageScorer``
+        template bound per device-plan variant (fully lazy, on device;
+        stateful scorers like ``NeuralScorer`` carry their per-row state
+        through the survivor buffers) — or falls back to ``score_fn``
+        (matrix materialized eagerly per batch; control flow still moves
+        on device).  The host executor remains the oracle and
         the escape hatch for arbitrary host-side producer injection
         (``chunk_score_fn``); on device an available ``chunk_score_fn`` is
         still used for diff auditing.  The ``cascade-scan`` policy's numpy
@@ -241,44 +245,43 @@ class QWYCServer:
         (``sleep`` is injectable so chaos tests never wait); ladder
         history lands in ``ServeStats.degradation_events``.
 
-        DEPRECATED: ``device=True/False`` (forwards to
-        ``exec_backend="device"``/``"host"`` with a ``DeprecationWarning``).
         ``mesh=``/``rebalance=`` remain supported spellings of the same
         ``backend_opts`` entries and imply ``exec_backend="sharded"``.
         """
         from repro.api.registry import resolve_backend
+        from repro.api.scorers import StageScorer
 
-        opts = dict(backend_opts or {})
         if device is not None:
-            warnings.warn(
-                "QWYCServer(device=...) is deprecated; pass "
-                "exec_backend='device' (or 'auto'/'host'/'sharded' — see "
-                "repro.api) instead",
-                DeprecationWarning,
-                stacklevel=2,
+            # the PR-4 deprecation shim, retired after its warning cycle
+            raise TypeError(
+                "QWYCServer(device=...) was removed after its deprecation "
+                "cycle: pass exec_backend='device' (or "
+                "'auto'/'host'/'sharded' — see repro.api) instead"
             )
+        if device_scorer_factory is not None:
+            raise TypeError(
+                "device_scorer_factory= was removed: pass scorer= with a "
+                "repro.api.StageScorer template (MatrixScorer/TreeScorer/"
+                "LatticeScorer/NeuralScorer — DESIGN.md §11); the server "
+                "binds it per device-plan variant itself"
+            )
+        if scorer is not None and not isinstance(scorer, StageScorer):
+            raise TypeError(
+                f"scorer= must be a repro.api.StageScorer, got "
+                f"{type(scorer).__name__}"
+            )
+        opts = dict(backend_opts or {})
         if mesh is not None:
             opts.setdefault("mesh", mesh)
         if rebalance:
             opts["rebalance"] = True
-        explicit_backend = exec_backend is not None
         if exec_backend is None:
             # legacy dispatch forwarded into the backend registry: a mesh
-            # (or shard count) means sharded, device=True means device,
-            # everything else keeps the historical host default
-            if "mesh" in opts or "shards" in opts:
-                exec_backend = "sharded"
-            elif device:
-                exec_backend = "device"
-            else:
-                exec_backend = "host"
+            # (or shard count) means sharded, everything else keeps the
+            # historical host default
+            exec_backend = "sharded" if ("mesh" in opts or "shards" in opts) else "host"
         self.exec = resolve_backend(exec_backend)
         caps = self.exec.capabilities
-        if explicit_backend and device is not None and bool(device) != caps.on_device:
-            raise ValueError(
-                f"conflicting dispatch: device={device!r} with "
-                f"exec_backend={self.exec.name!r}"
-            )
         if opts.get("rebalance") and not caps.supports_rebalance:
             raise ValueError(
                 "rebalance=True requires the sharded backend "
@@ -291,22 +294,22 @@ class QWYCServer:
             )
         on_device = caps.on_device
         if score_fn is None and chunk_score_fn is None and (
-            not on_device or device_scorer_factory is None
+            not on_device or scorer is None
         ):
             raise ValueError(
                 "need score_fn, chunk_score_fn, or an on-device exec_backend "
-                "with device_scorer_factory"
+                "with scorer="
             )
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
-        if device_scorer_factory is not None and not on_device:
+        if scorer is not None and not on_device:
             raise ValueError(
-                "device_scorer_factory requires an on-device exec_backend "
+                "scorer= requires an on-device exec_backend "
                 "('device', 'sharded', or 'auto' resolving to one)"
             )
-        if on_device and device_scorer_factory is None and score_fn is None:
+        if on_device and scorer is None and score_fn is None:
             raise ValueError(
-                "on-device serving needs device_scorer_factory or score_fn"
+                "on-device serving needs scorer= or score_fn"
             )
         self.qwyc = qwyc
         self.score_fn = score_fn
@@ -318,7 +321,7 @@ class QWYCServer:
         self.audit_full_scores = audit_full_scores
         self.score_block_n = max(1, int(score_block_n))
         self.device = on_device  # True iff the stage loop runs on device
-        self.device_scorer_factory = device_scorer_factory
+        self.scorer_template = scorer
         self.mesh = None
         self.n_shards = 1
         if caps.data_parallel:
@@ -369,7 +372,7 @@ class QWYCServer:
         self._wd_margin = 0.0
         if self._watchdog is not None:
             audited = (chunk_score_fn is not None and audit_full_scores) or (
-                score_fn is not None and device_scorer_factory is None
+                score_fn is not None and scorer is None
             )
             if not audited:
                 raise ValueError(
@@ -472,8 +475,8 @@ class QWYCServer:
         if self.backend == "sorted-kernel":
             plan = dataclasses.replace(plan, lead_t=1)
         dplan = DevicePlan.from_plan(plan)
-        if self.device_scorer_factory is not None:
-            scorer = self.device_scorer_factory(dplan)
+        if self.scorer_template is not None:
+            scorer = self.scorer_template.bind(dplan)
             eager_matrix = False
         else:
             scorer = matrix_stage_scorer(dplan)
@@ -486,6 +489,13 @@ class QWYCServer:
         )
         key_fn = None
         if self.backend == "sorted-kernel" and not eager_matrix:
+            if scorer.fn is None:
+                raise ValueError(
+                    "the sorted-kernel policy needs a stateless scorer for "
+                    "its sort key (stage-0 scores standalone); stateful "
+                    f"scorers like {type(self.scorer_template).__name__} "
+                    "serve under the 'kernel' policy"
+                )
             # sort key = first cascade model's scores, computed on
             # device from the same stage-0 slab the loop body uses
             cap = executor._cap(self.flush_size)
@@ -555,7 +565,7 @@ class QWYCServer:
                 return False
             if caps.on_device:
                 return (
-                    self.device_scorer_factory is not None
+                    self.scorer_template is not None
                     or self.score_fn is not None
                 )
             # the host floor needs a host-side score source
@@ -572,7 +582,7 @@ class QWYCServer:
                 self._exec_opts.pop(k, None)
             self.rebalance = False
         if not caps.on_device:
-            self.device_scorer_factory = None
+            self.scorer_template = None
         self._dev = None
         self._dev_cache.clear()
 

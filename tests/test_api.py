@@ -29,7 +29,7 @@ from repro.kernels import ops
 from repro.kernels.device_executor import (
     DeviceExecutor,
     DevicePlan,
-    StageScorer,
+    BoundScorer,
     matrix_stage_scorer,
 )
 from repro.kernels.sharded_executor import ShardedDeviceExecutor
@@ -262,9 +262,9 @@ def test_sharded_backend_bit_identical_and_one_trace(shards):
     assert compiled.traces == 1
 
 
-def test_device_backend_custom_scorer_factory():
-    """Fully-lazy on-device scoring: compile(scorer_factory=...) consumes
-    the feature batch via x=."""
+def test_device_backend_custom_scorer():
+    """Fully-lazy on-device scoring: compile(scorer=...) consumes the
+    feature batch via x=."""
     rng = np.random.default_rng(44)
     t, d = 16, 6
     W = rng.normal(size=(t, d))
@@ -281,12 +281,14 @@ def test_device_backend_custom_scorer_factory():
             slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
             return jnp.take(x, rows, axis=0) @ slab.T
 
-        return StageScorer(
+        return BoundScorer(
             fn=fn, prepare=lambda xb: jnp.asarray(xb, jnp.float32),
             width=dplan.W,
         )
 
-    compiled = fitted.compile("device", scorer_factory=factory, block_n=64)
+    compiled = fitted.compile(
+        "device", scorer=api.FunctionScorer(factory), block_n=64
+    )
     res = compiled.evaluate(x=X)
     np.testing.assert_array_equal(res.decisions, ev["decisions"])
     np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
@@ -323,8 +325,11 @@ def test_serve_through_api_matches_direct_server():
 
 def test_compile_validation():
     _, fitted = _setup()
-    with pytest.raises(ValueError):
+    with pytest.raises(TypeError, match="scorer="):
+        # the removed factory kwarg points at the protocol replacement
         fitted.compile("host", scorer_factory=lambda dp: None)
+    with pytest.raises(TypeError):
+        fitted.compile("device", scorer=lambda dp: None)  # not a StageScorer
     with pytest.raises(ValueError):
         fitted.compile("device", shards=2)
     with pytest.raises(ValueError):
@@ -398,6 +403,9 @@ def test_import_path_and_stable_all():
         "AUTO", "NEGOTIATION_ORDER",
         "register_backend", "get_backend", "backend_names",
         "negotiate", "resolve_backend",
+        "StageScorer", "MatrixScorer", "TreeScorer", "LatticeScorer",
+        "NeuralScorer", "FunctionScorer",
+        "register_scorer", "get_scorer", "scorer_names",
     }
     assert set(api.__all__) == expected
     for name in api.__all__:

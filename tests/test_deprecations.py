@@ -1,9 +1,12 @@
-"""Deprecation shims for the pre-``repro.api`` boolean-flag dispatch.
+"""Retired deprecation shims for the pre-``repro.api`` boolean-flag
+dispatch.
 
-Satellite acceptance: ``QWYCServer(device=...)``,
-``ops.score_and_decide(device=...)`` and ``serve.py --device/--shards``
-each emit ``DeprecationWarning`` AND forward to the backend-registry
-equivalents with identical results.
+The PR-4 shims (``QWYCServer(device=...)``,
+``ops.score_and_decide(device=...)``, ``serve.py --device/--shards``)
+warned for a full cycle and are now retired: each raises with a pointed
+message naming the backend-registry replacement.  The supported
+spellings (``exec_backend=``, ``--backend``/``--backend-shards``,
+``mesh=``) keep working without warnings.
 
 All tests use LOCAL rngs so the session-rng stream stays stable."""
 
@@ -39,23 +42,38 @@ def _drain(srv, X):
     return srv.drain()
 
 
-def test_server_device_kwarg_warns_and_forwards():
+def test_server_device_kwarg_raises_pointed():
     X, F, m, score_fn = _linear()
-    with pytest.warns(DeprecationWarning, match="exec_backend"):
-        old = QWYCServer(
+    with pytest.raises(TypeError, match=r"exec_backend='device'"):
+        QWYCServer(
             m, score_fn, batch_size=128, backend="kernel", chunk_t=4,
             device=True,
         )
-    assert old.exec.name == "device" and old.device
-    new = QWYCServer(
-        m, score_fn, batch_size=128, backend="kernel", chunk_t=4,
-        exec_backend="device",
+    # device=False is equally retired (no silent no-op)
+    with pytest.raises(TypeError, match="removed"):
+        QWYCServer(m, score_fn, device=False)
+    # the replacement spelling works, warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        srv = QWYCServer(
+            m, score_fn, batch_size=128, backend="kernel", chunk_t=4,
+            exec_backend="device",
+        )
+    assert srv.exec.name == "device" and srv.device
+    ev = evaluate_cascade(m, F)
+    res = _drain(srv, X)
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
     )
-    assert _drain(old, X) == _drain(new, X)  # identical results
-    # device=False forwards to the host backend (and still warns)
-    with pytest.warns(DeprecationWarning):
-        host = QWYCServer(m, score_fn, device=False)
-    assert host.exec.name == "host"
+
+
+def test_server_device_scorer_factory_kwarg_raises_pointed():
+    _, _, m, score_fn = _linear()
+    with pytest.raises(TypeError, match="scorer="):
+        QWYCServer(
+            m, score_fn, exec_backend="device",
+            device_scorer_factory=lambda dplan: matrix_stage_scorer(dplan),
+        )
 
 
 def test_server_mesh_kwarg_routes_through_sharded_backend():
@@ -82,7 +100,7 @@ def test_server_mesh_kwarg_routes_through_sharded_backend():
     )
 
 
-def test_score_and_decide_device_kwarg_warns_and_forwards():
+def test_score_and_decide_device_kwarg_raises_pointed():
     rng = np.random.default_rng(51)
     F = make_scores(rng, n=200, t=16)
     m = fit_qwyc(F, beta=0.0, alpha=0.01)
@@ -91,53 +109,34 @@ def test_score_and_decide_device_kwarg_warns_and_forwards():
     scorer = matrix_stage_scorer(dplan)
     Fo = F[:, m.order].astype(np.float32)
     n = F.shape[0]
-    with pytest.warns(DeprecationWarning, match="backend="):
-        old = ops.score_and_decide(
-            scorer, dplan, n, block_n=64, device=True, x=Fo
+    with pytest.raises(TypeError, match="backend="):
+        ops.score_and_decide(scorer, dplan, n, block_n=64, device=True, x=Fo)
+    with pytest.raises(TypeError, match="removed"):
+        ops.score_and_decide(scorer, dplan, n, block_n=64, device=False, x=Fo)
+    # the replacement spelling works, warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = ops.score_and_decide(
+            scorer, dplan, n, block_n=64, backend="device", x=Fo
         )
-    new = ops.score_and_decide(
-        scorer, dplan, n, block_n=64, backend="device", x=Fo
-    )
-    np.testing.assert_array_equal(old.decisions, new.decisions)
-    np.testing.assert_array_equal(old.exit_step, new.exit_step)
-    assert old.scores_computed == new.scores_computed
-    # device=False forwards to the host path (and still warns)
-    prod_plan = CascadePlan.from_qwyc(m, chunk_t=4)
-    from repro.core.executor import matrix_producer
-
-    with pytest.warns(DeprecationWarning):
-        old_h = ops.score_and_decide(
-            matrix_producer(Fo), prod_plan, n, block_n=64, device=False
-        )
-    new_h = ops.score_and_decide(
-        matrix_producer(Fo), prod_plan, n, block_n=64, backend="host"
-    )
-    np.testing.assert_array_equal(old_h.decisions, new_h.decisions)
-    assert old_h.scores_computed == new_h.scores_computed
+    ev = evaluate_cascade(m, F)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
 
 
-def test_serve_cli_device_flag_warns_and_forwards():
+def test_serve_cli_device_flag_raises_pointed():
     ap = serve.build_parser()
-    with pytest.warns(DeprecationWarning, match="--backend device"):
-        backend, opts, policy = serve.resolve_backend_args(
-            ap.parse_args(["--device"])
-        )
-    assert (backend, opts, policy) == ("device", {}, "sorted-kernel")
+    with pytest.raises(ValueError, match="--backend device"):
+        serve.resolve_backend_args(ap.parse_args(["--device"]))
 
 
-def test_serve_cli_shards_flag_warns_and_forwards():
+def test_serve_cli_shards_flag_raises_pointed():
     ap = serve.build_parser()
-    with pytest.warns(DeprecationWarning, match="--backend sharded"):
-        backend, opts, policy = serve.resolve_backend_args(
-            ap.parse_args(["--shards", "2"])
-        )
-    assert backend == "sharded" and opts == {"shards": 2}
-    # --shards 1 was the old default meaning "not sharded": no forwarding
-    with pytest.warns(DeprecationWarning):
-        backend, opts, _ = serve.resolve_backend_args(
-            ap.parse_args(["--shards", "1"])
-        )
-    assert backend == "auto" and opts == {}
+    with pytest.raises(ValueError, match="--backend sharded"):
+        serve.resolve_backend_args(ap.parse_args(["--shards", "2"]))
+    # --shards 1 (the old "not sharded" default) is equally retired: the
+    # flag is gone, not reinterpreted
+    with pytest.raises(ValueError, match="removed"):
+        serve.resolve_backend_args(ap.parse_args(["--shards", "1"]))
 
 
 def test_serve_cli_policy_name_under_backend_warns_and_forwards():
@@ -161,7 +160,7 @@ def test_serve_cli_new_flags_do_not_warn():
     assert backend == "sharded"
     assert opts == {"shards": 4, "rebalance": True}
     # an explicit shard count under the default --backend auto forces the
-    # sharded backend (parity with what the deprecated --shards N did)
+    # sharded backend (parity with what the retired --shards N did)
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         backend, opts, _ = serve.resolve_backend_args(

@@ -8,8 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api.scorers import FunctionScorer
 from repro.core import evaluate_cascade, fit_qwyc
-from repro.kernels.device_executor import StageScorer
+from repro.kernels.device_executor import BoundScorer
 from repro.serving.engine import BACKENDS, QWYCServer
 
 
@@ -168,8 +169,8 @@ def test_constructor_validation(rng):
     with pytest.raises(ValueError):
         QWYCServer(m, score_fn, backend="warp-drive")
     with pytest.raises(ValueError):
-        # a device scorer factory on the host backend is a config error
-        QWYCServer(m, score_fn, device_scorer_factory=lambda dp: None)
+        # a protocol scorer on the host backend is a config error
+        QWYCServer(m, score_fn, scorer=FunctionScorer(lambda dp: None))
     with pytest.raises(ValueError):
         # device path with nothing to score with
         QWYCServer(m, exec_backend="device")
@@ -179,7 +180,7 @@ def test_constructor_validation(rng):
 
 
 def _linear_device_factory(Wo):
-    """Device StageScorer over the linear test 'ensemble': the stage slab
+    """Device BoundScorer over the linear test 'ensemble': the stage slab
     is a dynamic_slice'd matmul — fully traceable inside the loop body."""
     t, d = Wo.shape
     Wo_j = jnp.asarray(Wo, dtype=jnp.float32)
@@ -191,7 +192,7 @@ def _linear_device_factory(Wo):
             slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
             return jnp.take(x, rows, axis=0) @ slab.T
 
-        return StageScorer(
+        return BoundScorer(
             fn=fn,
             prepare=lambda xb: jnp.asarray(xb, jnp.float32),
             width=dplan.W,
@@ -213,7 +214,7 @@ def test_device_backend_parity(backend, mode, producer):
     ev = evaluate_cascade(m, F)
     kw = (
         {
-            "device_scorer_factory": _linear_device_factory(chunk_score_fn.Wo),
+            "scorer": FunctionScorer(_linear_device_factory(chunk_score_fn.Wo)),
             "chunk_score_fn": chunk_score_fn,
         }
         if producer == "device-scorer"

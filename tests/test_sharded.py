@@ -20,13 +20,14 @@ import numpy as np
 import pytest
 
 from conftest import make_scores
+from repro.api.scorers import FunctionScorer
 from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
 from repro.core.executor import ChunkedExecutor, matrix_producer
 from repro.kernels import ops
 from repro.kernels.device_executor import (
     DeviceExecutor,
     DevicePlan,
-    StageScorer,
+    BoundScorer,
     matrix_stage_scorer,
     tree_stage_scorer,
 )
@@ -240,7 +241,7 @@ def test_server_mesh_parity(shards, mode):
             slab = jax.lax.dynamic_slice(Wp, (t0, 0), (dplan.W, d))
             return jnp.take(x, rows, axis=0) @ slab.T
 
-        return StageScorer(
+        return BoundScorer(
             fn=fn, prepare=lambda xb: jnp.asarray(xb, jnp.float32),
             width=dplan.W,
         )
@@ -248,7 +249,7 @@ def test_server_mesh_parity(shards, mode):
     mesh = make_serving_mesh(shards)
     srv = QWYCServer(
         m, batch_size=48, backend="sorted-kernel", chunk_t=4, mesh=mesh,
-        device_scorer_factory=factory, audit_full_scores=False,
+        scorer=FunctionScorer(factory), audit_full_scores=False,
     )
     assert srv.device  # mesh implies the device path
     assert srv.flush_size == 48 * shards
