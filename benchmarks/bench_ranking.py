@@ -1,0 +1,272 @@
+"""Ranking bench: query-level early exit over ragged document groups
+(DESIGN.md §12, EXPERIMENTS.md §Ranking protocol).
+
+A seeded MSLR-style synthetic — ragged query groups with graded
+relevance and per-model document scores correlated to it — is fit with
+``fit_grouped`` (top-k stability thresholds over ``fit_qwyc``'s greedy
+order) and served through every grouped execution path.  Per
+(alpha, backend/shards) cell the bench records:
+
+* **scores paid** — the group-quantized serving bill vs the full
+  ensemble (``n_docs x T``).  The headline gate: strictly below full in
+  EVERY cell (asserted).
+* **NDCG@k** — ranking quality of the early-exit verdicts vs the full
+  cascade's, on the held-out groups.
+* **parity** — verdicts, exit stages and margins bit-identical per
+  group to the host ``run_grouped_host`` oracle; at margin-infinity the
+  verdicts equal ``full_cascade_topk`` exactly (asserted).
+* **traces** — ONE compiled trace per bucket shape per executor
+  (asserted): the length-bucketed admission layer pads every launch to
+  a ladder width, so shapes cannot proliferate.
+
+Everything is fixture-seeded (``RANKING_SEED``): rows are deterministic,
+so they merge into the repo-root ``BENCH_executor.json`` under the
+``"ranking"`` key validated by ``benchmarks/validate_schema.py``.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src:. python -m benchmarks.bench_ranking [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_rows
+from repro.ranking import (
+    fit_grouped,
+    full_cascade_topk,
+    ndcg_at_k,
+    run_grouped_host,
+)
+from repro.ranking.bucketing import bucket_layout, group_offsets, pack_by_bucket
+from repro.ranking.plan import MARGIN_INF
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+RANKING_SEED = 2031
+ALPHAS = (0.02, 0.05, 0.1)
+SHARDS = (1, 2, 4)
+K = 5
+CHUNK_T = 6
+#: fine-grained lane ladder + small billing block: group-quantized
+#: billing must round UP honestly yet still undercut the full ensemble
+BUCKETS = (4, 8, 12, 16, 24, 32)
+BLOCK_N = 8
+
+
+def ranking_fixture(quick: bool = False):
+    """(scores, sizes, relevance) for the seeded ragged synthetic — the
+    ONE fixture the bench, the ranking tests and EXPERIMENTS.md all
+    reference.  Each document carries a heavy-tailed latent quality
+    (few clearly-relevant documents per query, like real LTR data, so
+    the top-k separates early); per-model scores are that quality plus
+    noise, and the graded relevance label is the clipped quality floor.
+    Early partial sums therefore predict the final order, which is what
+    the top-k margin criterion exploits."""
+    rng = np.random.default_rng(RANKING_SEED)
+    G = 64 if quick else 192
+    T = 24 if quick else 48
+    sizes = rng.integers(1, 33, size=G).astype(np.int64)
+    N = int(sizes.sum())
+    quality = rng.exponential(1.0, size=N)
+    F = rng.normal(size=(N, T)) * 0.1 + quality[:, None]
+    # labels are a NOISY view of quality (separate stream so the score
+    # sample stays fixed): the ensemble — and so the full cascade —
+    # cannot reach NDCG 1.0, which keeps the fit-vs-full NDCG
+    # comparison informative instead of saturated
+    lab = np.random.default_rng(RANKING_SEED + 1)
+    rel = np.clip(np.floor(quality + lab.normal(size=N) * 0.4), 0, 2).astype(
+        np.int64
+    )
+    return np.asarray(F, dtype=np.float64), sizes, rel
+
+
+def _run_cell(ex, ordered, sizes, gp, host, full, streaming=False):
+    """Drive one executor over every bucket shape; return the cell's
+    bill after asserting bit-parity (fitted eps AND margin-infinity)
+    against the host oracle per group."""
+    offsets = group_offsets(sizes)
+    packs = pack_by_bucket(sizes, gp.buckets)
+    cap = max(len(g) for g in packs.values())
+    eps_inf = np.full(gp.S, MARGIN_INF, dtype=np.float32)
+    paid = 0
+    for b, gidx in sorted(packs.items()):
+        rows, valid = bucket_layout(sizes[gidx], b, offsets=offsets[gidx])
+        if streaming:
+            arr = (np.arange(len(gidx)) // 4).astype(np.int32)
+            res = ex.run_stream_grouped(
+                ordered, rows, valid, len(gidx), gp.eps_g, gp.k,
+                arrivals=arr, capacity_groups=cap,
+            )
+            res_inf = ex.run_stream_grouped(
+                ordered, rows, valid, len(gidx), eps_inf, gp.k,
+                arrivals=arr, capacity_groups=cap,
+            )
+        else:
+            res = ex.run_grouped(
+                ordered, rows, valid, len(gidx), gp.eps_g, gp.k,
+                capacity_groups=cap,
+            )
+            res_inf = ex.run_grouped(
+                ordered, rows, valid, len(gidx), eps_inf, gp.k,
+                capacity_groups=cap,
+            )
+        # parity gate before any accounting: bit-identical per group to
+        # the host oracle replaying the same f32 add order
+        assert np.array_equal(res.verdicts, host.verdicts[gidx])
+        assert np.array_equal(res.exit_stage, host.exit_stage[gidx])
+        assert np.array_equal(res.margin, host.margin[gidx])
+        # margin-infinity IS the full ensemble: verdicts must equal the
+        # eager top-k and no group may exit early
+        assert np.array_equal(res_inf.verdicts, full[gidx])
+        assert np.all(np.asarray(res_inf.exit_stage) == gp.S)
+        paid += int(res.scores_computed)
+    assert ex.traces == len(packs), (ex.traces, len(packs))
+    return paid, len(packs)
+
+
+def run(quick: bool = False, alphas=ALPHAS, shards_list=SHARDS) -> list[dict]:
+    from repro.api.registry import get_backend
+    from repro.kernels.device_executor import DevicePlan, matrix_stage_scorer
+
+    n_dev = len(jax.devices())
+    usable = [s for s in shards_list if s <= n_dev]
+    skipped = [s for s in shards_list if s > n_dev]
+    if skipped:
+        print(
+            f"[bench_ranking] skipping shards {skipped}: only {n_dev} XLA "
+            "device(s) (XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    F, sizes, rel = ranking_fixture(quick)
+    half = sizes.size // 2
+    sizes_cal, sizes_te = sizes[:half], sizes[half:]
+    n_cal = int(sizes_cal.sum())
+    F_cal, F_te = F[:n_cal], F[n_cal:]
+    rel_te = rel[n_cal:]
+    rows_out: list[dict] = []
+    for alpha in alphas:
+        gp = fit_grouped(
+            F_cal, sizes_cal, K, alpha=alpha, chunk_t=CHUNK_T, buckets=BUCKETS
+        )
+        host = run_grouped_host(gp, F_te, sizes_te)
+        full = full_cascade_topk(F_te, sizes_te, K, order=gp.plan.order)
+        host_inf = run_grouped_host(gp.with_margin_inf(), F_te, sizes_te)
+        assert np.array_equal(host_inf.verdicts, full)
+        scores_full = int(host.scores_possible)
+        ndcg_fit = ndcg_at_k(rel_te, host.verdicts, sizes_te, K)
+        ndcg_full = ndcg_at_k(rel_te, full, sizes_te, K)
+        exit_rate = float(np.mean(host.exit_stage < gp.S))
+        mean_exit = float(np.mean(host.exit_stage))
+        ordered = np.ascontiguousarray(
+            F_te.astype(np.float32)[:, gp.plan.order]
+        )
+        dplan = DevicePlan.from_plan(gp.plan)
+        cells = [("device", s, False) for s in usable]
+        cells.append(("streaming", 1, True))
+        for kind, shards, streaming in cells:
+            if kind == "device" and shards > 1:
+                backend, opts = "sharded", {"shards": shards}
+            else:
+                backend, opts = "device", {}
+            ex = get_backend(backend).make_executor(
+                dplan, scorer=matrix_stage_scorer(dplan), block_n=BLOCK_N,
+                megakernel=False, **opts,
+            )
+            paid, n_buckets = _run_cell(
+                ex, ordered, sizes_te, gp, host, full, streaming=streaming
+            )
+            assert paid < scores_full, (
+                f"grouped bill not below full ensemble at alpha={alpha} "
+                f"{kind}/{shards}: {paid} >= {scores_full}"
+            )
+            rows_out.append(
+                {
+                    "experiment": "ranking_ragged",
+                    "alpha": alpha,
+                    "backend": kind if streaming else backend,
+                    "shards": shards,
+                    "k": K,
+                    "n_queries": int(sizes_te.size),
+                    "n_docs": int(sizes_te.sum()),
+                    "T": int(gp.T),
+                    "chunk_t": CHUNK_T,
+                    "seed": RANKING_SEED,
+                    "buckets": [int(b) for b in gp.buckets],
+                    "exit_rate": exit_rate,
+                    "mean_exit_stage": mean_exit,
+                    "n_stages": int(gp.S),
+                    "scores_paid": paid,
+                    "scores_full": scores_full,
+                    "compute_fraction": paid / scores_full,
+                    "paid_below_full": True,
+                    "ndcg_fit": float(ndcg_fit),
+                    "ndcg_full": float(ndcg_full),
+                    "ndcg_drop": float(ndcg_full - ndcg_fit),
+                    "train_disagreement": float(gp.train_disagreement),
+                    "parity_with_host_oracle": True,
+                    "margin_inf_matches_full": True,
+                    "traces": int(ex.traces),
+                    "bucket_shapes": n_buckets,
+                    "one_trace_per_bucket_shape": True,
+                }
+            )
+    save_rows("ranking_synth", rows_out)
+    _merge_root_summary(rows_out)
+    return rows_out
+
+
+def _merge_root_summary(rows: list[dict]) -> None:
+    """Add/replace the ``"ranking"`` section of BENCH_executor.json (the
+    device-executor bench owns the rest of the file; this section is
+    preserved across its rewrites like ``"neural"``/``"chaos"``)."""
+    path = REPO_ROOT / "BENCH_executor.json"
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["ranking"] = {
+        "protocol": "EXPERIMENTS.md §Ranking protocol",
+        "fixture": (
+            "seeded ragged MSLR-style synthetic "
+            "(benchmarks.bench_ranking.ranking_fixture)"
+        ),
+        "seed": RANKING_SEED,
+        "rows": rows,
+        "headline": {
+            "paid_below_full_all_cells": bool(
+                all(r["scores_paid"] < r["scores_full"] for r in rows)
+            ),
+            "parity_with_host_oracle": bool(
+                all(r["parity_with_host_oracle"] for r in rows)
+            ),
+            "margin_inf_matches_full": bool(
+                all(r["margin_inf_matches_full"] for r in rows)
+            ),
+            "one_trace_per_bucket_shape": bool(
+                all(r["one_trace_per_bucket_shape"] for r in rows)
+            ),
+            "best_compute_fraction": min(
+                (r["compute_fraction"] for r in rows), default=None
+            ),
+            "ndcg_drop_max": max((r["ndcg_drop"] for r in rows), default=None),
+            "max_shards_measured": max((r["shards"] for r in rows), default=0),
+        },
+    }
+    path.write_text(json.dumps(doc, indent=1))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(
+            f"alpha={r['alpha']:<5} backend={r['backend']:<10} "
+            f"shards={r['shards']} scores {r['scores_paid']}/"
+            f"{r['scores_full']} ({r['compute_fraction']:.0%}) "
+            f"exit_rate={r['exit_rate']:.2f} "
+            f"ndcg {r['ndcg_fit']:.4f} vs full {r['ndcg_full']:.4f}"
+        )

@@ -314,6 +314,88 @@ def collect_counters() -> dict[str, int]:
         c[f"{name}.scores"] = int(sres_s.scores_computed)
         c[f"{name}.steps"] = int(sres_s.steps_run)
         c[f"{name}.traces"] = int(dexs.traces)
+
+    # grouped ranking (DESIGN.md §12): fixed-seed ragged query groups
+    # through the host oracle, the grouped device program, the sharded
+    # grouped program and the grouped admission ring.  Group-quantized
+    # bills, stage/step counts and trace counts — a purely ADDITIVE
+    # counter family: nothing above consumes these fixtures, so the
+    # pre-existing counters cannot move
+    from repro.ranking import fit_grouped, run_grouped_host
+    from repro.ranking.bucketing import (
+        bucket_layout,
+        group_offsets,
+        pack_by_bucket,
+    )
+
+    rng4 = np.random.default_rng(2032)
+    Gq, Tq = 24, 24
+    sizes_q = rng4.integers(1, 17, size=Gq).astype(np.int64)
+    Nq = int(sizes_q.sum())
+    qual = rng4.exponential(1.0, size=Nq)
+    Fr = rng4.normal(size=(Nq, Tq)) * 0.1 + qual[:, None]
+    gp = fit_grouped(Fr, sizes_q, 3, alpha=0.05, chunk_t=6)
+    ghost = run_grouped_host(gp, Fr, sizes_q)
+    c["ranking.host.scores"] = int(ghost.scores_computed)
+    c["ranking.host.stages"] = len(ghost.chunk_stats)
+
+    gdplan = DevicePlan.from_plan(gp.plan)
+    Ford = np.ascontiguousarray(Fr.astype(np.float32)[:, gp.plan.order])
+    goff = group_offsets(sizes_q)
+    packs = pack_by_bucket(sizes_q, gp.buckets)
+    capq = max(len(g) for g in packs.values())
+
+    def _grouped_bill(ex, stream=False):
+        paid = stages = 0
+        for b, gidx in sorted(packs.items()):
+            rows_b, valid_b = bucket_layout(
+                sizes_q[gidx], b, offsets=goff[gidx]
+            )
+            if stream:
+                r = ex.run_stream_grouped(
+                    Ford, rows_b, valid_b, len(gidx), gp.eps_g, gp.k,
+                    capacity_groups=capq,
+                )
+                stages += int(r.steps_run)
+            else:
+                r = ex.run_grouped(
+                    Ford, rows_b, valid_b, len(gidx), gp.eps_g, gp.k,
+                    capacity_groups=capq,
+                )
+                stages += len(r.chunk_stats)
+            assert np.array_equal(r.verdicts, ghost.verdicts[gidx])
+            assert np.array_equal(r.exit_stage, ghost.exit_stage[gidx])
+            paid += int(r.scores_computed)
+        return paid, stages
+
+    gk = DEVICE.billing_key()
+    gex = DEVICE.make_executor(
+        gdplan, scorer=matrix_stage_scorer(gdplan), block_n=32,
+        megakernel=False,
+    )
+    paid_d, stages_d = _grouped_bill(gex)
+    c[f"ranking.{gk}.scores"] = paid_d
+    c[f"ranking.{gk}.stages"] = stages_d
+    c[f"ranking.{gk}.traces"] = int(gex.traces)
+
+    skq = SHARDED.billing_key(shards=4)
+    sxg = SHARDED.make_executor(
+        gdplan, scorer=matrix_stage_scorer(gdplan), shards=4, block_n=32,
+        megakernel=False,
+    )
+    paid_s, stages_s = _grouped_bill(sxg)
+    c[f"ranking.{skq}.scores"] = paid_s
+    c[f"ranking.{skq}.stages"] = stages_s
+    c[f"ranking.{skq}.traces"] = int(sxg.traces)
+
+    gex_s = DEVICE.make_executor(
+        gdplan, scorer=matrix_stage_scorer(gdplan), block_n=32,
+        megakernel=False,
+    )
+    paid_t, steps_t = _grouped_bill(gex_s, stream=True)
+    c[f"ranking.stream.{gk}.scores"] = paid_t
+    c[f"ranking.stream.{gk}.steps"] = steps_t
+    c[f"ranking.stream.{gk}.traces"] = int(gex_s.traces)
     return c
 
 

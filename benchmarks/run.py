@@ -349,6 +349,40 @@ def main() -> None:
 
     _section("neural_depth", sec_neural)
 
+    # Ranking: query-level early exit over ragged document groups
+    # (DESIGN.md §12, EXPERIMENTS.md §Ranking protocol) — grouped device
+    # launches, so availability and the SKIPPED reason come from the
+    # device backend; the merge into BENCH_executor.json is re-applied
+    # even on cache hits (idempotent) like the chaos section
+    def sec_ranking():
+        rk_ok, rk_why = get_backend("device").available()
+        if not rk_ok:
+            print(f"ranking_ragged,,SKIPPED: {rk_why}")
+            return
+        from benchmarks import bench_ranking
+
+        try:
+            rows = _cached(
+                "ranking_synth",
+                lambda: bench_ranking.run(quick=args.quick),
+                args.recompute,
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"ranking_ragged,,SKIPPED ({type(e).__name__}: {e})")
+            rows = []
+        if rows:
+            bench_ranking._merge_root_summary(rows)
+            best = min(rows, key=lambda r: r["compute_fraction"])
+            print(
+                f"ranking_ragged,,scores {best['scores_paid']}/"
+                f"{best['scores_full']} ({best['compute_fraction']:.0%} of "
+                f"full ensemble) at alpha={best['alpha']} ndcg drop "
+                f"{best['ndcg_drop']:.4f} (parity+one-trace-per-bucket: "
+                f"{all(r['parity_with_host_oracle'] and r['one_trace_per_bucket_shape'] for r in rows)})"
+            )
+
+    _section("ranking_ragged", sec_ranking)
+
     # Chaos: fault injection vs the guarded serving stack (DESIGN.md
     # §10, EXPERIMENTS.md §Chaos protocol) — deterministic seeds, so the
     # rows are stable run to run; the merge into BENCH_executor.json is

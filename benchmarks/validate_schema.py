@@ -15,6 +15,13 @@ dependency-free so the repo's no-new-deps floor holds): ``type``
 gain").  Unknown keywords are ignored, like a real validator would with
 unknown annotations.
 
+The ROOT object is additionally CLOSED: a top-level section of the
+document that the schema's ``properties`` does not declare is a
+violation.  New bench sections (``"neural"``, ``"ranking"``, ...) must
+be registered in ``bench_schema.json`` in the same change that starts
+emitting them — an unregistered section would otherwise ship with no
+shape lock at all.
+
     python -m benchmarks.validate_schema BENCH_executor.json \
         benchmarks/results/bench_schema.json
 """
@@ -65,6 +72,15 @@ def validate(doc, schema: dict, path: str = "$") -> list[str]:
         for key, sub in schema.get("properties", {}).items():
             if key in doc:
                 errors.extend(validate(doc[key], sub, f"{path}.{key}"))
+        if path == "$" and "properties" in schema:
+            # the root is closed: every top-level section must be
+            # schema-registered or the artifact ships shape-unlocked
+            for key in doc:
+                if key not in schema["properties"]:
+                    errors.append(
+                        f"{path}: unknown top-level section {key!r} "
+                        "(register it in the schema's properties)"
+                    )
     if isinstance(doc, list):
         if len(doc) < schema.get("minItems", 0):
             errors.append(

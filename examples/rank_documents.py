@@ -1,0 +1,96 @@
+"""Rank documents with a query-level early-exit cascade (DESIGN.md §12).
+
+Learning-to-rank serving evaluates an ensemble over every candidate
+document of every query — but a query can stop paying for more base
+models as soon as its top-k ORDER is stable.  This example builds a
+ragged synthetic corpus (queries with 1-32 candidate documents, graded
+relevance), fits a grouped cascade through the ``repro.api`` front door
+(``fit(groups=...)`` — the top-k stability thresholds of Lucchese /
+Busolin style cascades over QWYC's greedy order), and serves ranked
+verdicts three ways: one-shot ``rank``, a bucketed batch server, and
+the streaming admission ring.  The early-exit rankings are compared
+against the full ensemble's for NDCG and cost.
+
+    PYTHONPATH=src python examples/rank_documents.py          # full size
+    PYTHONPATH=src python examples/rank_documents.py --quick  # CI smoke
+"""
+
+import argparse
+
+import numpy as np
+
+from repro import api
+from repro.ranking import full_cascade_topk, ndcg_at_k
+from repro.ranking.bucketing import group_offsets
+
+
+def make_corpus(seed, n_queries, T):
+    """Ragged queries: each document has a heavy-tailed latent quality;
+    per-model scores are quality + noise, relevance is a noisy grade."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 33, size=n_queries).astype(np.int64)
+    N = int(sizes.sum())
+    quality = rng.exponential(1.0, size=N)
+    F = rng.normal(size=(N, T)) * 0.1 + quality[:, None]
+    rel = np.clip(np.floor(quality + rng.normal(size=N) * 0.4), 0, 2)
+    return F, sizes, rel.astype(np.int64)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    G, T, k = (48, 24, 3) if args.quick else (160, 48, 10)
+
+    F_train, sizes_train, _ = make_corpus(7, G, T)
+    F_test, sizes_test, rel_test = make_corpus(8, G, T)
+    print(
+        f"corpus: {G} train / {G} test queries, "
+        f"{int(sizes_test.sum())} test documents, T={T} base models"
+    )
+
+    # fit the grouped cascade: greedy model order + per-stage top-k
+    # stability thresholds calibrated to a 5% disagreement budget
+    fitted = api.fit(F_train, groups=sizes_train, topk=k, alpha=0.05, chunk_t=6)
+    gp = fitted.grouped
+    print(
+        f"fit: S={gp.S} stages, eps_g={np.round(gp.eps_g, 2)}, "
+        f"train top-{k} disagreement {gp.train_disagreement:.3f} <= 0.05"
+    )
+
+    compiled = fitted.compile("device")
+    verdicts = compiled.rank(F_test, groups=sizes_test)
+    stats = compiled.last_rank_stats
+    print(
+        f"rank: paid {stats.scores_computed}/{stats.scores_possible} "
+        f"scores ({stats.compute_fraction:.0%} of the full ensemble), "
+        f"mean exit stage {stats.mean_exit_stage:.2f}/{gp.S}"
+    )
+
+    # quality vs the full cascade: rebase local verdicts to global rows
+    offsets = group_offsets(sizes_test)
+    glob = np.full((G, k), -1, dtype=np.int64)
+    for i, v in enumerate(verdicts):
+        r = np.asarray(v["ranking"], dtype=np.int64)
+        glob[i, : r.size] = offsets[i] + r
+    full = full_cascade_topk(F_test, sizes_test, k, order=gp.plan.order)
+    print(
+        f"NDCG@{k}: early-exit {ndcg_at_k(rel_test, glob, sizes_test, k):.4f} "
+        f"vs full ensemble {ndcg_at_k(rel_test, full, sizes_test, k):.4f}"
+    )
+
+    # streaming: freed group slots refill mid-cascade; skip-ahead
+    # admission lets small queries ride along past a blocked big one
+    ranker = compiled.serve(streaming=True, batch_size=G)
+    for i in range(G):
+        ranker.submit(F_test[offsets[i] : offsets[i + 1]], arrival=float(i // 8))
+    out = ranker.drain()
+    assert [o["ranking"] for o in out] == [v["ranking"] for v in verdicts]
+    print(
+        f"streaming: {ranker.stats.n_waves} wave(s), verdicts identical "
+        "to one-shot rank ✓"
+    )
+
+
+if __name__ == "__main__":
+    main()

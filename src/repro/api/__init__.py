@@ -36,6 +36,19 @@ protocol and every stage producer behind one ``StageScorer`` protocol:
         stream.submit(row, arrival=float(step))
     outputs = stream.drain()
 
+Ranking cascades (DESIGN.md §12) decide per QUERY instead of per row:
+pass the ragged per-query document counts to ``fit`` and the cascade
+exits each query's group as a unit once its top-k order is stable —
+``rank`` returns ranked verdicts, ``serve`` a ``GroupedRankServer``:
+
+    # sizes[i] = number of candidate documents of query i; the score
+    # matrix F stacks every query's documents contiguously
+    fitted = api.fit(F_train, groups=sizes_train, topk=10, alpha=0.01)
+    compiled = fitted.compile("device")          # needs the `grouped` capability
+    verdicts = compiled.rank(F_test, groups=sizes_test)
+    verdicts[0]["ranking"]                        # top-k local doc positions
+    ranker = compiled.serve(batch_size=64, streaming=True)  # bucketed admission
+
 Model-backed cascades (DESIGN.md §11) ride the same three calls: a
 ``StageScorer`` turns any staged evaluator — matrix columns, oblivious
 trees, lattices, or the per-block exit heads of a transformer — into
@@ -53,7 +66,8 @@ multi-host, new accelerators) plug in without touching any caller.
 Scorers live in their own registry (``api.scorers``): built-ins under
 ``api.scorer_names()``, extensions via ``api.register_scorer``.
 
-Architecture: DESIGN.md §7 (backends), §11 (stage scorers).  ``from
+Architecture: DESIGN.md §7 (backends), §11 (stage scorers), §12
+(grouped ranking).  ``from
 repro import api`` is the documented import path; everything in
 ``__all__`` below is the stable surface.
 """

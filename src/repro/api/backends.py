@@ -85,6 +85,9 @@ class BackendCapabilities:
     ``streaming``: the executor has ``run_stream`` — a device-resident
     admission ring refills freed survivor slots mid-cascade, so a
     ``StreamingServer`` can continuously batch onto it (DESIGN.md §8).
+    ``grouped``: the executor has ``run_grouped`` — the group-level
+    decide path for ragged ranking queries (DESIGN.md §12), consumed by
+    ``repro.ranking.GroupedRankServer`` and ``api.fit(groups=...)``.
     """
 
     on_device: bool
@@ -93,6 +96,7 @@ class BackendCapabilities:
     data_parallel: bool = False
     supports_rebalance: bool = False
     streaming: bool = False
+    grouped: bool = False
 
 
 @runtime_checkable
@@ -148,7 +152,7 @@ class HostBackend:
 
     name = "host"
     capabilities = BackendCapabilities(
-        on_device=False, min_devices=0, trace_cached=False,
+        on_device=False, min_devices=0, trace_cached=False, grouped=True,
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
@@ -187,6 +191,7 @@ class DeviceBackend:
     name = "device"
     capabilities = BackendCapabilities(
         on_device=True, min_devices=1, trace_cached=True, streaming=True,
+        grouped=True,
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
@@ -235,6 +240,7 @@ class ShardedBackend:
     capabilities = BackendCapabilities(
         on_device=True, min_devices=2, trace_cached=True,
         data_parallel=True, supports_rebalance=True, streaming=True,
+        grouped=True,
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:

@@ -86,6 +86,9 @@ def fit(
     X: np.ndarray | None = None,
     y: np.ndarray | None = None,
     config: FitConfig | dict | None = None,
+    *,
+    groups=None,
+    topk: int | None = None,
     **overrides,
 ) -> "FittedCascade":
     """Jointly optimize evaluation order + early-exit thresholds.
@@ -107,6 +110,15 @@ def fit(
         iff ``ensemble`` is callable or a ``StageScorer``.
       y: unused by QWYC (calibration is label-free — the objective is
         agreement with the full ensemble); accepted for pipeline symmetry.
+      groups: per-QUERY document counts ``(G,)`` for ranking ensembles —
+        calibration rows become ragged query groups (contiguous in the
+        score matrix) and the fit additionally calibrates GROUP-level
+        margin thresholds (``repro.ranking.fit_grouped``, DESIGN.md §12):
+        a query exits as a unit once its top-``topk`` ranking is stable.
+        The result then supports ``compile(...).rank(...)`` and a grouped
+        ``serve()``.
+      topk: ranking depth ``k`` for grouped calibration (default 10;
+        requires ``groups=``).
       config / **overrides: a ``FitConfig`` (or dict), with keyword
         overrides applied on top — ``fit(F, beta=0.5, alpha=0.01)``.
 
@@ -139,6 +151,29 @@ def fit(
         F = np.asarray(ensemble)
     if F.ndim != 2:
         raise ValueError(f"calibration scores must be (N, T), got {F.shape}")
+    if groups is not None:
+        from repro.ranking import fit_grouped
+
+        sizes = np.asarray(groups, dtype=np.int64)
+        grouped = fit_grouped(
+            F,
+            sizes,
+            10 if topk is None else int(topk),
+            costs=cfg.costs,
+            alpha=cfg.alpha,
+            beta=cfg.beta,
+            mode=cfg.mode,
+            optimize_order=cfg.optimize_order,
+            order=cfg.order,
+            chunk_t=cfg.chunk_t,
+            verbose=cfg.verbose,
+        )
+        return FittedCascade(
+            model=grouped.model, config=cfg, score_fn=score_fn,
+            calibration_scores=F, scorer=scorer, grouped=grouped,
+        )
+    if topk is not None:
+        raise ValueError("topk= requires groups= (per-query document counts)")
     model = fit_qwyc(
         F,
         costs=cfg.costs,
@@ -175,6 +210,10 @@ class FittedCascade:
     #: the StageScorer template fit() calibrated (model-backed fit);
     #: compile()/serve() bind it by default
     scorer: StageScorer | None = None
+    #: the GroupedPlan from fit(groups=...) — per-stage GROUP margin
+    #: thresholds for ranking cascades; enables compile(...).rank() and
+    #: the grouped serve() (None for row-level fits)
+    grouped: Any | None = None
 
     @property
     def T(self) -> int:
@@ -292,6 +331,12 @@ class FittedCascade:
             raise ValueError(
                 f"mesh/shards/rebalance require a data-parallel backend "
                 f"(backend is {b.name!r})"
+            )
+        if self.grouped is not None and not getattr(caps, "grouped", False):
+            raise ValueError(
+                f"fit(groups=...) needs a backend with the grouped "
+                f"capability; backend {b.name!r} has none (the built-in "
+                "'host'/'device'/'sharded' rungs all do)"
             )
         return CompiledCascade(
             fitted=self,
@@ -537,6 +582,141 @@ class CompiledCascade:
         )
         return ex.run(n, row_order=row_order)
 
+    def _grouped_plan(self):
+        """The fit-time ``GroupedPlan``, validated against this compile's
+        stage layout (a ``compile(chunk_t=...)`` override would desync
+        the per-stage thresholds from the executor's stages)."""
+        gp = self.fitted.grouped
+        if gp is None:
+            raise ValueError(
+                "no grouped plan: calibrate with fit(..., groups=sizes, "
+                "topk=k) to rank ragged query groups"
+            )
+        if list(self.plan.stages) != list(gp.plan.stages):
+            raise ValueError(
+                f"compile(chunk_t=...) changed the stage layout "
+                f"({len(self.plan.stages)} stages vs the grouped plan's "
+                f"{gp.S}); compile with chunk_t={gp.plan.chunk_t} (the "
+                "fit-time chunking the group thresholds were calibrated on)"
+            )
+        if self.scorer_template is not None:
+            raise ValueError(
+                "grouped ranking scores through the matrix scorer; drop "
+                "compile(scorer=...) for rank()/grouped serve()"
+            )
+        return gp
+
+    def rank(
+        self,
+        scores: np.ndarray | None = None,
+        *,
+        x=None,
+        groups=None,
+        capacity_groups: int | None = None,
+        margin_inf: bool = False,
+    ) -> list[dict]:
+        """Rank one batch of ragged query groups through the grouped
+        cascade (requires ``fit(..., groups=)``).
+
+        ``scores`` is the flat ``(N, T)`` per-document score matrix in
+        ORIGINAL model order (or pass ``x`` to score through the
+        ``fit``-captured ``score_fn``); ``groups`` the per-query document
+        counts for THIS batch (documents of each query contiguous).
+        Returns one dict per query, in order: ``"ranking"`` (top-k LOCAL
+        document positions), ``"exit_stage"`` (1-based), ``"margin"``.
+        ``margin_inf=True`` forces the full cascade (the parity oracle
+        configuration).  Per-flush billing lands on ``last_rank_stats``.
+        """
+        from repro.ranking import GroupedRankServer, group_offsets
+
+        gp = self._grouped_plan()
+        if groups is None:
+            raise ValueError(
+                "rank() needs groups= (per-query document counts for this "
+                "batch)"
+            )
+        if scores is None:
+            if x is None:
+                raise ValueError("rank() needs scores= or x=")
+            if self.fitted.score_fn is None:
+                raise ValueError(
+                    "rank(x=...) needs a score_fn captured by fit()"
+                )
+            scores = self.fitted.score_fn(x)
+        F = np.asarray(scores)
+        sizes = np.asarray(groups, dtype=np.int64)
+        if F.ndim != 2 or F.shape[1] != self.fitted.T:
+            raise ValueError(
+                f"scores must be (N, {self.fitted.T}) in original model "
+                f"order, got {F.shape}"
+            )
+        if sizes.ndim != 1 or int(sizes.sum()) != F.shape[0]:
+            raise ValueError(
+                f"group sizes sum to {sizes.sum()} but scores have "
+                f"{F.shape[0]} rows"
+            )
+        server = GroupedRankServer(
+            gp,
+            executor=(
+                self._executor
+                if self.backend.capabilities.on_device
+                else None
+            ),
+            batch_groups=max(int(sizes.size), 1),
+            capacity_groups=capacity_groups,
+            margin_inf=margin_inf,
+        )
+        offsets = group_offsets(sizes)
+        for i in range(sizes.size):
+            server.submit(F[offsets[i] : offsets[i + 1]])
+        out = server.drain()
+        self.last_rank_stats = server.stats
+        return out
+
+    def _serve_grouped(
+        self,
+        *,
+        score_fn=None,
+        batch_size: int = 32,
+        policy: str = "sorted-kernel",
+        streaming: bool = False,
+        **server_kw,
+    ):
+        """Grouped serving: a ``GroupedRankServer`` on this backend.
+
+        ``batch_size`` counts QUERIES per flush; ``policy`` becomes the
+        streaming admission policy (the row-level default maps to
+        ``"skip-ahead"``; pass ``"wait"`` for strict arrival order).
+        """
+        from repro.ranking import GroupedRankServer
+
+        gp = self._grouped_plan()
+        executor = (
+            self._executor if self.backend.capabilities.on_device else None
+        )
+        if streaming:
+            if executor is None:
+                raise ValueError(
+                    "grouped streaming needs an on-device backend with the "
+                    "grouped admission ring; compile onto 'device'"
+                )
+            if not hasattr(executor, "run_stream_grouped"):
+                raise ValueError(
+                    f"backend {self.backend.name!r} has no grouped "
+                    "streaming path; compile onto 'device'"
+                )
+        return GroupedRankServer(
+            gp,
+            score_fn=(
+                self.fitted.score_fn if score_fn is None else score_fn
+            ),
+            executor=executor,
+            batch_groups=batch_size,
+            streaming=streaming,
+            policy="skip-ahead" if policy == "sorted-kernel" else policy,
+            **server_kw,
+        )
+
     def serve(
         self,
         *,
@@ -568,7 +748,20 @@ class CompiledCascade:
         ``max_wait`` the partial-admission deadline in stage steps.
         Streaming admission replaces the sorting policy, so ``policy``
         must stay the default (it is ignored in favor of ``kernel``).
+
+        A grouped fit (``fit(..., groups=)``) serves QUERIES, not rows:
+        the call routes to ``_serve_grouped`` and returns a
+        ``repro.ranking.GroupedRankServer`` (``batch_size`` counts
+        queries per flush; ``policy`` becomes the admission policy).
         """
+        if self.fitted.grouped is not None:
+            return self._serve_grouped(
+                score_fn=score_fn,
+                batch_size=batch_size,
+                policy=policy,
+                streaming=streaming,
+                **server_kw,
+            )
         from repro.serving.engine import QWYCServer, StreamingServer
 
         opts: dict = {}

@@ -33,9 +33,13 @@ DEFAULT_CHUNK_T = 8
 __all__ = [
     "cascade_pallas",
     "cascade_chunk_pallas",
+    "cascade_group_pallas",
     "cascade_lane_pallas",
     "threshold_step",
 ]
+
+#: group-decide block: rows of the (G, B) group grid per Pallas program
+DEFAULT_BLOCK_G = 8
 
 
 def threshold_step(g, active, decided_pos, exit_step, f_t, ep, en, step_1b):
@@ -413,3 +417,121 @@ def cascade_chunk_pallas(
         interpret=interpret,
     )(g0, chunk_scores, eps_pos2, eps_neg2, valid)
     return g[:m], active[:m], dec[:m], exit_step[:m]
+
+
+def _cascade_group_kernel(
+    g_ref,  # (block_g, B) carried partial document scores
+    valid_ref,  # (block_g, B) int32: 1 = real document lane, 0 = padding
+    eps_ref,  # (block_g,) per-GROUP margin threshold
+    live_ref,  # (block_g,) int32: 1 = group still in the cascade
+    margin_ref,  # (block_g,) out: top-k stability margin
+    exit_ref,  # (block_g,) int32 out: 1 = group exits as a unit
+    *,
+    k: int,
+):
+    """Group decide: does each group's top-k order look settled?
+
+    The group axis is the segment axis — every ``axis=1`` reduction here
+    is a segment_max/segment_sum over one group's document lanes.  The
+    top-(k+1) values come from k+1 unrolled masked-max passes with
+    first-hit consumption (lowest lane wins ties), matching
+    ``ranking.plan.topk_margin`` bit-for-bit; the margin is the k-th
+    minus (k+1)-th best, +inf for groups of at most k documents.  Exit
+    is STRICTLY ``margin > eps``, so eps = +inf never exits (the
+    full-cascade parity configuration).
+    """
+    g = g_ref[...]
+    valid = valid_ref[...] != 0
+    dt = g.dtype
+    ninf = jnp.array(-jnp.inf, dtype=dt)
+    work = jnp.where(valid, g, ninf)
+    avail = valid
+    vk = vk1 = None
+    for i in range(k + 1):
+        masked = jnp.where(avail, work, ninf)
+        cur = jnp.max(masked, axis=1)  # segment max over the group's lanes
+        if i == k - 1:
+            vk = cur
+        elif i == k:
+            vk1 = cur
+        if i < k:
+            hit = avail & (masked == cur[:, None])
+            first = hit & (jnp.cumsum(hit.astype(jnp.int32), axis=1) == 1)
+            avail = avail & ~first
+    size = jnp.sum(valid_ref[...], axis=1)  # segment sum: real docs per group
+    inf = jnp.array(jnp.inf, dtype=dt)
+    # a head that cannot reorder (size <= k) is trivially stable; the
+    # guard also fences the -inf - -inf = NaN of consumed passes
+    margin = jnp.where(size <= k, inf, vk - vk1)
+    exit_g = (live_ref[...] != 0) & (margin > eps_ref[...])
+    margin_ref[...] = margin
+    exit_ref[...] = exit_g.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_g", "interpret")
+)
+def cascade_group_pallas(
+    g: jax.Array,
+    valid: jax.Array,
+    eps: jax.Array,
+    k: int,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: bool = True,
+    n_live: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Group-level decide over a rectangular (G, B) bucket layout.
+
+    ``g`` (G, B) carries each group's per-document partial sums after the
+    stage's scores were accumulated, ``valid`` (G, B) marks real lanes,
+    ``eps`` (G,) is the PER-GROUP margin threshold — the batch executor
+    broadcasts the stage's scalar, the streaming ring gathers each slot's
+    own stage threshold, and both share this one kernel (hence one trace
+    per bucket shape).  ``n_live`` marks only the first ``n_live`` groups
+    live, mirroring the front-packed survivor convention of
+    ``cascade_chunk_pallas``; padding groups never exit.
+
+    Returns ``(margin (G,) f32-like, exit (G,) int32)``; margins are
+    reported for ALL groups (the executor epilogue reuses them for
+    ran-out verdicts), exits only for live ones.
+    """
+    Gq, B = g.shape
+    bg = block_g
+    g_pad = -Gq % bg
+    if g_pad:
+        g = jnp.pad(g, ((0, g_pad), (0, 0)))
+        valid = jnp.pad(valid.astype(jnp.int32), ((0, g_pad), (0, 0)))
+        eps = jnp.pad(eps, (0, g_pad))
+    else:
+        valid = valid.astype(jnp.int32)
+    g_total = g.shape[0]
+    lim = (
+        jnp.int32(Gq)
+        if n_live is None
+        else jnp.minimum(jnp.int32(Gq), jnp.asarray(n_live, dtype=jnp.int32))
+    )
+    live = (jnp.arange(g_total, dtype=jnp.int32) < lim).astype(jnp.int32)
+    dt = g.dtype
+    eps = eps.astype(dt)
+    grid = (g_total // bg,)
+    kernel = functools.partial(_cascade_group_kernel, k=int(k))
+    margin, exit_g = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bg, B), lambda i: (i, 0)),
+            pl.BlockSpec((bg, B), lambda i: (i, 0)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bg,), lambda i: (i,)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g_total,), dt),
+            jax.ShapeDtypeStruct((g_total,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(g, valid, eps, live)
+    return margin[:Gq], exit_g[:Gq]

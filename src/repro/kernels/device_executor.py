@@ -71,7 +71,11 @@ import numpy as np
 
 from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
 from repro.kernels import megakernel as mk
-from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
+from repro.kernels.cascade_kernel import (
+    cascade_chunk_pallas,
+    cascade_group_pallas,
+    cascade_lane_pallas,
+)
 from repro.kernels.lattice_kernel import lattice_scores_pallas
 from repro.kernels.tree_kernel import gbt_scores_pallas
 from repro.testing import faults
@@ -128,7 +132,10 @@ __all__ = [
     "DevicePlan",
     "BoundScorer",
     "StreamResult",
+    "GroupedResult",
+    "GroupedStreamResult",
     "DeviceExecutor",
+    "group_topk_rows",
     "matrix_stage_scorer",
     "tree_stage_scorer",
     "lattice_stage_scorer",
@@ -516,6 +523,93 @@ def stream_occupancy(
     return np.cumsum(occ[:steps_run])
 
 
+@dataclasses.dataclass
+class GroupedResult:
+    """One ranked verdict per query group (DESIGN.md §12).
+
+    ``verdicts`` (G, k) are flat GLOBAL document row ids in rank order,
+    -1 past the group's size.  ``exit_stage`` is 1-based; ``S`` for
+    groups that ran the full cascade.  ``margin`` is the top-k stability
+    margin at decision time.  ``chunk_stats`` counts GROUPS in/exited
+    per stage; ``scores_computed`` is group-quantized block billing,
+    ``scores_possible`` is real documents x T.
+    """
+
+    verdicts: np.ndarray  # (G, k) int32
+    exit_stage: np.ndarray  # (G,) int64
+    margin: np.ndarray  # (G,) float32
+    chunk_stats: list[ChunkStat]
+    scores_computed: int
+    scores_possible: int
+
+
+@dataclasses.dataclass
+class GroupedStreamResult:
+    """Streaming (continuous-batching) grouped run: ``GroupedResult``
+    per-group fields plus the slot timeline of ``StreamResult``, at
+    GROUP granularity (``occupancy`` counts live group slots; billing
+    multiplies by the bucket width before block-quantizing)."""
+
+    verdicts: np.ndarray  # (G, k) int32
+    exit_stage: np.ndarray  # (G,) int64
+    margin: np.ndarray  # (G,) float32
+    admit_step: np.ndarray  # (G,) int64
+    done_step: np.ndarray  # (G,) int64
+    steps_run: int
+    occupancy: np.ndarray  # (steps_run,) int64 live group slots per step
+    capacity_groups: int
+    scores_computed: int
+    scores_possible: int
+
+    @property
+    def mean_occupancy(self) -> float:
+        if self.steps_run == 0:
+            return 0.0
+        return float(self.occupancy.mean()) / max(self.capacity_groups, 1)
+
+    @property
+    def latency_steps(self) -> np.ndarray:
+        return self.done_step - self.admit_step + 1
+
+
+def group_topk_rows(g, valid, rows, k: int):
+    """Per-group top-k GLOBAL document ids via segment reductions.
+
+    ``g``/``valid``/``rows`` are the (G, B) bucket-layout buffers; the
+    group axis is the segment axis.  k unrolled passes of
+    ``jax.ops.segment_max`` pick each group's current best lane, with
+    the first-hit tie-break (lowest flat lane index — a
+    ``segment_sum``-prefix rank, matching ``ranking.plan.topk_margin``'s
+    numpy cumsum exactly) consuming one lane per pass.  Returns (G, k)
+    int32 document ids, -1 where the group has fewer than k documents.
+    """
+    G, B = g.shape
+    L = G * B
+    seg = jnp.repeat(jnp.arange(G, dtype=jnp.int32), B)
+    vflat = valid.reshape(L).astype(bool)
+    work = jnp.where(vflat, g.reshape(L), -jnp.inf)
+    rows_flat = rows.reshape(L).astype(jnp.int32)
+    avail = vflat
+    outs = []
+    for _ in range(k):
+        masked = jnp.where(avail, work, -jnp.inf)
+        cur = jax.ops.segment_max(masked, seg, num_segments=G)  # (G,)
+        hit = avail & (masked == jnp.take(cur, seg))
+        hit_i = hit.astype(jnp.int32)
+        # rank each hit within its segment: a flat cumsum minus the
+        # segment's exclusive prefix of hit counts — rank 0 is the
+        # lowest-lane hit, the tie winner
+        seg_tot = jax.ops.segment_sum(hit_i, seg, num_segments=G)
+        seg_before = jnp.take(jnp.cumsum(seg_tot) - seg_tot, seg)
+        before_me = jnp.cumsum(hit_i) - hit_i - seg_before
+        first = hit & (before_me == 0)
+        pick = jnp.where(first, rows_flat, -1)
+        # exactly one non-(-1) candidate per group (or none, exhausted)
+        outs.append(jax.ops.segment_max(pick, seg, num_segments=G))
+        avail = avail & ~first
+    return jnp.stack(outs, axis=1).astype(jnp.int32)
+
+
 class DeviceExecutor:
     """Runs a ``CascadePlan`` as one compiled device program.
 
@@ -582,6 +676,12 @@ class DeviceExecutor:
         self.traces = 0
         self._jit = jax.jit(self._program)
         self._stream_jit = jax.jit(self._stream_program, static_argnums=(0,))
+        # grouped (ranking) programs: k is static — verdict extraction
+        # unrolls k segment-max passes
+        self._grouped_jit = jax.jit(self._grouped_program, static_argnums=(0,))
+        self._grouped_stream_jit = jax.jit(
+            self._grouped_stream_program, static_argnums=(0, 1)
+        )
 
     def _bn_bill(self) -> int:
         """The kernel row-block granularity billing runs at — the
@@ -1046,4 +1146,474 @@ class DeviceExecutor:
             capacity=cap,
             scores_computed=scores_computed,
             scores_possible=n * T,
+        )
+
+    # -- grouped (ranking) decide: one verdict per query group ----------
+
+    def _cap_groups(self, n_groups: int, capacity_groups: int | None) -> int:
+        from repro.kernels.cascade_kernel import DEFAULT_BLOCK_G
+
+        bg = DEFAULT_BLOCK_G
+        n = max(n_groups, capacity_groups or 0, 1)
+        return -(-n // bg) * bg
+
+    def _grouped_program(self, k, x, gids_init, rows_init, valid_init, n0, eps_g):
+        """Batch grouped cascade: the ``_program`` stage loop with the
+        row decide swapped for the GROUP decide (DESIGN.md §12).
+
+        Buffers are (cap_g, B) bucket-layout rectangles — a group is B
+        contiguous lanes, exits as a unit, and compaction front-packs
+        whole groups (lane order inside a group never changes).  Scores
+        accumulate per COLUMN sequentially, the same f32 add order as
+        the host oracle, so margin-infinity verdicts are bit-identical
+        to ``ranking.host.full_cascade_topk``.  Grouped decides always
+        run the multi-kernel path (scorer stage + ``cascade_group_pallas``);
+        the fused megakernel has no group semantics.
+        """
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        dp = self.dplan
+        S, W = dp.S, dp.W
+        cap_g, B = rows_init.shape
+        L = cap_g * B
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        col_valid = jnp.asarray(dp.col_valid)
+        eps_g = jnp.asarray(eps_g, dtype=jnp.float32)
+        grp = jnp.arange(cap_g, dtype=jnp.int32)
+        lane_b = jnp.arange(B, dtype=jnp.int32)
+
+        def body(carry):
+            (s, gids, rows2d, valid2d, n_active, g2d,
+             verd, exst, marg, n_in_log, state) = carry
+            n_in_log = n_in_log.at[s].set(n_active)
+            t0 = stage_t0[s]
+            rows_flat = rows2d.reshape(L)
+            # active groups are front-packed, so live lanes are exactly
+            # the first n_active * B — the scorers' block guard still
+            # skips retired blocks
+            scores, state_new = self.scorer.stage(
+                state, t0, t0 + W, rows_flat, x, n_active * B
+            )
+            scores = jnp.where(col_valid[s][None, :], scores, 0.0)
+            scores = jnp.where(valid2d.reshape(L, 1) != 0, scores, 0.0)
+            # per-column sequential accumulate: the one f32 add order,
+            # shared with the host oracle (bit-parity contract)
+            g_flat = g2d.reshape(L)
+            for j in range(W):
+                g_flat = g_flat + scores[:, j]
+            g_new = g_flat.reshape(cap_g, B)
+            margin, exit_g = cascade_group_pallas(
+                g_new,
+                valid2d,
+                jnp.broadcast_to(eps_g[s], (cap_g,)),
+                k,
+                interpret=self.interpret,
+                n_live=n_active,
+            )
+            exit_b = exit_g.astype(bool)  # live-gated inside the kernel
+            verdict = group_topk_rows(g_new, valid2d, rows2d, k)
+            scat = jnp.where(exit_b, gids, cap_g)
+            verd = verd.at[scat].set(verdict, mode="drop")
+            exst = exst.at[scat].set(s + 1, mode="drop")
+            marg = marg.at[scat].set(margin, mode="drop")
+            # whole-GROUP cumsum-prefix compaction: survivors keep their
+            # B-lane rectangle; state repacks at lane granularity with
+            # the group pack expanded to its lanes
+            keep = (grp < n_active) & ~exit_b
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            packg = jnp.where(keep, pos, cap_g)
+            n_keep = keep.sum(dtype=jnp.int32)
+            gids = (
+                jnp.full((cap_g,), cap_g, dtype=jnp.int32)
+                .at[packg].set(gids, mode="drop")
+            )
+            rows2d = (
+                jnp.zeros((cap_g, B), dtype=jnp.int32)
+                .at[packg].set(rows2d, mode="drop")
+            )
+            valid2d = (
+                jnp.zeros((cap_g, B), dtype=jnp.int32)
+                .at[packg].set(valid2d, mode="drop")
+            )
+            g2d = (
+                jnp.zeros((cap_g, B), dtype=jnp.float32)
+                .at[packg].set(g_new, mode="drop")
+            )
+            lane_pack = jnp.where(
+                keep[:, None], packg[:, None] * B + lane_b[None, :], L
+            ).reshape(L)
+            state = repack_state(state, state_new, lane_pack)
+            return (
+                s + 1, gids, rows2d, valid2d, n_keep, g2d,
+                verd, exst, marg, n_in_log, state,
+            )
+
+        def cond(carry):
+            s, _, _, _, n_active = carry[:5]
+            # quit when you can: stop once every group has exited
+            return (s < S) & (n_active > 0)
+
+        init = (
+            jnp.int32(0),
+            gids_init,
+            rows_init,
+            valid_init,
+            jnp.asarray(n0, dtype=jnp.int32),
+            jnp.zeros((cap_g, B), dtype=jnp.float32),
+            jnp.full((cap_g, k), -1, dtype=jnp.int32),
+            jnp.full((cap_g,), S, dtype=jnp.int32),
+            jnp.full((cap_g,), jnp.inf, dtype=jnp.float32),
+            jnp.zeros((S,), dtype=jnp.int32),
+            self.scorer.init_state(L),
+        )
+        (s_f, gids, rows2d, valid2d, n_f, g2d,
+         verd, exst, marg, n_in_log, _) = jax.lax.while_loop(cond, body, init)
+        # ran-out groups carry the exact full-cascade ranking; reuse the
+        # group kernel at eps = +inf just for its margins
+        margin_f, _ = cascade_group_pallas(
+            g2d,
+            valid2d,
+            jnp.full((cap_g,), jnp.inf, dtype=jnp.float32),
+            k,
+            interpret=self.interpret,
+            n_live=n_f,
+        )
+        verdict_f = group_topk_rows(g2d, valid2d, rows2d, k)
+        scat = jnp.where(grp < n_f, gids, cap_g)
+        verd = verd.at[scat].set(verdict_f, mode="drop")
+        exst = exst.at[scat].set(S, mode="drop")
+        marg = marg.at[scat].set(margin_f, mode="drop")
+        return verd, exst, marg, s_f, n_f, n_in_log
+
+    def run_grouped(
+        self,
+        batch,
+        group_rows,
+        group_valid,
+        n_groups: int,
+        eps_g,
+        k: int,
+        capacity_groups: int | None = None,
+        prepared: bool = False,
+    ) -> GroupedResult:
+        """Execute the grouped cascade for ``n_groups`` bucket-laid-out
+        query groups on device.
+
+        ``group_rows`` (G, B) holds each group's flat GLOBAL document
+        rows into ``batch`` (padding lanes in-bounds but masked),
+        ``group_valid`` (G, B) the real-lane mask, ``eps_g`` (S,) the
+        per-stage margin thresholds, ``k`` the (static) ranking depth.
+        One bucket width B per call — variable widths go through the
+        bucketing admission layer, one launch (and one compiled trace)
+        per bucket shape.  ``capacity_groups`` pins the group-slot
+        capacity so partial flushes reuse the trace.
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        group_rows = np.asarray(group_rows, dtype=np.int32)
+        group_valid = np.asarray(group_valid)
+        if group_rows.ndim != 2 or group_rows.shape != group_valid.shape:
+            raise ValueError(
+                f"group_rows/group_valid must be matching (G, B) arrays, "
+                f"got {group_rows.shape} / {group_valid.shape}"
+            )
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        n_docs_real = int(np.asarray(group_valid[:n_groups]).sum())
+        if n_groups == 0:
+            return GroupedResult(
+                verdicts=np.zeros((0, k), dtype=np.int32),
+                exit_stage=np.zeros(0, dtype=np.int64),
+                margin=np.zeros(0, dtype=np.float32),
+                chunk_stats=[],
+                scores_computed=0,
+                scores_possible=0,
+            )
+        if self.check_finite:
+            check_batch_finite(batch, np.asarray(batch).shape[0])
+        B = group_rows.shape[1]
+        cap_g = self._cap_groups(n_groups, capacity_groups)
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
+        gids = np.full(cap_g, cap_g, dtype=np.int32)
+        gids[:n_groups] = np.arange(n_groups, dtype=np.int32)
+        rows_init = np.zeros((cap_g, B), dtype=np.int32)
+        rows_init[:n_groups] = group_rows[:n_groups]
+        valid_init = np.zeros((cap_g, B), dtype=np.int32)
+        valid_init[:n_groups] = group_valid[:n_groups].astype(np.int32)
+        verd, exst, marg, s_f, n_f, n_in_log = launch_wave(
+            "device",
+            lambda: self._grouped_jit(
+                int(k),
+                x,
+                jnp.asarray(gids),
+                jnp.asarray(rows_init),
+                jnp.asarray(valid_init),
+                n_groups,
+                jnp.asarray(eps_g, dtype=jnp.float32),
+            ),
+        )
+        s_f, n_f = int(s_f), int(n_f)
+        n_in_log = np.asarray(n_in_log)
+        stages = plan.stages
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        chunk_stats = []
+        for s in range(s_f):
+            n_in = int(n_in_log[s])
+            n_next = int(n_in_log[s + 1]) if s + 1 < s_f else n_f
+            # group-quantized block billing: a stage scores the full
+            # B-lane rectangle of every live group, block-guarded
+            chunk_stats.append(
+                ChunkStat(
+                    t0=stages[s][0],
+                    t1=stages[s][1],
+                    n_in=n_in,
+                    n_exited=n_in - n_next,
+                    scores_computed=-(-(n_in * B) // bn) * bn * W,
+                )
+            )
+        return GroupedResult(
+            verdicts=np.asarray(verd)[:n_groups],
+            exit_stage=np.asarray(exst, dtype=np.int64)[:n_groups],
+            margin=np.asarray(marg)[:n_groups],
+            chunk_stats=chunk_stats,
+            scores_computed=sum(c.scores_computed for c in chunk_stats),
+            scores_possible=n_docs_real * T,
+        )
+
+    def _grouped_stream_program(
+        self, cap_g, k, x, ring_gids, ring_rows, ring_valid, arrivals,
+        n_pending, eps_g,
+    ):
+        """Streaming grouped cascade: the ``_stream_program`` admission
+        ring at GROUP-slot granularity.  Each slot is one B-lane group
+        rectangle with its own stage index; freed slots refill from the
+        ring in arrival order (a pending group occupies exactly one
+        slot, so slot-granular refill IS group-granular refill)."""
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        dp = self.dplan
+        S, W, T = dp.S, dp.W, dp.plan.T
+        Rg, B = ring_rows.shape  # ring capacity == output size; Rg = trash id
+        L = cap_g * B
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        col_valid = jnp.asarray(dp.col_valid)
+        eps_g_arr = jnp.asarray(eps_g, dtype=jnp.float32)
+        slot = jnp.arange(cap_g, dtype=jnp.int32)
+        ridx = jnp.arange(Rg, dtype=jnp.int32)
+        lane_b = jnp.arange(B, dtype=jnp.int32)
+
+        def body(carry):
+            (step, gids, rows2d, valid2d, stage, g2d, n_live, head,
+             verd, exst, marg, admit, done, state) = carry
+            arrived = jnp.sum(
+                (ridx >= head) & (ridx < n_pending) & (arrivals <= step),
+                dtype=jnp.int32,
+            )
+            kadm = jnp.minimum(cap_g - n_live, arrived)
+            src = jnp.clip(head + (slot - n_live), 0, Rg - 1)
+            is_new = (slot >= n_live) & (slot < n_live + kadm)
+            gids = jnp.where(is_new, jnp.take(ring_gids, src), gids)
+            rows2d = jnp.where(
+                is_new[:, None], jnp.take(ring_rows, src, axis=0), rows2d
+            )
+            valid2d = jnp.where(
+                is_new[:, None], jnp.take(ring_valid, src, axis=0), valid2d
+            )
+            stage = jnp.where(is_new, 0, stage)
+            g2d = jnp.where(is_new[:, None], 0.0, g2d)
+            admit = admit.at[jnp.where(is_new, gids, Rg)].set(step, mode="drop")
+            n_live = n_live + kadm
+            head = head + kadm
+            # mixed-stage scoring: per-slot stage gathered to per-lane
+            t0_slot = jnp.take(stage_t0, stage)
+            t0_lane = jnp.repeat(t0_slot, B)
+            stop = stage >= S - 1
+            scores, state_new = self.scorer.lane_stage(
+                state, t0_lane, rows2d.reshape(L), x, n_live * B
+            )
+            colmask = jnp.repeat(
+                jnp.take(col_valid, stage, axis=0), B, axis=0
+            )  # (L, W): each slot's stage columns, per lane
+            scores = jnp.where(colmask, scores, 0.0)
+            scores = jnp.where(valid2d.reshape(L, 1) != 0, scores, 0.0)
+            g_flat = g2d.reshape(L)
+            for j in range(W):
+                g_flat = g_flat + scores[:, j]
+            g_new = g_flat.reshape(cap_g, B)
+            margin, exit_g = cascade_group_pallas(
+                g_new,
+                valid2d,
+                jnp.take(eps_g_arr, stage),
+                k,
+                interpret=self.interpret,
+                n_live=n_live,
+            )
+            exit_b = exit_g.astype(bool)
+            slot_live = slot < n_live
+            ran_out = slot_live & ~exit_b & stop
+            fin = (slot_live & exit_b) | ran_out
+            verdict = group_topk_rows(g_new, valid2d, rows2d, k)
+            exst_val = jnp.where(exit_b, stage + 1, S)
+            scat = jnp.where(fin, gids, Rg)
+            verd = verd.at[scat].set(verdict, mode="drop")
+            exst = exst.at[scat].set(exst_val, mode="drop")
+            marg = marg.at[scat].set(margin, mode="drop")
+            done = done.at[scat].set(step, mode="drop")
+            keep = slot_live & ~exit_b & ~stop
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            packg = jnp.where(keep, pos, cap_g)
+            n_keep = keep.sum(dtype=jnp.int32)
+            gids = (
+                jnp.full((cap_g,), Rg, dtype=jnp.int32)
+                .at[packg].set(gids, mode="drop")
+            )
+            rows2d = (
+                jnp.zeros((cap_g, B), dtype=jnp.int32)
+                .at[packg].set(rows2d, mode="drop")
+            )
+            valid2d = (
+                jnp.zeros((cap_g, B), dtype=jnp.int32)
+                .at[packg].set(valid2d, mode="drop")
+            )
+            stage = (
+                jnp.zeros((cap_g,), dtype=jnp.int32)
+                .at[packg].set(stage + 1, mode="drop")
+            )
+            g2d = (
+                jnp.zeros((cap_g, B), dtype=jnp.float32)
+                .at[packg].set(g_new, mode="drop")
+            )
+            lane_pack = jnp.where(
+                keep[:, None], packg[:, None] * B + lane_b[None, :], L
+            ).reshape(L)
+            state = repack_state(state, state_new, lane_pack)
+            return (
+                step + 1, gids, rows2d, valid2d, stage, g2d,
+                n_keep, head,
+                verd, exst, marg, admit, done, state,
+            )
+
+        def cond(carry):
+            n_live, head = carry[6], carry[7]
+            return (n_live > 0) | (head < n_pending)
+
+        init = (
+            jnp.int32(0),
+            jnp.full((cap_g,), Rg, dtype=jnp.int32),
+            jnp.zeros((cap_g, B), dtype=jnp.int32),
+            jnp.zeros((cap_g, B), dtype=jnp.int32),
+            jnp.zeros((cap_g,), dtype=jnp.int32),
+            jnp.zeros((cap_g, B), dtype=jnp.float32),
+            jnp.int32(0),
+            jnp.int32(0),
+            jnp.full((Rg, k), -1, dtype=jnp.int32),
+            jnp.full((Rg,), S, dtype=jnp.int32),
+            jnp.full((Rg,), jnp.inf, dtype=jnp.float32),
+            jnp.zeros((Rg,), dtype=jnp.int32),
+            jnp.zeros((Rg,), dtype=jnp.int32),
+            self.scorer.init_state(L),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        (s_f, _, _, _, _, _, _, _, verd, exst, marg, admit, done, _) = out
+        return verd, exst, marg, admit, done, s_f
+
+    def run_stream_grouped(
+        self,
+        batch,
+        group_rows,
+        group_valid,
+        n_groups: int,
+        eps_g,
+        k: int,
+        arrivals=None,
+        capacity_groups: int | None = None,
+        ring_capacity: int | None = None,
+        prepared: bool = False,
+    ) -> GroupedStreamResult:
+        """Continuously stream query groups through group-slot buffers.
+
+        The grouped analogue of ``run_stream``: groups wait in an
+        arrival-order admission ring and refill freed GROUP slots (B
+        lanes each) mid-cascade; per-slot stage indices mix rookies with
+        veterans, each decided by its own stage's margin threshold
+        through the same ``cascade_group_pallas`` kernel as the batch
+        path.  One bucket width B per executor run.
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        if not self.scorer.has_lanes:
+            raise ValueError(
+                "run_stream_grouped needs a scorer with per-lane stage "
+                "scoring (lane_fn or lane_stage_fn)"
+            )
+        group_rows = np.asarray(group_rows, dtype=np.int32)
+        group_valid = np.asarray(group_valid)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        n_docs_real = int(np.asarray(group_valid[:n_groups]).sum())
+        if n_groups == 0:
+            return GroupedStreamResult(
+                verdicts=np.zeros((0, k), dtype=np.int32),
+                exit_stage=np.zeros(0, dtype=np.int64),
+                margin=np.zeros(0, dtype=np.float32),
+                admit_step=np.zeros(0, dtype=np.int64),
+                done_step=np.zeros(0, dtype=np.int64),
+                steps_run=0,
+                occupancy=np.zeros(0, dtype=np.int64),
+                capacity_groups=self._cap_groups(1, capacity_groups),
+                scores_computed=0,
+                scores_possible=0,
+            )
+        if self.check_finite:
+            check_batch_finite(batch, np.asarray(batch).shape[0])
+        B = group_rows.shape[1]
+        cap_g = self._cap_groups(capacity_groups or n_groups, capacity_groups)
+        Rg = max(n_groups, int(ring_capacity or n_groups))
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
+        ring_gids = np.full(Rg, Rg, dtype=np.int32)
+        ring_gids[:n_groups] = np.arange(n_groups, dtype=np.int32)
+        ring_rows = np.zeros((Rg, B), dtype=np.int32)
+        ring_rows[:n_groups] = group_rows[:n_groups]
+        ring_valid = np.zeros((Rg, B), dtype=np.int32)
+        ring_valid[:n_groups] = group_valid[:n_groups].astype(np.int32)
+        arr = (
+            np.zeros(n_groups, dtype=np.int32)
+            if arrivals is None
+            else np.asarray(arrivals, dtype=np.int32)
+        )
+        assert arr.shape == (n_groups,)
+        assert (np.diff(arr) >= 0).all(), "arrivals must be nondecreasing"
+        arr_pad = np.zeros(Rg, dtype=np.int32)
+        arr_pad[:n_groups] = arr
+        verd, exst, marg, admit, done, s_f = launch_wave(
+            "device",
+            lambda: self._grouped_stream_jit(
+                cap_g,
+                int(k),
+                x,
+                jnp.asarray(ring_gids),
+                jnp.asarray(ring_rows),
+                jnp.asarray(ring_valid),
+                jnp.asarray(arr_pad),
+                n_groups,
+                jnp.asarray(eps_g, dtype=jnp.float32),
+            ),
+        )
+        steps_run = int(s_f)
+        admit = np.asarray(admit, dtype=np.int64)[:n_groups]
+        done = np.asarray(done, dtype=np.int64)[:n_groups]
+        occ = stream_occupancy(admit, done, steps_run)
+        # group-quantized block billing per loop step: live group slots
+        # score their full B-lane rectangles, block-guarded
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        scores_computed = int(((-(-(occ * B) // bn)) * bn * W).sum())
+        return GroupedStreamResult(
+            verdicts=np.asarray(verd)[:n_groups],
+            exit_stage=np.asarray(exst, dtype=np.int64)[:n_groups],
+            margin=np.asarray(marg)[:n_groups],
+            admit_step=admit,
+            done_step=done,
+            steps_run=steps_run,
+            occupancy=occ,
+            capacity_groups=cap_g,
+            scores_computed=scores_computed,
+            scores_possible=n_docs_real * T,
         )

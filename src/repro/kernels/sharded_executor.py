@@ -56,15 +56,21 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.executor import CascadePlan, ChunkStat, ExecutorResult
 from repro.kernels import megakernel as mk
-from repro.kernels.cascade_kernel import cascade_chunk_pallas, cascade_lane_pallas
+from repro.kernels.cascade_kernel import (
+    cascade_chunk_pallas,
+    cascade_group_pallas,
+    cascade_lane_pallas,
+)
 from repro.kernels.device_executor import (
     DEFAULT_BLOCK_N,
     INTERPRET,
     BoundScorer,
     DevicePlan,
+    GroupedResult,
     StreamResult,
     WaveFailure,  # noqa: F401 — re-export: sharded waves raise the same type
     check_batch_finite,
+    group_topk_rows,
     launch_wave,
     repack_state,
     stream_occupancy,
@@ -155,6 +161,9 @@ class ShardedDeviceExecutor:
         self.last_run_info: dict | None = None
         self._jit = jax.jit(self._program)
         self._stream_jit = jax.jit(self._stream_program, static_argnums=(0,))
+        # grouped (ranking) program: k is static — verdict extraction
+        # unrolls k segment-max passes per shard
+        self._grouped_jit = jax.jit(self._grouped_program, static_argnums=(0,))
 
     def _cap_local(self, n: int) -> int:
         """Per-shard buffer capacity: the balanced share, block-padded."""
@@ -500,6 +509,303 @@ class ShardedDeviceExecutor:
             chunk_stats=chunk_stats,
             scores_computed=sum(c.scores_computed for c in chunk_stats),
             scores_possible=n * T,
+        )
+
+    # -- grouped (ranking) decide, data-parallel over groups ------------
+
+    def _cap_groups_local(self, n_groups: int, capacity_groups: int | None) -> int:
+        """Per-shard GROUP-slot capacity: the balanced share, padded to
+        the group-decide kernel's block granularity."""
+        from repro.kernels.cascade_kernel import DEFAULT_BLOCK_G
+
+        per = -(-max(n_groups, capacity_groups or 0, 1) // self.shards)
+        return -(-per // DEFAULT_BLOCK_G) * DEFAULT_BLOCK_G
+
+    def _grouped_per_shard(self, k, xbuf, gids, rows2d, valid2d, n_active, eps_g):
+        """One shard's grouped stage loop: ``DeviceExecutor``'s
+        ``_grouped_program`` body over shard-LOCAL group slots, with the
+        psum'd live-group total driving the mesh-wide early exit.
+
+        Groups never straddle a shard — each shard owns whole B-lane
+        rectangles, exits them as units, and front-packs its own
+        survivors; there is no grouped rebalance (a group is the
+        migration quantum and moving one costs a B-lane all-to-all, not
+        worth it at serving bucket sizes).  Verdicts scatter into
+        GLOBAL-size accumulators by global group id — a group lives on
+        exactly one shard, so the final ``psum`` is an exactly-once
+        assembly, the same scheme as ``_per_shard``'s result scatter.
+        """
+        dp = self.dplan
+        S, W = dp.S, dp.W
+        xbuf = xbuf[0]
+        gids = gids[0]
+        rows2d = rows2d[0]
+        valid2d = valid2d[0]
+        n_active = n_active[0]
+        eps_g = eps_g[0]
+        cap_gl, B = rows2d.shape
+        L = cap_gl * B
+        cap_gG = self.shards * cap_gl  # == the trash/sentinel group id
+        stage_t0 = jnp.asarray(dp.stage_t0)
+        col_valid = jnp.asarray(dp.col_valid)
+        grp = jnp.arange(cap_gl, dtype=jnp.int32)
+        lane = jnp.arange(L, dtype=jnp.int32)
+        lane_b = jnp.arange(B, dtype=jnp.int32)
+
+        def body(carry):
+            (s, xbuf, gids, rows2d, valid2d, n_active, g2d, total,
+             verd, exst, marg, n_in_log, state) = carry
+            n_in_log = n_in_log.at[s].set(n_active)
+            t0 = stage_t0[s]
+            # the survivor lanes ARE the row set: identity gather over
+            # the shard-local operand buffer, never the global batch
+            scores, state_new = self.scorer.stage(
+                state, t0, t0 + W, lane, xbuf, n_active * B
+            )
+            scores = jnp.where(col_valid[s][None, :], scores, 0.0)
+            scores = jnp.where(valid2d.reshape(L, 1) != 0, scores, 0.0)
+            # per-column sequential accumulate: the one f32 add order,
+            # shared with the host oracle (bit-parity contract)
+            g_flat = g2d.reshape(L)
+            for j in range(W):
+                g_flat = g_flat + scores[:, j]
+            g_new = g_flat.reshape(cap_gl, B)
+            margin, exit_g = cascade_group_pallas(
+                g_new,
+                valid2d,
+                jnp.broadcast_to(eps_g[s], (cap_gl,)),
+                k,
+                interpret=self.interpret,
+                n_live=n_active,
+            )
+            exit_b = exit_g.astype(bool)  # live-gated inside the kernel
+            verdict = group_topk_rows(g_new, valid2d, rows2d, k)
+            # exactly-once verdict scatter by GLOBAL group id; retired
+            # and padding slots aim at cap_gG, out of bounds
+            scat = jnp.where(exit_b, gids, cap_gG)
+            verd = verd.at[scat].set(verdict, mode="drop")
+            exst = exst.at[scat].set(s + 1, mode="drop")
+            marg = marg.at[scat].set(margin, mode="drop")
+            # whole-GROUP cumsum-prefix compaction, local to the shard
+            keep = (grp < n_active) & ~exit_b
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            packg = jnp.where(keep, pos, cap_gl)
+            n_keep = keep.sum(dtype=jnp.int32)
+            gids = (
+                jnp.full((cap_gl,), cap_gG, dtype=jnp.int32)
+                .at[packg].set(gids, mode="drop")
+            )
+            rows2d = (
+                jnp.zeros((cap_gl, B), dtype=jnp.int32)
+                .at[packg].set(rows2d, mode="drop")
+            )
+            valid2d = (
+                jnp.zeros((cap_gl, B), dtype=jnp.int32)
+                .at[packg].set(valid2d, mode="drop")
+            )
+            g2d = (
+                jnp.zeros((cap_gl, B), dtype=jnp.float32)
+                .at[packg].set(g_new, mode="drop")
+            )
+            lane_pack = jnp.where(
+                keep[:, None], packg[:, None] * B + lane_b[None, :], L
+            ).reshape(L)
+            xbuf = jnp.zeros_like(xbuf).at[lane_pack].set(xbuf, mode="drop")
+            state = repack_state(state, state_new, lane_pack)
+            # quit when you can, mesh-wide: one psum per stage
+            total = jax.lax.psum(n_keep, DATA_AXIS)
+            return (
+                s + 1, xbuf, gids, rows2d, valid2d, n_keep, g2d, total,
+                verd, exst, marg, n_in_log, state,
+            )
+
+        def cond(carry):
+            s = carry[0]
+            total = carry[7]
+            return (s < S) & (total > 0)
+
+        total0 = jax.lax.psum(n_active, DATA_AXIS)
+        init = (
+            jnp.int32(0),
+            xbuf,
+            gids,
+            rows2d,
+            valid2d,
+            n_active,
+            jnp.zeros((cap_gl, B), dtype=jnp.float32),
+            total0,
+            jnp.zeros((cap_gG, k), dtype=jnp.int32),
+            jnp.zeros((cap_gG,), dtype=jnp.int32),
+            jnp.zeros((cap_gG,), dtype=jnp.float32),
+            jnp.zeros((S,), dtype=jnp.int32),
+            self.scorer.init_state(L),
+        )
+        (s_f, xbuf, gids, rows2d, valid2d, n_f, g2d, total,
+         verd, exst, marg, n_in_log, _) = jax.lax.while_loop(cond, body, init)
+        # ran-out groups carry the exact full-cascade ranking; reuse the
+        # group kernel at eps = +inf just for its margins
+        margin_f, _ = cascade_group_pallas(
+            g2d,
+            valid2d,
+            jnp.full((cap_gl,), jnp.inf, dtype=jnp.float32),
+            k,
+            interpret=self.interpret,
+            n_live=n_f,
+        )
+        verdict_f = group_topk_rows(g2d, valid2d, rows2d, k)
+        scat = jnp.where(grp < n_f, gids, cap_gG)
+        verd = verd.at[scat].set(verdict_f, mode="drop")
+        exst = exst.at[scat].set(S, mode="drop")
+        marg = marg.at[scat].set(margin_f, mode="drop")
+        verd = jax.lax.psum(verd, DATA_AXIS)
+        exst = jax.lax.psum(exst, DATA_AXIS)
+        marg = jax.lax.psum(marg, DATA_AXIS)
+        one = lambda a: jnp.reshape(a, (1,) + a.shape)  # noqa: E731
+        return (
+            one(verd), one(exst), one(marg), one(s_f), one(n_f), one(n_in_log),
+        )
+
+    def _grouped_program(self, k, x, gids, rows, valid, n0, eps_g):
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        shards = self.shards
+        _, cap_gl, B = rows.shape
+        L = cap_gl * B
+        # distribute the operand rows: each shard receives ONLY its own
+        # groups' documents (gathered by flat doc id outside shard_map,
+        # like the batch path, so the per-shard working set is O(cap_gl*B))
+        xbuf = jnp.take(x, rows.reshape(-1), axis=0).reshape(
+            (shards, L) + x.shape[1:]
+        )
+        # the threshold vector rides in sharded (every shard gets the
+        # same copy) — no replicated in_specs, check_rep=False friendly
+        eps_rep = jnp.broadcast_to(eps_g[None, :], (shards, eps_g.shape[0]))
+        sharded = shard_map(
+            lambda xb, gi, ro, va, n, ep: self._grouped_per_shard(
+                k, xb, gi, ro, va, n, ep
+            ),
+            mesh=self.mesh,
+            in_specs=(P(DATA_AXIS),) * 6,
+            out_specs=(P(DATA_AXIS),) * 6,
+            check_rep=False,
+        )
+        return sharded(xbuf, gids, rows, valid, n0, eps_rep)
+
+    def run_grouped(
+        self,
+        batch,
+        group_rows,
+        group_valid,
+        n_groups: int,
+        eps_g,
+        k: int,
+        capacity_groups: int | None = None,
+        prepared: bool = False,
+    ) -> GroupedResult:
+        """Execute the grouped cascade for ``n_groups`` bucket-laid-out
+        query groups, data-parallel over the mesh.
+
+        Same contract as ``DeviceExecutor.run_grouped`` (one bucket
+        width B per call, ``capacity_groups`` pins the GLOBAL group-slot
+        capacity so partial flushes reuse one trace).  Groups split
+        contiguously across shards as whole units — compaction is
+        shard-local, so no group ever straddles a shard boundary.
+        """
+        plan = self.dplan.plan
+        T = plan.T
+        group_rows = np.asarray(group_rows, dtype=np.int32)
+        group_valid = np.asarray(group_valid)
+        if group_rows.ndim != 2 or group_rows.shape != group_valid.shape:
+            raise ValueError(
+                f"group_rows/group_valid must be matching (G, B) arrays, "
+                f"got {group_rows.shape} / {group_valid.shape}"
+            )
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        n_docs_real = int(np.asarray(group_valid[:n_groups]).sum())
+        if n_groups == 0:
+            return GroupedResult(
+                verdicts=np.zeros((0, k), dtype=np.int32),
+                exit_stage=np.zeros(0, dtype=np.int64),
+                margin=np.zeros(0, dtype=np.float32),
+                chunk_stats=[],
+                scores_computed=0,
+                scores_possible=0,
+            )
+        if self.check_finite:
+            check_batch_finite(batch, np.asarray(batch).shape[0])
+        shards = self.shards
+        B = group_rows.shape[1]
+        cap_gl = self._cap_groups_local(n_groups, capacity_groups)
+        cap_gG = shards * cap_gl
+        x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
+        # balanced contiguous assignment: shard j takes the j-th slice
+        # of whole groups (global ids travel with the rectangles)
+        gids = np.full((shards, cap_gl), cap_gG, dtype=np.int32)
+        rows_init = np.zeros((shards, cap_gl, B), dtype=np.int32)
+        valid_init = np.zeros((shards, cap_gl, B), dtype=np.int32)
+        n0 = np.zeros(shards, dtype=np.int32)
+        base, rem = divmod(n_groups, shards)
+        start = 0
+        for j in range(shards):
+            cnt = base + (1 if j < rem else 0)
+            gids[j, :cnt] = np.arange(start, start + cnt, dtype=np.int32)
+            rows_init[j, :cnt] = group_rows[start : start + cnt]
+            valid_init[j, :cnt] = group_valid[start : start + cnt].astype(np.int32)
+            n0[j] = cnt
+            start += cnt
+        verd, exst, marg, s_f, n_f, n_in_log = launch_wave(
+            "sharded",
+            lambda: self._grouped_jit(
+                int(k),
+                x,
+                jnp.asarray(gids),
+                jnp.asarray(rows_init),
+                jnp.asarray(valid_init),
+                jnp.asarray(n0),
+                jnp.asarray(eps_g, dtype=jnp.float32),
+            ),
+        )
+        verd = np.asarray(verd)[0][:n_groups]
+        exst = np.asarray(exst, dtype=np.int64)[0][:n_groups]
+        marg = np.asarray(marg)[0][:n_groups]
+        s_f = int(np.asarray(s_f)[0])  # identical across shards (psum cond)
+        n_f = np.asarray(n_f)  # (shards,) final live group counts
+        n_in_log = np.asarray(n_in_log)  # (shards, S) group occupancy
+        stages = plan.stages
+        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        chunk_stats = []
+        per_shard_scores = np.zeros((shards, s_f), dtype=np.int64)
+        for s in range(s_f):
+            n_in_k = n_in_log[:, s]
+            n_in = int(n_in_k.sum())
+            n_next = int(n_in_log[:, s + 1].sum()) if s + 1 < s_f else int(n_f.sum())
+            # group-quantized block billing per shard: a live group
+            # scores its full B-lane rectangle, block-guarded locally
+            per_shard_scores[:, s] = (-(-(n_in_k * B) // bn)) * bn * W
+            chunk_stats.append(
+                ChunkStat(
+                    t0=stages[s][0],
+                    t1=stages[s][1],
+                    n_in=n_in,
+                    n_exited=n_in - n_next,
+                    scores_computed=int(per_shard_scores[:, s].sum()),
+                )
+            )
+        self.last_run_info = {
+            "shards": shards,
+            "stages_run": s_f,
+            "per_shard_n_in": n_in_log[:, :s_f].copy(),
+            "per_shard_final_live": n_f.copy(),
+            "per_shard_scores": per_shard_scores,
+            "rebalanced_stages": [],  # no grouped rebalance
+        }
+        return GroupedResult(
+            verdicts=verd,
+            exit_stage=exst,
+            margin=marg,
+            chunk_stats=chunk_stats,
+            scores_computed=sum(c.scores_computed for c in chunk_stats),
+            scores_possible=n_docs_real * T,
         )
 
     # -- streaming admission, shard-local (DESIGN.md §8) ----------------

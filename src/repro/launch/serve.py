@@ -66,6 +66,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--chunk-t", type=int, default=8)
     ap.add_argument(
+        "--groups", type=int, default=None,
+        help="serve RANKING queries (DESIGN.md §12): chop the splits into "
+        "ragged query groups with this mean document count (seeded), fit "
+        "GROUP-level exit thresholds (api.fit(groups=...)) and serve "
+        "per-query top-k verdicts through the grouped cascade",
+    )
+    ap.add_argument(
+        "--topk", type=int, default=10,
+        help="ranking depth k for --groups serving (default 10)",
+    )
+    ap.add_argument(
         "--eager", action="store_true",
         help="precompute the full (N, T) score matrix per batch instead of "
         "the lazy chunked producer (DESIGN.md §4)",
@@ -193,6 +204,73 @@ def resolve_backend_args(args) -> tuple[str, dict, str]:
     return backend, opts, policy
 
 
+def _ragged_sizes(n: int, mean: int, rng) -> np.ndarray:
+    """Partition ``n`` rows into ragged group sizes (Poisson around
+    ``mean``, min 1, last group takes the remainder)."""
+    sizes = []
+    left = n
+    while left > 0:
+        s = int(min(left, max(1, rng.poisson(mean))))
+        sizes.append(s)
+        left -= s
+    return np.asarray(sizes, dtype=np.int64)
+
+
+def _serve_ranking(args, ds, score_fn, F_train, beta, backend_name, backend_opts):
+    """``--groups`` mode: ragged ranking queries through the grouped
+    cascade (fit group thresholds -> compile -> GroupedRankServer)."""
+    from repro import api
+    from repro.ranking import group_offsets, ndcg_at_k
+
+    rng = np.random.default_rng(2031)
+    sizes_tr = _ragged_sizes(len(ds.y_train), args.groups, rng)
+    fitted = api.fit(
+        F_train, groups=sizes_tr, topk=args.topk,
+        alpha=args.alpha, beta=beta, mode=args.mode, chunk_t=args.chunk_t,
+    )
+    gp = fitted.grouped
+    print(
+        f"[serve] grouped fit: {sizes_tr.size} train queries "
+        f"(mean {sizes_tr.mean():.1f} docs), S={gp.S}, k={gp.k}, "
+        f"train disagreement {gp.train_disagreement:.4f} (alpha={args.alpha})"
+    )
+    compiled = fitted.compile(backend_name, **backend_opts)
+    server = compiled.serve(
+        score_fn=score_fn, streaming=args.streaming,
+        batch_size=args.batch_size,
+    )
+    sizes_te = _ragged_sizes(len(ds.y_test), args.groups, rng)
+    offsets = group_offsets(sizes_te)
+    arr_rng = np.random.default_rng(2028)
+    arrivals = np.cumsum(
+        arr_rng.exponential(1.0 / args.arrival_rate, size=sizes_te.size)
+    )
+    for i in range(sizes_te.size):
+        docs = ds.x_test[offsets[i] : offsets[i + 1]]
+        if args.streaming:
+            server.submit(docs, arrival=float(arrivals[i]))
+        else:
+            server.submit(docs)
+    results = server.drain()
+    st = server.stats
+    # NDCG against the binary test labels as graded relevance (the
+    # synthetic splits have no per-document grades)
+    verd = np.full((sizes_te.size, gp.k), -1, dtype=np.int64)
+    for i, r in enumerate(results):
+        ids = np.asarray(r["ranking"], dtype=np.int64) + offsets[i]
+        verd[i, : ids.size] = ids
+    ndcg = ndcg_at_k(ds.y_test, verd, sizes_te, gp.k)
+    print(
+        f"[serve] ranking: {st.n_queries} queries / {st.n_docs} docs in "
+        f"{st.n_waves} wave(s) ({compiled.backend_name} backend, "
+        f"{'streaming' if args.streaming else 'batch'})\n"
+        f"        mean exit stage {st.mean_exit_stage:.2f}/{gp.S}  "
+        f"scores computed {st.scores_computed}/{st.scores_possible} "
+        f"({st.compute_fraction:.1%} of eager)\n"
+        f"        NDCG@{gp.k} {ndcg:.4f}"
+    )
+
+
 def main() -> None:
     ap = build_parser()
     args = ap.parse_args()
@@ -270,6 +348,11 @@ def main() -> None:
             )
 
     F_train = np.asarray(score_fn(ds.x_train))
+    if args.groups is not None:
+        _serve_ranking(
+            args, ds, score_fn, F_train, beta, backend_name, backend_opts
+        )
+        return
     qwyc = fit_qwyc(F_train, beta=beta, alpha=args.alpha, mode=args.mode)
     print(
         f"[serve] QWYC fit: train mean models {qwyc.train_mean_models:.2f}/{args.T} "

@@ -1,0 +1,65 @@
+"""Ranking subsystem: query-level early exit over ragged document groups.
+
+QWYC's decide step is per-row, but learning-to-rank traffic exits per
+QUERY: a ragged group of candidate documents stops scoring when its
+top-k ORDER is stable, not when any single document's partial sum
+crosses a threshold (Lucchese et al., "Query-level Early Exit for
+Additive Learning-to-Rank Ensembles"; Busolin et al., "Learning Early
+Exit Strategies for Additive Ranking Ensembles" — PAPERS.md).  This
+package adds that group-level decide semantics on top of the existing
+serving substrate (DESIGN.md §12):
+
+* ``plan``      — ``GroupedPlan`` (per-stage top-k stability-margin
+  thresholds + bucket layout) and ``fit_grouped`` (greedy QWYC ordering
+  reused; thresholds calibrated on the margin stream).
+* ``host``      — the host oracle: the sequential grouped stage loop
+  every device path is parity-tested against, plus the full-cascade
+  top-k oracle (the margin-infinity reference).
+* ``bucketing`` — host-side length-bucketed admission for ragged group
+  sizes: pad-to-bucket layout and the skip-ahead/wait slot policy.
+* ``metrics``   — NDCG@k.
+* ``serving``   — the bucketed flush server and streaming feed.
+
+The device decide kernel lives in ``kernels/cascade_kernel.py``
+(``cascade_group_pallas``) and the grouped executor programs on
+``DeviceExecutor`` / ``ShardedDeviceExecutor`` — this package stays a
+layer above the kernels, never the other way around.
+"""
+
+from repro.ranking.bucketing import (
+    DEFAULT_BUCKETS,
+    AdmissionQueue,
+    bucket_layout,
+    bucket_widths_for,
+    group_offsets,
+    pack_by_bucket,
+)
+from repro.ranking.host import (
+    full_cascade_topk,
+    run_grouped_host,
+)
+from repro.ranking.metrics import ndcg_at_k
+from repro.ranking.plan import (
+    MARGIN_INF,
+    GroupedPlan,
+    fit_grouped,
+    topk_margin,
+)
+from repro.ranking.serving import GroupedRankServer
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "MARGIN_INF",
+    "AdmissionQueue",
+    "GroupedPlan",
+    "GroupedRankServer",
+    "bucket_layout",
+    "bucket_widths_for",
+    "fit_grouped",
+    "full_cascade_topk",
+    "group_offsets",
+    "ndcg_at_k",
+    "pack_by_bucket",
+    "run_grouped_host",
+    "topk_margin",
+]

@@ -1,0 +1,256 @@
+"""Bucketed ranking server: ragged query groups in, ranked verdicts out.
+
+The grouped analogue of ``serving.engine``'s flush/streaming split, at
+GROUP granularity.  Queries (one ragged document list each) queue up;
+``flush`` packs them into rectangular per-bucket layouts
+(``ranking.bucketing``) and launches ONE grouped device run per bucket
+shape — an empty queue means no launch at all (the empty-partial-flush
+contract).  In streaming mode freed group slots refill mid-cascade
+through the executor's grouped admission ring, with the host-side
+``AdmissionQueue`` deciding what enters a wave when the queue head does
+not fit the wave's bucket width: ``skip-ahead`` admits the first
+fitting group (occupancy over order), ``wait`` preserves strict arrival
+order (head-of-line blocking, the conservative policy).
+
+Verdicts come back per query in submission order as LOCAL document
+positions (0-based within the submitted group), mapped from the flat
+row ids the executors emit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.ranking.bucketing import (
+    AdmissionQueue,
+    bucket_widths_for,
+    pack_by_bucket,
+)
+from repro.ranking.host import run_grouped_host
+from repro.ranking.plan import GroupedPlan
+
+__all__ = ["GroupedRankServer", "RankStats"]
+
+
+@dataclasses.dataclass
+class RankStats:
+    n_queries: int = 0
+    n_docs: int = 0
+    n_waves: int = 0  # device launches (one per bucket shape per flush)
+    scores_computed: int = 0  # group-quantized serving bill
+    scores_possible: int = 0  # real docs x T
+    stages_run: int = 0  # sum of per-query exit stages
+
+    @property
+    def compute_fraction(self) -> float:
+        return self.scores_computed / max(self.scores_possible, 1)
+
+    @property
+    def mean_exit_stage(self) -> float:
+        return self.stages_run / max(self.n_queries, 1)
+
+
+class GroupedRankServer:
+    """Serve ranked top-k verdicts for ragged query groups.
+
+    ``score_fn(docs) -> (m, T)`` produces per-document base-model scores
+    in ORIGINAL model order (None = ``submit`` receives score matrices
+    directly).  ``executor`` is a grouped-capable device executor
+    (``DeviceExecutor`` / ``ShardedDeviceExecutor``) or None for the
+    host oracle path.  ``capacity_groups`` pins the group-slot capacity
+    per bucket so every flush reuses one compiled trace per bucket
+    shape; ``batch_groups`` is the flush threshold.  ``streaming=True``
+    drives the grouped admission ring with the ``policy`` admission
+    queue instead of batch-at-a-time flushes.
+    """
+
+    def __init__(
+        self,
+        gplan: GroupedPlan,
+        score_fn=None,
+        *,
+        executor=None,
+        batch_groups: int = 32,
+        capacity_groups: int | None = None,
+        buckets=None,
+        streaming: bool = False,
+        policy: str = "skip-ahead",
+        margin_inf: bool = False,
+    ):
+        if policy not in ("skip-ahead", "wait"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.gplan = gplan.with_margin_inf() if margin_inf else gplan
+        self.score_fn = score_fn
+        self.executor = executor
+        self.batch_groups = int(batch_groups)
+        self.capacity_groups = int(capacity_groups or batch_groups)
+        self.buckets = tuple(buckets) if buckets is not None else gplan.buckets
+        self.streaming = bool(streaming)
+        self.policy = policy
+        self.stats = RankStats()
+        self._queue: list[tuple[int, np.ndarray, float]] = []  # (seq, docs, arrival)
+        self._results: list[tuple[int, dict]] = []
+        self._seq = 0
+        self._clock = 0.0
+
+    def submit(self, docs, arrival: float | None = None) -> None:
+        """Enqueue one query's ragged document list (``(m, ...)`` features
+        for ``score_fn``, or an ``(m, T)`` score matrix without one)."""
+        docs = np.asarray(docs)
+        if docs.ndim < 2 or docs.shape[0] < 1:
+            raise ValueError(
+                f"a query needs a (m >= 1, ...) document array, got {docs.shape}"
+            )
+        a = self._clock if arrival is None else float(arrival)
+        if a < self._clock:
+            raise ValueError(
+                f"arrivals must be nondecreasing (got {a} after {self._clock})"
+            )
+        self._clock = a
+        self._queue.append((self._seq, docs, a))
+        self._seq += 1
+        if len(self._queue) >= self.batch_groups:
+            self.flush()
+
+    def _scores(self, pending) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Concatenate a flush's documents -> (flat original-order scores,
+        sizes, offsets)."""
+        sizes = np.array([d.shape[0] for _, d, _ in pending], dtype=np.int64)
+        X = np.concatenate([d for _, d, _ in pending], axis=0)
+        F = np.asarray(self.score_fn(X) if self.score_fn is not None else X)
+        if F.ndim != 2 or F.shape[1] != self.gplan.T:
+            raise ValueError(
+                f"score matrix must be (m, T={self.gplan.T}), got {F.shape}"
+            )
+        offsets = np.zeros(sizes.size + 1, dtype=np.int64)
+        np.cumsum(sizes, out=offsets[1:])
+        return F, sizes, offsets
+
+    def _record(self, pending, gidx, verdicts, exit_stage, margin, offsets):
+        """Map global flat doc ids back to LOCAL positions and file the
+        verdicts under each query's submission seq."""
+        for j, gi in enumerate(gidx):
+            seq = pending[gi][0]
+            local = verdicts[j].astype(np.int64)
+            ok = local >= 0
+            local = np.where(ok, local - offsets[gi], -1)
+            self._results.append(
+                (
+                    seq,
+                    {
+                        "ranking": [int(v) for v in local if v >= 0],
+                        "exit_stage": int(exit_stage[j]),
+                        "margin": float(margin[j]),
+                    },
+                )
+            )
+            self.stats.stages_run += int(exit_stage[j])
+
+    def _run_bucket(self, F, sizes, offsets, gidx, bucket, arrivals=None):
+        """One grouped wave for one bucket shape."""
+        from repro.ranking.bucketing import bucket_layout
+
+        gp = self.gplan
+        rows, valid = bucket_layout(
+            sizes[gidx], bucket, offsets=offsets[gidx]
+        )
+        if self.executor is None:
+            # host oracle path: contiguous sub-matrix for this bucket
+            sub = np.concatenate(
+                [F[offsets[g] : offsets[g] + sizes[g]] for g in gidx], axis=0
+            )
+            res = run_grouped_host(gp, sub, sizes[gidx])
+            # host verdicts are relative to the sub-matrix; rebase to the
+            # flush's flat rows so _record's local mapping is uniform
+            sub_off = np.zeros(len(gidx) + 1, dtype=np.int64)
+            np.cumsum(sizes[gidx], out=sub_off[1:])
+            shift = (offsets[gidx] - sub_off[:-1])[:, None]
+            verd = np.where(res.verdicts >= 0, res.verdicts + shift, -1)
+            self.stats.scores_computed += res.scores_computed
+            self._record(
+                self._pending, gidx, verd, res.exit_stage, res.margin, offsets
+            )
+            return
+        ordered = np.ascontiguousarray(
+            np.asarray(F, dtype=np.float32)[:, gp.plan.order]
+        )
+        cap = max(self.capacity_groups, len(gidx))
+        if self.streaming:
+            res = self.executor.run_stream_grouped(
+                ordered, rows, valid, len(gidx), gp.eps_g, gp.k,
+                arrivals=arrivals, capacity_groups=cap,
+            )
+        else:
+            res = self.executor.run_grouped(
+                ordered, rows, valid, len(gidx), gp.eps_g, gp.k,
+                capacity_groups=cap,
+            )
+        self.stats.scores_computed += res.scores_computed
+        self._record(
+            self._pending, gidx, res.verdicts, res.exit_stage, res.margin,
+            offsets,
+        )
+
+    def _waves(self, sizes) -> list[tuple[int, np.ndarray]]:
+        """Streaming admission: (bucket, group indices) per wave.
+
+        Each wave serves ONE bucket width — the covering bucket of the
+        current queue head — and draws groups through the
+        ``AdmissionQueue`` until none fit: ``skip-ahead`` scans past
+        misfits (later small groups ride along), ``wait`` stops at the
+        first misfit (strict arrival order).
+        """
+        widths = bucket_widths_for(sizes, self.buckets)
+        q = AdmissionQueue(self.policy)
+        for gi, sz in enumerate(sizes):
+            q.push(gi, int(sz))
+        waves = []
+        while len(q):
+            head_size = q.pending[0][1]
+            b = next(w for w in widths if head_size <= w)
+            gids = []
+            while True:
+                g = q.pop_for(b)
+                if g is None:
+                    break
+                gids.append(g)
+            waves.append((b, np.asarray(gids, dtype=np.int64)))
+        return waves
+
+    def flush(self) -> None:
+        """Serve everything queued.  An empty queue launches nothing —
+        the empty-partial-flush contract the edge-case tests lock."""
+        if not self._queue:
+            return
+        pending, self._queue = self._queue, []
+        self._pending = pending  # flush-local, read by _run_bucket/_record
+        F, sizes, offsets = self._scores(pending)
+        self.stats.n_queries += len(pending)
+        self.stats.n_docs += int(sizes.sum())
+        self.stats.scores_possible += int(sizes.sum()) * self.gplan.T
+        if self.streaming and self.executor is not None:
+            base = pending[0][2]
+            steps = np.floor(
+                np.array([a for _, _, a in pending]) - base
+            ).astype(np.int32)
+            for b, gidx in self._waves(sizes):
+                # admission may reorder (skip-ahead); the ring wants a
+                # nondecreasing clock, so later-arrived skip-ahead picks
+                # keep their stamp and earlier ones saturate up to it
+                arr = np.maximum.accumulate(steps[gidx])
+                self._run_bucket(F, sizes, offsets, gidx, b, arrivals=arr)
+                self.stats.n_waves += 1
+        else:
+            for b, gidx in sorted(pack_by_bucket(sizes, self.buckets).items()):
+                self._run_bucket(F, sizes, offsets, gidx, b)
+                self.stats.n_waves += 1
+        del self._pending
+
+    def drain(self) -> list[dict]:
+        """Flush the queue and return every verdict in submission order."""
+        self.flush()
+        out = [d for _, d in sorted(self._results, key=lambda t: t[0])]
+        self._results = []
+        return out

@@ -1,0 +1,62 @@
+"""Bench-artifact schema contract: the root of BENCH_executor.json is
+CLOSED — every top-level section must be registered in
+``bench_schema.json`` (the ``"ranking"`` section is, as of DESIGN.md
+§12) — while nested objects stay open like a real validator's default.
+The committed artifact must validate against the committed schema.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+def _load_validator():
+    spec = importlib.util.spec_from_file_location(
+        "validate_schema_under_test", REPO / "benchmarks" / "validate_schema.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _schema():
+    return json.loads(
+        (REPO / "benchmarks" / "results" / "bench_schema.json").read_text()
+    )
+
+
+def test_committed_artifact_validates():
+    v = _load_validator()
+    doc = json.loads((REPO / "BENCH_executor.json").read_text())
+    assert v.validate(doc, _schema()) == []
+
+
+def test_unknown_top_level_section_rejected():
+    v = _load_validator()
+    doc = json.loads((REPO / "BENCH_executor.json").read_text())
+    doc["rogue_section"] = {"anything": 1}
+    errors = v.validate(doc, _schema())
+    assert any("rogue_section" in e and "unknown top-level" in e for e in errors)
+
+
+def test_nested_objects_stay_open():
+    """Only the ROOT is closed: undeclared keys inside a section (row
+    fields benches add over time) must not be violations."""
+    v = _load_validator()
+    doc = json.loads((REPO / "BENCH_executor.json").read_text())
+    doc["ranking"]["extra_annotation"] = "fine"
+    doc["ranking"]["rows"][0]["extra_field"] = 1
+    assert v.validate(doc, _schema()) == []
+
+
+def test_ranking_section_registered_and_required():
+    schema = _schema()
+    assert "ranking" in schema["required"]
+    assert "ranking" in schema["properties"]
+    row_schema = schema["properties"]["ranking"]["properties"]["rows"]["items"]
+    for key in ("paid_below_full", "parity_with_host_oracle",
+                "margin_inf_matches_full", "one_trace_per_bucket_shape"):
+        assert key in row_schema["required"]
+        assert row_schema["properties"][key]["enum"] == [True]

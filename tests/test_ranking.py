@@ -1,0 +1,462 @@
+"""Ranking subsystem (DESIGN.md §12): query-level early exit over
+ragged document groups.
+
+Covers the grouped fit (top-k stability thresholds over the greedy
+order), the host oracle vs ``full_cascade_topk`` at margin-infinity,
+bit-identical parity of the grouped device / sharded / streaming paths
+against the host oracle, the length-bucketed admission layer, and the
+ragged edge cases the ISSUE locks: singleton groups, groups spanning a
+score-kernel block boundary, ``k >= group size``, the empty partial
+flush, and skip-ahead vs wait streaming admission.
+
+Multi-shard cases need multiple XLA devices; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI ranking
+job does) — with fewer devices they SKIP, keeping plain tier-1 runs
+green on one device.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import CascadePlan
+from repro.kernels.cascade_kernel import cascade_group_pallas
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    matrix_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.launch.mesh import make_serving_mesh
+from repro.ranking import (
+    GroupedPlan,
+    GroupedRankServer,
+    MARGIN_INF,
+    fit_grouped,
+    full_cascade_topk,
+    ndcg_at_k,
+    run_grouped_host,
+)
+from repro.ranking.bucketing import (
+    AdmissionQueue,
+    bucket_layout,
+    bucket_widths_for,
+    group_offsets,
+    pack_by_bucket,
+)
+from repro.ranking.plan import topk_margin
+
+N_DEV = len(jax.devices())
+
+
+def _shards_params(counts=(1, 2, 4)):
+    return [
+        pytest.param(
+            k,
+            marks=pytest.mark.skipif(
+                N_DEV < k,
+                reason=f"needs {k} devices (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={k})",
+            ),
+        )
+        for k in counts
+    ]
+
+
+def _ragged_fixture(seed=0, G=23, T=24, lo=1, hi=20):
+    """Ragged groups with heavy-tailed latent quality: sizes include
+    singletons and sub-k groups, scores correlate across models so the
+    margin criterion actually fires."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(lo, hi, size=G).astype(np.int64)
+    N = int(sizes.sum())
+    quality = rng.exponential(1.0, size=N)
+    F = rng.normal(size=(N, T)) * 0.15 + quality[:, None]
+    return np.asarray(F, dtype=np.float64), sizes
+
+
+def _fit(F, sizes, k=3, alpha=0.05, chunk_t=6):
+    return fit_grouped(F, sizes, k, alpha=alpha, chunk_t=chunk_t)
+
+
+def _run_device_buckets(ex, gp, F, sizes, eps_g=None, streaming=False,
+                        arrivals=None):
+    """Drive one grouped executor over every bucket shape; reassemble
+    (verdicts, exit_stage, margin) in group order."""
+    eps = gp.eps_g if eps_g is None else eps_g
+    offsets = group_offsets(sizes)
+    packs = pack_by_bucket(sizes, gp.buckets)
+    cap = max(len(g) for g in packs.values())
+    G = sizes.size
+    verd = np.full((G, gp.k), -2, dtype=np.int32)
+    exst = np.zeros(G, dtype=np.int64)
+    marg = np.zeros(G, dtype=np.float32)
+    ordered = np.ascontiguousarray(
+        np.asarray(F, dtype=np.float32)[:, gp.plan.order]
+    )
+    for b, gidx in sorted(packs.items()):
+        rows, valid = bucket_layout(sizes[gidx], b, offsets=offsets[gidx])
+        if streaming:
+            arr = None if arrivals is None else arrivals[: len(gidx)]
+            res = ex.run_stream_grouped(
+                ordered, rows, valid, len(gidx), eps, gp.k,
+                arrivals=arr, capacity_groups=cap,
+            )
+        else:
+            res = ex.run_grouped(
+                ordered, rows, valid, len(gidx), eps, gp.k,
+                capacity_groups=cap,
+            )
+        verd[gidx] = res.verdicts
+        exst[gidx] = res.exit_stage
+        marg[gidx] = res.margin
+    return verd, exst, marg, len(packs)
+
+
+# ---------------------------------------------------------------- fit
+
+
+def test_fit_grouped_contract():
+    F, sizes = _ragged_fixture()
+    gp = _fit(F, sizes, alpha=0.1)
+    assert gp.eps_g.shape == (gp.S,)
+    assert gp.eps_g.dtype == np.float32
+    assert (gp.eps_g >= 0).all()
+    assert gp.train_disagreement <= 0.1 + 1e-12
+    assert gp.k == 3
+    assert gp.buckets == bucket_widths_for(sizes)
+    # the greedy order comes from fit_qwyc on the flat matrix
+    assert sorted(gp.plan.order) == list(range(F.shape[1]))
+
+
+def test_fit_grouped_rejects_bad_shapes():
+    F, sizes = _ragged_fixture()
+    with pytest.raises(ValueError, match="sum"):
+        fit_grouped(F, sizes[:-1], 3)
+    with pytest.raises(ValueError, match="at least one document"):
+        fit_grouped(F[: int(sizes.sum()) - sizes[-1] + 0], np.append(sizes[:-1], 0), 3)
+
+
+def test_margin_inf_never_exits():
+    F, sizes = _ragged_fixture()
+    gp = _fit(F, sizes).with_margin_inf()
+    host = run_grouped_host(gp, F, sizes)
+    assert (host.exit_stage == gp.S).all()
+    full = full_cascade_topk(F, sizes, gp.k, order=gp.plan.order)
+    np.testing.assert_array_equal(host.verdicts, full)
+
+
+# ------------------------------------------------------- topk_margin
+
+
+def test_topk_margin_k_ge_group_size():
+    """A group with at most k documents is trivially stable: margin is
+    +inf and the verdict lists every document, -1 padded."""
+    g = np.array([[3.0, 1.0, 2.0, 0.0]], dtype=np.float32)
+    valid = np.array([[True, True, False, False]])
+    idx, margin = topk_margin(g, valid, 3)
+    np.testing.assert_array_equal(idx, [[0, 1, -1]])
+    assert margin[0] == np.inf
+
+
+def test_topk_margin_tie_breaks_to_lowest_lane():
+    g = np.array([[1.0, 2.0, 2.0, 1.0]], dtype=np.float32)
+    valid = np.ones((1, 4), dtype=bool)
+    idx, margin = topk_margin(g, valid, 2)
+    np.testing.assert_array_equal(idx, [[1, 2]])
+    assert margin[0] == np.float32(1.0)
+
+
+# --------------------------------------------------------- bucketing
+
+
+def test_bucket_widths_extend_by_doubling():
+    assert bucket_widths_for([3, 300], (4, 8)) == (4, 512)
+
+
+def test_pack_by_bucket_smallest_cover():
+    packs = pack_by_bucket([1, 5, 9, 4, 17], (4, 8, 16, 32))
+    assert {b: list(g) for b, g in packs.items()} == {
+        4: [0, 3], 8: [1], 16: [2], 32: [4],
+    }
+
+
+def test_bucket_layout_rejects_oversize():
+    with pytest.raises(ValueError, match="does not fit"):
+        bucket_layout([9], 8)
+
+
+def test_admission_skip_ahead_vs_wait():
+    """A freed slot smaller than the queue head: ``wait`` leaves it
+    idle, ``skip-ahead`` admits the first later group that fits."""
+    for policy, expect in (("wait", None), ("skip-ahead", 7)):
+        q = AdmissionQueue(policy)
+        q.push(3, 16)
+        q.push(7, 2)
+        assert q.pop_for(4) == expect
+        if policy == "wait":
+            assert len(q) == 2  # head-of-line blocking: nothing admitted
+        else:
+            assert q.pending == [(3, 16)]
+
+
+def test_server_waves_differ_by_policy():
+    """[fits, too-big, fits] for the head's bucket: skip-ahead lets the
+    third group ride the first wave, wait defers it to the second."""
+    gp = _dummy_gplan(buckets=(4, 16))
+    sizes = np.array([3, 16, 2])
+    sk = GroupedRankServer(gp, policy="skip-ahead")._waves(sizes)
+    wt = GroupedRankServer(gp, policy="wait")._waves(sizes)
+    assert [(b, list(g)) for b, g in sk] == [(4, [0, 2]), (16, [1])]
+    assert [(b, list(g)) for b, g in wt] == [(4, [0]), (16, [1, 2])]
+
+
+def _dummy_gplan(buckets=(4, 8, 16, 32), T=12, chunk_t=6, k=3):
+    rng = np.random.default_rng(5)
+    F = rng.normal(size=(40, T))
+    sizes = np.array([10, 10, 10, 10], dtype=np.int64)
+    return fit_grouped(F, sizes, k, alpha=0.1, chunk_t=chunk_t,
+                       buckets=buckets)
+
+
+# ------------------------------------------------------ group kernel
+
+
+def test_group_kernel_strict_exit_at_inf():
+    """margin > eps is STRICT: eps=+inf never exits, even the trivially
+    stable (margin=+inf) singleton group."""
+    g = np.array([[5.0, 0.0], [1.0, 2.0]], dtype=np.float32)
+    valid = np.array([[1, 0], [1, 1]], dtype=np.int32)
+    eps = np.full(2, np.inf, dtype=np.float32)
+    margin, exit_b = cascade_group_pallas(g, valid, eps, 1, interpret=True)
+    assert np.asarray(margin)[0] == np.inf  # size <= k: trivially stable
+    assert not np.asarray(exit_b).any()
+    # a finite eps admits both: the singleton via +inf margin, the pair
+    # via its real gap
+    eps2 = np.full(2, 0.5, dtype=np.float32)
+    margin2, exit2 = cascade_group_pallas(g, valid, eps2, 1, interpret=True)
+    assert np.asarray(exit2).all()
+    assert np.asarray(margin2)[1] == np.float32(1.0)
+
+
+# -------------------------------------------------- device parity
+
+
+def test_device_grouped_parity():
+    """Grouped device program == host oracle bit for bit (fitted eps AND
+    margin-infinity), one compiled trace per bucket shape."""
+    F, sizes = _ragged_fixture()
+    gp = _fit(F, sizes)
+    host = run_grouped_host(gp, F, sizes)
+    full = full_cascade_topk(F, sizes, gp.k, order=gp.plan.order)
+    dplan = DevicePlan.from_plan(gp.plan)
+    ex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=16,
+                        megakernel=False)
+    verd, exst, marg, n_buckets = _run_device_buckets(ex, gp, F, sizes)
+    np.testing.assert_array_equal(verd, host.verdicts)
+    np.testing.assert_array_equal(exst, host.exit_stage)
+    np.testing.assert_array_equal(marg, host.margin)
+    eps_inf = np.full(gp.S, MARGIN_INF, dtype=np.float32)
+    verd_i, exst_i, _, _ = _run_device_buckets(ex, gp, F, sizes, eps_g=eps_inf)
+    np.testing.assert_array_equal(verd_i, full)
+    assert (exst_i == gp.S).all()
+    # eps is a traced argument: both settings share the bucket's trace
+    assert ex.traces == n_buckets
+
+
+def test_device_grouped_singletons_and_k_ge_size():
+    """All-singleton groups with k=3: every verdict is [id, -1, -1],
+    margin +inf, stage-1 exit under any finite eps."""
+    rng = np.random.default_rng(7)
+    G, T = 9, 12
+    sizes = np.ones(G, dtype=np.int64)
+    F = rng.normal(size=(G, T))
+    gp = fit_grouped(F, sizes, 3, alpha=0.0, chunk_t=4)
+    host = run_grouped_host(gp, F, sizes)
+    np.testing.assert_array_equal(
+        host.verdicts, np.stack([np.arange(G), -np.ones(G), -np.ones(G)], 1)
+    )
+    assert (host.exit_stage == 1).all()
+    assert (host.margin == np.inf).all()
+    dplan = DevicePlan.from_plan(gp.plan)
+    ex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=16,
+                        megakernel=False)
+    verd, exst, marg, _ = _run_device_buckets(ex, gp, F, sizes)
+    np.testing.assert_array_equal(verd, host.verdicts)
+    np.testing.assert_array_equal(exst, host.exit_stage)
+    np.testing.assert_array_equal(marg, host.margin)
+
+
+def test_device_grouped_block_boundary_straddle():
+    """A bucket width above the score kernel's block_n: one group's
+    lanes straddle the block boundary inside the flattened score call —
+    masking and segment reductions must still see the group whole."""
+    rng = np.random.default_rng(11)
+    sizes = np.array([12, 12, 12], dtype=np.int64)  # B=16 > block_n=8
+    T = 12
+    F = rng.normal(size=(int(sizes.sum()), T)) * 0.2 + rng.exponential(
+        1.0, size=(int(sizes.sum()), 1)
+    )
+    gp = fit_grouped(F, sizes, 3, alpha=0.34, chunk_t=4)
+    host = run_grouped_host(gp, F, sizes)
+    dplan = DevicePlan.from_plan(gp.plan)
+    ex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=8,
+                        megakernel=False)
+    verd, exst, marg, _ = _run_device_buckets(ex, gp, F, sizes)
+    np.testing.assert_array_equal(verd, host.verdicts)
+    np.testing.assert_array_equal(exst, host.exit_stage)
+    np.testing.assert_array_equal(marg, host.margin)
+
+
+@pytest.mark.parametrize("shards", _shards_params())
+def test_sharded_grouped_parity(shards):
+    """Sharded grouped program == host oracle bit for bit at shards
+    1/2/4 (whole groups never straddle a shard by construction)."""
+    F, sizes = _ragged_fixture(seed=3)
+    gp = _fit(F, sizes)
+    host = run_grouped_host(gp, F, sizes)
+    full = full_cascade_topk(F, sizes, gp.k, order=gp.plan.order)
+    dplan = DevicePlan.from_plan(gp.plan)
+    sx = ShardedDeviceExecutor(
+        dplan, matrix_stage_scorer(dplan), make_serving_mesh(shards),
+        block_n=16,
+    )
+    verd, exst, marg, n_buckets = _run_device_buckets(sx, gp, F, sizes)
+    np.testing.assert_array_equal(verd, host.verdicts)
+    np.testing.assert_array_equal(exst, host.exit_stage)
+    np.testing.assert_array_equal(marg, host.margin)
+    eps_inf = np.full(gp.S, MARGIN_INF, dtype=np.float32)
+    verd_i, exst_i, _, _ = _run_device_buckets(sx, gp, F, sizes, eps_g=eps_inf)
+    np.testing.assert_array_equal(verd_i, full)
+    assert (exst_i == gp.S).all()
+    assert sx.traces == n_buckets
+
+
+def test_streaming_grouped_parity():
+    """The grouped admission ring (staggered arrivals, slot-granular
+    refill) produces the same verdicts as the batch grouped path."""
+    F, sizes = _ragged_fixture(seed=4)
+    gp = _fit(F, sizes)
+    host = run_grouped_host(gp, F, sizes)
+    dplan = DevicePlan.from_plan(gp.plan)
+    ex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=16,
+                        megakernel=False)
+    arrivals = (np.arange(sizes.size) // 3).astype(np.int32)
+    verd, exst, marg, n_buckets = _run_device_buckets(
+        ex, gp, F, sizes, streaming=True, arrivals=arrivals
+    )
+    np.testing.assert_array_equal(verd, host.verdicts)
+    np.testing.assert_array_equal(exst, host.exit_stage)
+    np.testing.assert_array_equal(marg, host.margin)
+    assert ex.traces == n_buckets
+
+
+# ------------------------------------------------------------ server
+
+
+def test_server_empty_partial_flush():
+    """Flushing an empty queue launches nothing: no waves, no bill, and
+    drain returns []."""
+    gp = _dummy_gplan()
+    srv = GroupedRankServer(gp, batch_groups=8)
+    srv.flush()
+    assert srv.stats.n_waves == 0
+    assert srv.stats.scores_computed == 0
+    assert srv.drain() == []
+
+
+def test_server_host_path_matches_oracle():
+    F, sizes = _ragged_fixture(seed=9, G=11)
+    gp = _fit(F, sizes)
+    host = run_grouped_host(gp, F, sizes)
+    offsets = group_offsets(sizes)
+    srv = GroupedRankServer(gp, batch_groups=len(sizes))
+    for i in range(sizes.size):
+        srv.submit(F[offsets[i] : offsets[i + 1]])
+    out = srv.drain()
+    assert len(out) == sizes.size
+    for i, o in enumerate(out):
+        glob = host.verdicts[i]
+        expect = [int(v - offsets[i]) for v in glob if v >= 0]
+        assert o["ranking"] == expect
+        assert o["exit_stage"] == host.exit_stage[i]
+    assert srv.stats.n_queries == sizes.size
+    assert srv.stats.scores_computed == host.scores_computed
+
+
+def test_server_device_path_matches_host_path():
+    F, sizes = _ragged_fixture(seed=10, G=10)
+    gp = _fit(F, sizes)
+    offsets = group_offsets(sizes)
+
+    def run_with(executor):
+        srv = GroupedRankServer(gp, executor=executor,
+                                batch_groups=len(sizes))
+        for i in range(sizes.size):
+            srv.submit(F[offsets[i] : offsets[i + 1]])
+        return srv.drain()
+
+    dplan = DevicePlan.from_plan(gp.plan)
+    ex = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=16,
+                        megakernel=False)
+    host_out, dev_out = run_with(None), run_with(ex)
+    assert [o["ranking"] for o in host_out] == [o["ranking"] for o in dev_out]
+    assert [o["exit_stage"] for o in host_out] == [
+        o["exit_stage"] for o in dev_out
+    ]
+
+
+# ----------------------------------------------------------- metrics
+
+
+def test_ndcg_bounds_and_perfect_order():
+    rel = np.array([2, 1, 0, 0, 1])
+    sizes = np.array([3, 2])
+    perfect = np.array([[0, 1, -1], [4, 3, -1]], dtype=np.int32)
+    assert ndcg_at_k(rel, perfect, sizes, 3) == pytest.approx(1.0)
+    worst = np.array([[2, 1, -1], [3, 4, -1]], dtype=np.int32)
+    assert ndcg_at_k(rel, worst, sizes, 3) < 1.0
+
+
+def test_ndcg_all_irrelevant_group_is_perfect():
+    rel = np.zeros(4)
+    sizes = np.array([4])
+    verd = np.array([[3, 2, 1]], dtype=np.int32)
+    assert ndcg_at_k(rel, verd, sizes, 3) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------- api seam
+
+
+def test_api_grouped_fit_compile_rank():
+    from repro import api
+
+    F, sizes = _ragged_fixture(seed=12, G=8)
+    fitted = api.fit(F, groups=sizes, topk=3, alpha=0.05, chunk_t=6)
+    assert isinstance(fitted.grouped, GroupedPlan)
+    host_out = fitted.compile("host").rank(F, groups=sizes)
+    dev_out = fitted.compile("device").rank(F, groups=sizes)
+    assert [o["ranking"] for o in host_out] == [o["ranking"] for o in dev_out]
+    # margin-infinity through the public seam == full ensemble top-k
+    inf_out = fitted.compile("host").rank(F, groups=sizes, margin_inf=True)
+    full = full_cascade_topk(F, sizes, 3, order=fitted.grouped.plan.order)
+    offsets = group_offsets(sizes)
+    for i, o in enumerate(inf_out):
+        expect = [int(v - offsets[i]) for v in full[i] if v >= 0]
+        assert o["ranking"] == expect
+        assert o["exit_stage"] == fitted.grouped.S
+
+
+def test_api_topk_requires_groups():
+    from repro import api
+
+    F, _ = _ragged_fixture(seed=13, G=4)
+    with pytest.raises(ValueError, match="groups"):
+        api.fit(F, topk=3)
+
+
+def test_api_grouped_capability_flag():
+    from repro.api.registry import get_backend
+
+    for name in ("host", "device", "sharded"):
+        assert get_backend(name).capabilities.grouped
