@@ -1,0 +1,238 @@
+"""Mesh-scaling bench: the 2-D ``("data", "model")`` serving mesh
+(DESIGN.md §13, EXPERIMENTS.md §Mesh-scaling protocol).
+
+A seeded GBT ensemble (real Pallas tree kernels, so the stage param
+slabs are genuine arrays with measurable bytes) is served through every
+factorization of the same device budget — 4x1 / 2x2 / 1x4 — and per
+mesh shape the bench records:
+
+* **parity** — decisions/exit_step bit-identical to the host
+  ``ChunkedExecutor`` oracle and g_final bit-identical to the
+  single-device f32 ``DeviceExecutor`` (asserted before anything is
+  recorded): the model-axis psum adds exact zeros outside each shard's
+  column slice, so shard placement cannot move a bit.
+* **per-axis occupancy** — data-axis survivor occupancy per stage and
+  the data-critical-path block count; the model axis holds full row
+  replicas, so its cost is the psum count, not occupancy.
+* **psum count** — exactly one model-axis collective per stage step per
+  mesh coordinate (asserted against ``per_coord_psums``).
+* **per-shard slab bytes** — the column-partitioned slab each device
+  holds vs the full 1-D slab, plus the padding ratio a non-dividing
+  split (w_global = M * ceil(W/M) > W) pays in billed scores.
+
+Everything is fixture-seeded (``MESH_SEED``): rows are deterministic,
+so they merge into the repo-root ``BENCH_executor.json`` under the
+``"mesh2d"`` key validated by ``benchmarks/validate_schema.py``.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src:. python -m benchmarks.bench_mesh2d [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_rows
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+MESH_SEED = 2033
+MESH_SHAPES = ((4, 1), (2, 2), (1, 4))
+ALPHA = 0.01
+CHUNK_T = 6
+BLOCK_N = 32
+
+
+def mesh2d_fixture(quick: bool = False):
+    """(feats, thrs, leaves, x) for the seeded GBT ensemble — the ONE
+    fixture this bench and EXPERIMENTS.md §Mesh-scaling reference."""
+    rng = np.random.default_rng(MESH_SEED)
+    t = 24 if quick else 48
+    depth = 4
+    d = 16
+    n = 256 if quick else 1024
+    feats = rng.integers(0, d, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    x = rng.uniform(size=(n, d)).astype(np.float32)
+    return feats, thrs, leaves, x
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(np.asarray(a).nbytes for a in jax.tree_util.tree_leaves(tree)))
+
+
+def run(quick: bool = False, shapes=MESH_SHAPES) -> list[dict]:
+    import jax.numpy as jnp
+
+    from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+    from repro.core.executor import ChunkedExecutor, matrix_producer
+    from repro.kernels import ops
+    from repro.kernels.device_executor import (
+        DeviceExecutor,
+        DevicePlan,
+        tree_stage_scorer,
+    )
+    from repro.kernels.sharded_executor import (
+        ShardedDeviceExecutor,
+        critical_blocks,
+    )
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.shardings import split_columns
+
+    n_dev = len(jax.devices())
+    usable = [(d, m) for d, m in shapes if d * m <= n_dev]
+    skipped = [(d, m) for d, m in shapes if d * m > n_dev]
+    if skipped:
+        print(
+            f"[bench_mesh2d] skipping shapes {skipped}: only {n_dev} XLA "
+            "device(s) (XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+
+    feats, thrs, leaves, x = mesh2d_fixture(quick)
+    n = x.shape[0]
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=BLOCK_N,
+        )
+    )
+    qm = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=ALPHA)
+    ev = evaluate_cascade(qm, F)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=CHUNK_T)
+    dplan = DevicePlan.from_plan(plan)
+    W = dplan.W
+
+    def scorer():
+        return tree_stage_scorer(
+            dplan, feats[qm.order], thrs[qm.order], leaves[qm.order],
+            block_n=BLOCK_N,
+        )
+
+    host = ChunkedExecutor(plan, matrix_producer(F[:, qm.order])).run(n)
+    dex = DeviceExecutor(dplan, scorer(), block_n=BLOCK_N, megakernel=False)
+    dev = dex.run(x, n)
+    scores_single = int(dev.scores_computed)
+    # the full 1-D slab every device holds, on the same stacked basis the
+    # 2-D partition uses (model_partition at M=1: (1, S, W, ...) stacks)
+    mp1, _ = scorer().model_partition(1)
+    slab_full = _tree_bytes(mp1)
+
+    rows_out: list[dict] = []
+    for d, m in usable:
+        sx = ShardedDeviceExecutor(
+            dplan, scorer(), make_serving_mesh(d, m), block_n=BLOCK_N,
+            megakernel=False,
+        )
+        res = sx.run(x, n)
+        # parity gate before any accounting
+        assert np.array_equal(res.decisions, ev["decisions"])
+        assert np.array_equal(res.exit_step, ev["exit_step"])
+        assert np.array_equal(res.decisions, host.decisions)
+        assert np.array_equal(res.exit_step, host.exit_step)
+        assert np.array_equal(res.g_final, dev.g_final)
+        assert sx.traces == 1
+        info = sx.last_run_info
+        s_f = int(info["stages_run"])
+        n_in = np.asarray(info["per_shard_n_in"])[:, :s_f]
+        cap_l = -(-n // d)
+        w_local, w_global = split_columns(W, m)
+        if m > 1:
+            psums_total = int(np.asarray(info["per_coord_psums"]).sum())
+            assert psums_total == d * m * s_f  # ONE psum per coord per stage
+            slab_shard = _tree_bytes(sx._mparams) // m
+        else:
+            psums_total = 0
+            slab_shard = slab_full
+        rows_out.append(
+            {
+                "experiment": "mesh2d_tree",
+                "alpha": ALPHA,
+                "n": int(n),
+                "T": int(feats.shape[0]),
+                "chunk_t": CHUNK_T,
+                "block_n": BLOCK_N,
+                "seed": MESH_SEED,
+                "data_shards": int(d),
+                "model_shards": int(m),
+                "W": int(W),
+                "w_local": int(w_local),
+                "w_global": int(w_global),
+                "padding_ratio": w_global / W,
+                "stages_run": s_f,
+                "scores_paid": int(res.scores_computed),
+                "scores_single": scores_single,
+                "crit_blocks": critical_blocks(info["per_shard_n_in"], BLOCK_N),
+                "data_occupancy_mean": float(
+                    np.mean(n_in.sum(axis=0) / (d * cap_l))
+                ),
+                "psums_total": psums_total,
+                "slab_bytes_per_device": int(slab_shard),
+                "slab_bytes_full": int(slab_full),
+                "slab_fraction": slab_shard / slab_full,
+                "parity_with_host_oracle": True,
+                "g_final_bit_exact": True,
+                "traces": int(sx.traces),
+            }
+        )
+    save_rows("mesh2d_tree", rows_out)
+    _merge_root_summary(rows_out)
+    return rows_out
+
+
+def _merge_root_summary(rows: list[dict]) -> None:
+    """Add/replace the ``"mesh2d"`` section of BENCH_executor.json (the
+    device-executor bench owns the rest of the file; this section is
+    preserved across its rewrites like ``"ranking"``/``"neural"``)."""
+    path = REPO_ROOT / "BENCH_executor.json"
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["mesh2d"] = {
+        "protocol": "EXPERIMENTS.md §Mesh-scaling protocol",
+        "fixture": (
+            "seeded GBT ensemble (benchmarks.bench_mesh2d.mesh2d_fixture)"
+        ),
+        "seed": MESH_SEED,
+        "rows": rows,
+        "headline": {
+            "parity_with_host_oracle": bool(
+                all(r["parity_with_host_oracle"] for r in rows)
+            ),
+            "g_final_bit_exact": bool(
+                all(r["g_final_bit_exact"] for r in rows)
+            ),
+            "one_trace_per_mesh_shape": bool(
+                all(r["traces"] == 1 for r in rows)
+            ),
+            "max_model_shards_measured": max(
+                (r["model_shards"] for r in rows), default=0
+            ),
+            "min_slab_fraction": min(
+                (r["slab_fraction"] for r in rows), default=None
+            ),
+            "max_padding_ratio": max(
+                (r["padding_ratio"] for r in rows), default=None
+            ),
+        },
+    }
+    path.write_text(json.dumps(doc, indent=1))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(
+            f"mesh {r['data_shards']}x{r['model_shards']:<2} "
+            f"scores {r['scores_paid']} (1-D {r['scores_single']}) "
+            f"slab/device {r['slab_bytes_per_device']}B "
+            f"({r['slab_fraction']:.2f} of full) "
+            f"psums={r['psums_total']} "
+            f"occupancy={r['data_occupancy_mean']:.2f} traces={r['traces']}"
+        )

@@ -187,6 +187,26 @@ def collect_counters() -> dict[str, int]:
             c[f"{base}.multikernel.scores"] = int(sfres.scores_computed)
             c[f"{base}.multikernel.traces"] = int(sx_fb.traces)
 
+        # 2-D ("data", "model") mesh (DESIGN.md §13): stage slabs column-
+        # sharded over "model", one psum per stage step.  Decisions stay
+        # identical to the host oracle; the bill uses the PADDED global
+        # width (w_global = M * ceil(W/M)), so these counters also lock
+        # the padding overhead of the split.  Purely additive: the 2-D
+        # executors only read fixtures the 1-D cells already froze.
+        for dd, mm in ((2, 2), (1, 4)):
+            sx2 = SHARDED.make_executor(
+                dplan, scorer=matrix_stage_scorer(dplan), shards=dd,
+                model_shards=mm, block_n=64,
+            )
+            r2 = sx2.run(F[:, m.order].astype(np.float32), n)
+            assert np.array_equal(r2.decisions, ev["decisions"])
+            info2 = sx2.last_run_info
+            q2 = f"{p}.{SHARDED.billing_key(shards=dd, model_shards=mm)}"
+            c[f"{q2}.scores"] = int(r2.scores_computed)
+            c[f"{q2}.stages"] = int(info2["stages_run"])
+            c[f"{q2}.psums"] = int(info2["per_coord_psums"].sum())
+            c[f"{q2}.traces"] = int(sx2.traces)
+
     # serving-path billing: lazy host backend and the sharded device path
     rng2 = np.random.default_rng(2027)
     ns, ts, d = 384, 24, 8

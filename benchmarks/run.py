@@ -383,6 +383,39 @@ def main() -> None:
 
     _section("ranking_ragged", sec_ranking)
 
+    # 2-D ("data", "model") serving mesh (DESIGN.md §13, EXPERIMENTS.md
+    # §Mesh-scaling protocol): multi-device mesh shapes, so availability
+    # and the SKIPPED reason come from the sharded backend like the
+    # sharded section; the merge into BENCH_executor.json is re-applied
+    # even on cache hits (idempotent) like the ranking/chaos sections
+    def sec_mesh2d():
+        m2_ok, m2_why = get_backend("sharded").available()
+        if not m2_ok:
+            print(f"mesh2d,,SKIPPED: {m2_why}")
+            return
+        from benchmarks import bench_mesh2d
+
+        try:
+            rows = _cached(
+                "mesh2d_tree",
+                lambda: bench_mesh2d.run(quick=args.quick),
+                args.recompute,
+            )
+        except RuntimeError as e:  # pragma: no cover - environment-dependent
+            print(f"mesh2d,,SKIPPED ({type(e).__name__}: {e})")
+            rows = []
+        if rows:
+            bench_mesh2d._merge_root_summary(rows)
+            best = min(rows, key=lambda r: r["slab_fraction"])
+            print(
+                f"mesh2d,,slab/device {best['slab_fraction']:.2f} of full at "
+                f"{best['data_shards']}x{best['model_shards']} "
+                f"(psums {best['psums_total']}, parity+one-trace: "
+                f"{all(r['parity_with_host_oracle'] and r['traces'] == 1 for r in rows)})"
+            )
+
+    _section("mesh2d", sec_mesh2d)
+
     # Chaos: fault injection vs the guarded serving stack (DESIGN.md
     # §10, EXPERIMENTS.md §Chaos protocol) — deterministic seeds, so the
     # rows are stable run to run; the merge into BENCH_executor.json is

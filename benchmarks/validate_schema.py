@@ -73,9 +73,11 @@ def validate(doc, schema: dict, path: str = "$") -> list[str]:
             if key in doc:
                 errors.extend(validate(doc[key], sub, f"{path}.{key}"))
         if path == "$" and "properties" in schema:
-            # the root is closed: every top-level section must be
-            # schema-registered or the artifact ships shape-unlocked
-            for key in doc:
+            # the root is closed: EVERY unregistered top-level section is
+            # reported (sorted, so the failure list is stable regardless
+            # of the document's key order), or the artifact ships
+            # shape-unlocked
+            for key in sorted(doc):
                 if key not in schema["properties"]:
                     errors.append(
                         f"{path}: unknown top-level section {key!r} "

@@ -18,6 +18,11 @@ protocol and every stage producer behind one ``StageScorer`` protocol:
     #    name one explicitly to pin it.
     compiled = fitted.compile("auto")            # or "host"|"device"|"sharded"
 
+    #    the sharded rung can also split every stage's param slab over a
+    #    second "model" mesh axis (DESIGN.md §13) — verdicts stay
+    #    bit-identical, per-device slab memory drops ~model_shards:
+    compiled = fitted.compile("sharded", shards=2, model_shards=2)
+
     # 3a. evaluate one batch (bit-identical across all backends):
     result = compiled.evaluate(scores=F_test)
     result.decisions, result.exit_step, result.scores_computed

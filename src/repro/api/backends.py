@@ -88,6 +88,10 @@ class BackendCapabilities:
     ``grouped``: the executor has ``run_grouped`` — the group-level
     decide path for ragged ranking queries (DESIGN.md §12), consumed by
     ``repro.ranking.GroupedRankServer`` and ``api.fit(groups=...)``.
+    ``model_parallel``: accepts a ``model_shards`` option and splits the
+    stage param slabs over a ``"model"`` mesh axis (2-D ``("data",
+    "model")`` mesh, DESIGN.md §13) for batch ``run`` — the grouped and
+    streaming paths stay data-parallel-only at ``model_shards > 1``.
     """
 
     on_device: bool
@@ -97,6 +101,7 @@ class BackendCapabilities:
     supports_rebalance: bool = False
     streaming: bool = False
     grouped: bool = False
+    model_parallel: bool = False
 
 
 @runtime_checkable
@@ -240,7 +245,7 @@ class ShardedBackend:
     capabilities = BackendCapabilities(
         on_device=True, min_devices=2, trace_cached=True,
         data_parallel=True, supports_rebalance=True, streaming=True,
-        grouped=True,
+        grouped=True, model_parallel=True,
     )
 
     def available(self, n_devices=None, interpret_only=None) -> tuple[bool, str]:
@@ -260,14 +265,32 @@ class ShardedBackend:
             )
         return faults.on_available(self.name, True, f"{nd} XLA devices")
 
-    def resolve_mesh(self, mesh=None, shards: int | None = None):
-        """The mesh this backend will run on: an explicit mesh wins, else a
-        fresh ``("data",)`` mesh over ``shards`` (default: all) devices."""
+    def resolve_mesh(
+        self,
+        mesh=None,
+        shards: int | None = None,
+        model_shards: int = 1,
+    ):
+        """The mesh this backend will run on: an explicit mesh wins, else
+        a fresh ``("data",)`` mesh over ``shards`` (default: all) devices
+        — or, with ``model_shards > 1``, a 2-D ``("data", "model")`` mesh
+        of ``shards x model_shards`` (default data width: the devices
+        that remain after the model axis takes its share)."""
+        m = max(1, int(model_shards))
         if mesh is not None:
+            have = int(dict(mesh.shape).get("model", 1))
+            if m > 1 and have != m:
+                raise ValueError(
+                    f"model_shards={m} conflicts with the explicit mesh "
+                    f"{tuple(mesh.shape.items())} (its 'model' axis is "
+                    f"{have}-wide); pass one or the other (DESIGN.md §13)"
+                )
             return mesh
-        return make_serving_mesh(
-            int(shards) if shards else len(jax.devices())
-        )
+        if shards:
+            n = int(shards)
+        else:
+            n = max(1, len(jax.devices()) // m)
+        return make_serving_mesh(n, m)
 
     def make_executor(
         self,
@@ -276,6 +299,7 @@ class ShardedBackend:
         scorer: BoundScorer,
         mesh=None,
         shards: int | None = None,
+        model_shards: int = 1,
         block_n: int = DEFAULT_BLOCK_N,
         interpret: bool | None = None,
         rebalance: bool = False,
@@ -285,14 +309,22 @@ class ShardedBackend:
     ) -> ShardedDeviceExecutor:
         faults.on_make_executor(self.name)
         return ShardedDeviceExecutor(
-            _as_device_plan(plan), scorer, self.resolve_mesh(mesh, shards),
+            _as_device_plan(plan), scorer,
+            self.resolve_mesh(mesh, shards, model_shards),
             block_n=block_n, interpret=interpret,
             rebalance=rebalance, rebalance_ratio=rebalance_ratio,
             megakernel=megakernel, check_finite=check_finite,
         )
 
-    def billing_key(self, shards: int, rebalance: bool = False) -> str:
-        return f"{self.name}{int(shards)}{'r' if rebalance else ''}"
+    def billing_key(
+        self, shards: int, rebalance: bool = False, model_shards: int = 1
+    ) -> str:
+        # 1-D names predate the model axis and must stay stable (the
+        # perf-gate baseline keys them); M > 1 names the full mesh shape
+        shape = f"{int(shards)}"
+        if int(model_shards) > 1:
+            shape += f"x{int(model_shards)}"
+        return f"{self.name}{shape}{'r' if rebalance else ''}"
 
 
 # -- graceful degradation (DESIGN.md §10) -------------------------------

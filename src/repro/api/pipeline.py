@@ -237,6 +237,7 @@ class FittedCascade:
         scorer_factory=None,
         mesh=None,
         shards: int | None = None,
+        model_shards: int = 1,
         rebalance: bool = False,
         n_devices: int | None = None,
         backoff: BackoffPolicy | None = None,
@@ -262,7 +263,10 @@ class FittedCascade:
         drives it through ``host_producer``).  Defaults to the template
         ``fit`` calibrated (model-backed fit); otherwise batches are
         precomputed score matrices.  Sharded-only: ``mesh`` / ``shards``
-        / ``rebalance``.
+        / ``rebalance`` / ``model_shards`` (``model_shards > 1`` shards
+        every stage's param slab over a second ``"model"`` mesh axis —
+        DESIGN.md §13 — and needs a backend whose capabilities carry
+        ``model_parallel``).
 
         ``backoff``/``sleep`` tune the runtime degradation ladder
         (DESIGN.md §10): construction and wave failures are retried with
@@ -297,7 +301,9 @@ class FittedCascade:
                     f"{list(backend_names())} (or {AUTO!r} to negotiate)"
                 ) from None
             ok, why = b.available(n_devices=n_devices)
-            if not ok and (mesh is not None or shards is not None):
+            if not ok and (
+                mesh is not None or shards is not None or int(model_shards) > 1
+            ):
                 # an explicit mesh / shard count that fits the live
                 # device count overrides the rung's min-device heuristic
                 # (a 1-shard mesh is a legitimate degenerate config);
@@ -306,7 +312,11 @@ class FittedCascade:
                 import jax
 
                 nd = len(jax.devices()) if n_devices is None else n_devices
-                want = int(shards) if mesh is None else 0
+                want = (
+                    int(shards or 1) * max(1, int(model_shards))
+                    if mesh is None
+                    else 0
+                )
                 if nd >= want:
                     ok, why = b.available(
                         n_devices=max(nd, b.capabilities.min_devices)
@@ -332,6 +342,20 @@ class FittedCascade:
                 f"mesh/shards/rebalance require a data-parallel backend "
                 f"(backend is {b.name!r})"
             )
+        if int(model_shards) > 1 and not getattr(
+            caps, "model_parallel", False
+        ):
+            raise ValueError(
+                f"model_shards requires a model-parallel backend (backend "
+                f"is {b.name!r}; the built-in 'sharded' rung carries the "
+                "capability — DESIGN.md §13)"
+            )
+        if int(model_shards) > 1 and self.grouped is not None:
+            raise ValueError(
+                "model_shards > 1 is batch-run only: the grouped (ranking) "
+                "decide stays data-parallel (DESIGN.md §13); compile with "
+                "model_shards=1 for grouped serving"
+            )
         if self.grouped is not None and not getattr(caps, "grouped", False):
             raise ValueError(
                 f"fit(groups=...) needs a backend with the grouped "
@@ -349,6 +373,7 @@ class FittedCascade:
             scorer=scorer,
             mesh=mesh,
             shards=shards,
+            model_shards=model_shards,
             rebalance=rebalance,
             backoff=backoff,
             sleep=sleep,
@@ -378,6 +403,7 @@ class CompiledCascade:
         scorer: StageScorer | None = None,
         mesh=None,
         shards: int | None = None,
+        model_shards: int = 1,
         rebalance: bool = False,
         backoff: BackoffPolicy | None = None,
         sleep=None,
@@ -396,6 +422,7 @@ class CompiledCascade:
         self.scorer_template = scorer
         self.mesh = mesh
         self.shards = shards
+        self.model_shards = max(1, int(model_shards))
         self.rebalance = bool(rebalance)
         self.ladder = DegradationLadder(backoff=backoff, sleep=sleep)
         self._executor = None
@@ -442,6 +469,12 @@ class CompiledCascade:
             opts.update(
                 mesh=self.mesh, shards=self.shards, rebalance=self.rebalance
             )
+            # model_shards likewise only travels to a model-parallel rung
+            # (a sharded -> device fall drops the whole 2-D request)
+            if self.model_shards > 1 and getattr(
+                backend.capabilities, "model_parallel", False
+            ):
+                opts["model_shards"] = self.model_shards
         self._executor = self.ladder.attempt(
             "construct", backend.name,
             lambda: backend.make_executor(dplan, **opts),
@@ -770,6 +803,10 @@ class CompiledCascade:
                 opts["mesh"] = self.mesh
             if self.shards is not None:
                 opts["shards"] = self.shards
+            if self.model_shards > 1 and getattr(
+                self.backend.capabilities, "model_parallel", False
+            ):
+                opts["model_shards"] = self.model_shards
             if self.rebalance:
                 opts["rebalance"] = True
         if self.block_n is not None:

@@ -259,6 +259,17 @@ class BoundScorer:
     lane), so the fused path can never silently engage for them.
     ``state_spec``: pytree of ``jax.ShapeDtypeStruct`` with PER-ROW
     shapes (no capacity axis); ``()`` declares a stateless scorer.
+    ``model_partition`` (optional): the 2-D-mesh ticket (DESIGN.md §13).
+    ``model_partition(model_shards) -> (mparams, col_fn)`` where
+    ``mparams`` is a pytree of stage-stacked slab slices with a LEADING
+    model-shard axis (leaf shapes ``(M, S, w_local, ...)``, built with
+    ``launch.shardings.stage_column_slices``) and
+    ``col_fn(local_mparams, x, rows, s, t0, c0, n_valid) -> (cap,
+    w_local)`` scores ONLY cascade columns [t0 + c0, t0 + c0 + w_local)
+    of stage ``s`` from this shard's slab slice (``local_mparams`` =
+    ``mparams`` with the leading axis stripped; ``s``/``t0``/``c0``
+    traced scalars).  Scorers without one cannot run at
+    ``model_shards > 1``.
     """
 
     fn: Callable | None
@@ -270,6 +281,7 @@ class BoundScorer:
     state_spec: object = ()
     stage_fn: Callable | None = None
     lane_stage_fn: Callable | None = None
+    model_partition: Callable | None = None
 
     @property
     def stateful(self) -> bool:
@@ -344,8 +356,27 @@ def matrix_stage_scorer(
         idx = t0_lane[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
         return jnp.take_along_axis(xr, idx, axis=1)
 
+    def model_partition(model_shards: int):
+        from repro.launch.shardings import split_columns
+
+        w_l, w_g = split_columns(W, model_shards)
+
+        def col_fn(mp, x, rows, s, t0, c0, n_valid):
+            xr = jnp.take(x, rows, axis=0)
+            # x is padded to T_pad = max(t0) + W; a shard whose slice
+            # only partially overlaps the stage would otherwise have
+            # dynamic_slice CLAMP t0 + c0 and silently shift in-range
+            # columns — pad to max(t0) + w_g so every start is in range
+            xr = jnp.pad(xr, ((0, 0), (0, w_g - W)))
+            return jax.lax.dynamic_slice(xr, (0, t0 + c0), (xr.shape[0], w_l))
+
+        # the "slab" here IS the operand matrix (data-sharded already):
+        # nothing to split, every model shard just reads its own columns
+        return (), col_fn
+
     return BoundScorer(
-        fn=fn, prepare=prepare, width=W, lane_fn=lane_fn, slabs=slabs
+        fn=fn, prepare=prepare, width=W, lane_fn=lane_fn, slabs=slabs,
+        model_partition=model_partition,
     )
 
 
@@ -404,9 +435,33 @@ def tree_stage_scorer(
             idx = 2 * idx + (xj > th[:, :, j]).astype(jnp.int32)
         return jnp.take_along_axis(lv, idx[:, :, None], axis=2)[:, :, 0]
 
+    def model_partition(model_shards: int):
+        from repro.launch.shardings import split_columns, stage_column_slices
+
+        w_l, w_g = split_columns(W, model_shards)
+        t0s = dplan.stage_t0
+        mparams = {
+            "feats": stage_column_slices(feats_ordered, t0s, w_l, w_g),
+            "thrs": stage_column_slices(thrs_ordered, t0s, w_l, w_g),
+            "leaves": stage_column_slices(leaves_ordered, t0s, w_l, w_g),
+        }
+
+        def col_fn(mp, x, rows, s, t0, c0, n_valid):
+            # tree scoring is per-column independent, so running the
+            # kernel on the (w_l, ...) slice gives bit-identical columns
+            f = jax.lax.dynamic_index_in_dim(mp["feats"], s, 0, keepdims=False)
+            th = jax.lax.dynamic_index_in_dim(mp["thrs"], s, 0, keepdims=False)
+            lv = jax.lax.dynamic_index_in_dim(mp["leaves"], s, 0, keepdims=False)
+            return gbt_scores_pallas(
+                f, th, lv, x, block_n=block_n, interpret=it, rows=rows,
+                n_valid=n_valid,
+            )
+
+        return mparams, col_fn
+
     return BoundScorer(
         fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn,
-        slabs=slabs,
+        slabs=slabs, model_partition=model_partition,
     )
 
 
@@ -460,9 +515,29 @@ def lattice_stage_scorer(
         # the f32 streaming paths bit-identical to each other
         return jnp.sum(w * th, axis=-1)
 
+    def model_partition(model_shards: int):
+        from repro.launch.shardings import split_columns, stage_column_slices
+
+        w_l, w_g = split_columns(W, model_shards)
+        t0s = dplan.stage_t0
+        mparams = {
+            "theta": stage_column_slices(theta_ordered, t0s, w_l, w_g),
+            "feats": stage_column_slices(feats_ordered, t0s, w_l, w_g),
+        }
+
+        def col_fn(mp, x, rows, s, t0, c0, n_valid):
+            th = jax.lax.dynamic_index_in_dim(mp["theta"], s, 0, keepdims=False)
+            f = jax.lax.dynamic_index_in_dim(mp["feats"], s, 0, keepdims=False)
+            return lattice_scores_pallas(
+                th, f, x, block_n=block_n, interpret=it, rows=rows,
+                n_valid=n_valid,
+            )
+
+        return mparams, col_fn
+
     return BoundScorer(
         fn=fn, prepare=prepare, width=W, block_n=block_n, lane_fn=lane_fn,
-        slabs=slabs,
+        slabs=slabs, model_partition=model_partition,
     )
 
 

@@ -37,6 +37,20 @@ devices, with each device paying only for ITS rows.
   global-size (cap_g,) output arrays at the rows' ids; a row lives on
   exactly one shard at any stage, so every id is written exactly once
   across the mesh and a final ``psum`` assembles the batch.
+* **2-D ``("data", "model")`` mesh (DESIGN.md §13, opt-in).**  On a mesh
+  carrying a ``"model"`` axis of size M > 1, every stage's param slab is
+  split into M contiguous column slices
+  (``launch.shardings.stage_column_slices`` via the scorer's
+  ``model_partition`` hook), each model shard scores ONLY its
+  ``w_local = ceil(W/M)`` columns, and a single ``lax.psum`` over
+  ``"model"`` — the one collective the stage step gains — reassembles
+  the full (cap_l, W) score block bit-exactly (disjoint column support,
+  zeros elsewhere; adding exact zeros preserves f32 bits).  Everything
+  downstream of the psum (decide, compaction, admission, rebalance,
+  result scatter) is replicated across model shards and collective-free
+  over ``"model"``: survivor buffers stay strictly local to ``"data"``
+  shards.  ``model_shards=1`` takes the untouched 1-D program — traces,
+  billing and bits are byte-identical to a mesh with no model axis.
 
 Semantics are bit-identical to ``DeviceExecutor`` and the host
 ``ChunkedExecutor`` (per-row compute is lane-local in every kernel, so
@@ -76,9 +90,12 @@ from repro.kernels.device_executor import (
     stream_occupancy,
 )
 
+from repro.launch.shardings import model_stacked_shardings, split_columns
+
 __all__ = ["ShardedDeviceExecutor", "critical_blocks"]
 
 DATA_AXIS = "data"
+MODEL_AXIS = "model"
 
 
 def critical_blocks(per_shard_n_in: np.ndarray, block_n: int) -> int:
@@ -130,11 +147,19 @@ class ShardedDeviceExecutor:
             raise ValueError(
                 f"mesh must carry a {DATA_AXIS!r} axis; got {mesh.axis_names}"
             )
+        self.shards = int(mesh.shape[DATA_AXIS])
+        self.model_shards = int(dict(mesh.shape).get(MODEL_AXIS, 1))
         # same auto policy as DeviceExecutor: fused stage-step megakernel
         # by default when the scorer carries f32 slabs (bit-identical),
-        # explicit opt-in for quantized slabs (tolerance-oracle parity)
+        # explicit opt-in for quantized slabs (tolerance-oracle parity).
+        # The 2-D path has no fused stage step (the megakernel has no
+        # model-axis psum seam), so auto turns it off there.
         if megakernel is None:
-            megakernel = scorer.slabs is not None and scorer.slabs.quant == "f32"
+            megakernel = (
+                self.model_shards == 1
+                and scorer.slabs is not None
+                and scorer.slabs.quant == "f32"
+            )
         if megakernel and scorer.slabs is None:
             raise ValueError(
                 "megakernel=True needs a scorer with ParamSlabs (factory-"
@@ -148,18 +173,64 @@ class ShardedDeviceExecutor:
                 "survivor-state carry.  Use the multi-kernel path "
                 "(megakernel=False / the auto default)."
             )
+        if self.model_shards > 1:
+            mesh_desc = (
+                f"{self.shards}x{self.model_shards} ({DATA_AXIS!r}, "
+                f"{MODEL_AXIS!r}) mesh"
+            )
+            if megakernel:
+                raise ValueError(
+                    f"megakernel=True is unavailable on a {mesh_desc}: the "
+                    "fused stage step has no model-axis psum seam.  Use the "
+                    "multi-kernel path (megakernel=None/False) or "
+                    "model_shards=1."
+                )
+            if scorer.stateful:
+                raise ValueError(
+                    f"a {mesh_desc} cannot carry a stateful scorer "
+                    "(non-empty state_spec): per-row state would need the "
+                    "model-axis collective the 2-D path reserves for the "
+                    "score psum.  Use model_shards=1."
+                )
+            if scorer.model_partition is None:
+                raise ValueError(
+                    f"a {mesh_desc} needs a scorer with a model_partition "
+                    "hook (factory-built scorers carry one; custom scorers "
+                    "must split their stage slabs into contiguous column "
+                    "slices — see BoundScorer.model_partition)"
+                )
+            if self.model_shards > self.dplan.W:
+                raise ValueError(
+                    f"{mesh_desc} has more model shards than the plan's "
+                    f"stage width W={self.dplan.W}: a stage slab splits "
+                    f"into at most W contiguous column slices "
+                    f"(compile with model_shards <= {self.dplan.W})"
+                )
         self.megakernel = bool(megakernel)
         self.scorer = scorer
         self.check_finite = bool(check_finite)
         self.mesh = mesh
-        self.shards = int(mesh.shape[DATA_AXIS])
         self.block_n = max(1, int(block_n))
         self.interpret = INTERPRET if interpret is None else interpret
         self.rebalance = bool(rebalance)
         self.rebalance_ratio = float(rebalance_ratio)
         self.traces = 0
         self.last_run_info: dict | None = None
-        self._jit = jax.jit(self._program)
+        if self.model_shards > 1:
+            self._w_local, self._w_global = split_columns(
+                self.dplan.W, self.model_shards
+            )
+            mparams, self._col_fn = scorer.model_partition(self.model_shards)
+            if jax.tree_util.tree_leaves(mparams):
+                # one slab slice per model shard, placed at construction:
+                # the per-device param memory genuinely shrinks by ~M
+                mparams = jax.device_put(
+                    mparams, model_stacked_shardings(mparams, mesh)
+                )
+            self._mparams = mparams
+            self._jit = jax.jit(self._program2d)
+        else:
+            self._jit = jax.jit(self._program)
         self._stream_jit = jax.jit(self._stream_program, static_argnums=(0,))
         # grouped (ranking) program: k is static — verdict extraction
         # unrolls k segment-max passes per shard
@@ -190,7 +261,7 @@ class ShardedDeviceExecutor:
 
     # -- the per-shard program ------------------------------------------
 
-    def _per_shard(self, xbuf, idbuf, n_live):
+    def _per_shard(self, xbuf, idbuf, n_live, mparams=None):
         """One shard's view: identical loop body to ``DeviceExecutor``,
         plus the psum'd exit total and the optional rebalance step.
 
@@ -198,13 +269,25 @@ class ShardedDeviceExecutor:
         axis (shard_map splits the mesh axis); outputs keep it so every
         out_spec is sharded over ``"data"`` (no replicated out_specs —
         ``check_rep=False`` friendly).
+
+        On a 2-D mesh (``model_shards > 1``) the SAME body runs with two
+        changes, both resolved at trace time so the 1-D trace is
+        untouched: score production goes through the scorer's
+        ``model_partition`` column slice + one psum over ``"model"``
+        (``mparams`` carries this shard's slab slice, leading length-1
+        model axis), and outputs gain a second leading length-1 axis so
+        every out_spec can be ``P("data", "model")``.
         """
         dp = self.dplan
         S, W, T = dp.S, dp.W, dp.plan.T
         shards = self.shards
+        two_d = self.model_shards > 1
         xbuf = xbuf[0]
         idbuf = idbuf[0]
         n_live = n_live[0]
+        if two_d:
+            mp = jax.tree_util.tree_map(lambda a: a[0], mparams)
+            c0 = jax.lax.axis_index(MODEL_AXIS) * self._w_local
         cap_l = idbuf.shape[0]
         cap_g = shards * cap_l  # == the trash/sentinel id
         stage_t0 = jnp.asarray(dp.stage_t0)
@@ -283,12 +366,29 @@ class ShardedDeviceExecutor:
                 )
                 state_new = state  # megakernel path is stateless-only
             else:
-                # the survivor buffer IS the row set, so the scorer's
-                # gather is the identity over cap_l local rows (never the
-                # global batch)
-                scores, state_new = self.scorer.stage(
-                    state, t0, t0 + W, lane, xbuf, n_live
-                )
+                if two_d:
+                    # each model shard scores ONLY its contiguous column
+                    # slice [c0, c0 + w_local) of stage s, scatters it
+                    # into a zeroed (cap_l, w_global) block, and ONE psum
+                    # over "model" — the single collective this stage
+                    # step gains — reassembles the full block bit-exactly
+                    # (disjoint column support; adding exact zeros
+                    # preserves f32 bits)
+                    scores_l = self._col_fn(mp, xbuf, lane, s, t0, c0, n_live)
+                    block = jax.lax.dynamic_update_slice(
+                        jnp.zeros((cap_l, self._w_global), dtype=jnp.float32),
+                        scores_l.astype(jnp.float32),
+                        (jnp.int32(0), c0),
+                    )
+                    scores = jax.lax.psum(block, MODEL_AXIS)[:, :W]
+                    state_new = state  # 2-D path is stateless-only
+                else:
+                    # the survivor buffer IS the row set, so the scorer's
+                    # gather is the identity over cap_l local rows (never
+                    # the global batch)
+                    scores, state_new = self.scorer.stage(
+                        state, t0, t0 + W, lane, xbuf, n_live
+                    )
                 scores = jnp.where(col_valid[s][None, :], scores, 0.0)
                 g_new, active, dpos, ex_rel = cascade_chunk_pallas(
                     gbuf,
@@ -383,7 +483,8 @@ class ShardedDeviceExecutor:
         dec = jax.lax.psum(dec, DATA_AXIS)
         ex = jax.lax.psum(ex, DATA_AXIS)
         gout = jax.lax.psum(gout, DATA_AXIS)
-        one = lambda a: jnp.reshape(a, (1,) + a.shape)  # noqa: E731
+        lead = (1, 1) if two_d else (1,)
+        one = lambda a: jnp.reshape(a, lead + a.shape)  # noqa: E731
         return (
             one(dec), one(ex), one(gout), one(s_f), one(n_live),
             one(n_in_log), one(reb_log),
@@ -407,6 +508,33 @@ class ShardedDeviceExecutor:
             check_rep=False,
         )
         return sharded(xbuf, idbuf, n_live0)
+
+    def _program2d(self, x, idbuf, n_live0, mparams):
+        """The 2-D ``("data", "model")`` launch (DESIGN.md §13): survivor
+        buffers sharded over ``"data"`` exactly as in ``_program``, the
+        operand replicated over ``"model"`` (in_specs that don't mention
+        an axis replicate over it), and the scorer's stage-stacked slab
+        slices split one per model shard (``in_specs=P("model")`` on the
+        leading axis).  Outputs carry two leading length-1 axes so every
+        out_spec is ``P("data", "model")`` — no replicated out_specs,
+        same ``check_rep=False`` convention as the 1-D program."""
+        self.traces += 1  # trace-time side effect, read by the trace tests
+        shards = self.shards
+        cap_l = idbuf.shape[1]
+        # distribute the operand rows by id, exactly like _program: the
+        # per-shard working set stays O(cap_l), not O(batch)
+        xbuf = jnp.take(x, idbuf.reshape(-1), axis=0).reshape(
+            (shards, cap_l) + x.shape[1:]
+        )
+        mp_specs = jax.tree_util.tree_map(lambda _: P(MODEL_AXIS), mparams)
+        sharded = shard_map(
+            self._per_shard,
+            mesh=self.mesh,
+            in_specs=(P(DATA_AXIS), P(DATA_AXIS), P(DATA_AXIS), mp_specs),
+            out_specs=(P(DATA_AXIS, MODEL_AXIS),) * 7,
+            check_rep=False,
+        )
+        return sharded(xbuf, idbuf, n_live0, mparams)
 
     # -- host entry -----------------------------------------------------
 
@@ -441,6 +569,17 @@ class ShardedDeviceExecutor:
         if self.check_finite:
             check_batch_finite(batch, n)
         shards = self.shards
+        if capacity is not None and capacity < n:
+            # same error contract as compile()'s backend negotiation
+            # (DESIGN.md §7): name what was asked and what would fit
+            raise ValueError(
+                f"capacity {capacity} cannot hold n={n} rows on a "
+                f"{shards}x{self.model_shards} ({DATA_AXIS!r}, "
+                f"{MODEL_AXIS!r}) mesh: the flush capacity pins the "
+                f"global buffer, split into {shards} data-shard slices "
+                f"block-padded to {self.block_n} — pass capacity >= n "
+                "(or None to size from the batch)"
+            )
         cap_l = self._cap_local(max(n, capacity or 0))
         cap_g = shards * cap_l
         x = self._cast_operand(batch if prepared else self.scorer.prepare(batch))
@@ -451,7 +590,11 @@ class ShardedDeviceExecutor:
             if row_order is None
             else np.asarray(row_order, dtype=np.int32)
         )
-        assert order.shape == (n,)
+        if order.shape != (n,):
+            raise ValueError(
+                f"row_order must be a ({n},)-shaped ordering of the "
+                f"batch rows, got shape {tuple(order.shape)}"
+            )
         # balanced contiguous assignment: shard k takes the k-th slice of
         # the ordered rows (ids travel with the rows from here on)
         base, rem = divmod(n, shards)
@@ -463,19 +606,40 @@ class ShardedDeviceExecutor:
             idbuf[k, :cnt] = order[start : start + cnt]
             n_live0[k] = cnt
             start += cnt
-        dec, ex, gout, s_f, n_f, n_in_log, reb_log = launch_wave(
-            "sharded",
-            lambda: self._jit(x, jnp.asarray(idbuf), jnp.asarray(n_live0)),
-        )
-        dec = np.asarray(dec)[0][:n].astype(bool)
-        ex = np.asarray(ex, dtype=np.int64)[0][:n]
-        gout = np.asarray(gout)[0][:n]
-        s_f = int(np.asarray(s_f)[0])
-        n_f = np.asarray(n_f)  # (shards,) final live counts
-        n_in_log = np.asarray(n_in_log)  # (shards, S)
-        reb_log = np.asarray(reb_log)  # (shards, S); identical across shards
+        if self.model_shards > 1:
+            dec, ex, gout, s_f, n_f, n_in_log, reb_log = launch_wave(
+                "sharded",
+                lambda: self._jit(
+                    x, jnp.asarray(idbuf), jnp.asarray(n_live0), self._mparams
+                ),
+            )
+            # 2-D outputs carry (data, model) leading axes; everything is
+            # identical across model replicas, so read model coordinate 0
+            dec = np.asarray(dec)[0, 0][:n].astype(bool)
+            ex = np.asarray(ex, dtype=np.int64)[0, 0][:n]
+            gout = np.asarray(gout)[0, 0][:n]
+            s_f = int(np.asarray(s_f)[0, 0])
+            n_f = np.asarray(n_f)[:, 0]
+            n_in_log = np.asarray(n_in_log)[:, 0, :]
+            reb_log = np.asarray(reb_log)[:, 0, :]
+        else:
+            dec, ex, gout, s_f, n_f, n_in_log, reb_log = launch_wave(
+                "sharded",
+                lambda: self._jit(x, jnp.asarray(idbuf), jnp.asarray(n_live0)),
+            )
+            dec = np.asarray(dec)[0][:n].astype(bool)
+            ex = np.asarray(ex, dtype=np.int64)[0][:n]
+            gout = np.asarray(gout)[0][:n]
+            s_f = int(np.asarray(s_f)[0])
+            n_f = np.asarray(n_f)  # (shards,) final live counts
+            n_in_log = np.asarray(n_in_log)  # (shards, S)
+            reb_log = np.asarray(reb_log)  # (shards, S); same across shards
         stages = plan.stages
-        bn, W = self.scorer.block_n or self.block_n, self.dplan.W
+        bn = self.scorer.block_n or self.block_n
+        # a model shard bills its own w_local columns; summed over the
+        # model axis a stage bills w_global = M * ceil(W/M) columns —
+        # the honest cost of a non-dividing split (== W at M=1)
+        w_bill = self._w_global if self.model_shards > 1 else self.dplan.W
         chunk_stats = []
         per_shard_scores = np.zeros((shards, s_f), dtype=np.int64)
         for s in range(s_f):
@@ -484,7 +648,7 @@ class ShardedDeviceExecutor:
             n_next = int(n_in_log[:, s + 1].sum()) if s + 1 < s_f else int(n_f.sum())
             # each shard bills the live blocks of ITS slab; empty shards
             # bill zero (their block guard skipped the whole stage)
-            per_shard_scores[:, s] = (-(-n_in_k // bn)) * bn * W
+            per_shard_scores[:, s] = (-(-n_in_k // bn)) * bn * w_bill
             chunk_stats.append(
                 ChunkStat(
                     t0=stages[s][0],
@@ -501,7 +665,22 @@ class ShardedDeviceExecutor:
             "per_shard_final_live": n_f.copy(),
             "per_shard_scores": per_shard_scores,
             "rebalanced_stages": np.flatnonzero(reb_log[0][:s_f]).tolist(),
+            "model_shards": self.model_shards,
         }
+        if self.model_shards > 1:
+            m = self.model_shards
+            # per-("data","model")-coordinate attribution: coordinate
+            # (d, j) scored ceil(n_in[d]/bn)*bn rows times ITS w_local
+            # columns at every stage step, and issued exactly ONE
+            # model-axis psum per stage step (the 2-D contract the perf
+            # gate locks)
+            coord = (-(-n_in_log[:, :s_f] // bn)) * bn * self._w_local
+            self.last_run_info.update(
+                mesh_shape=(shards, m),
+                per_coord_scores=np.repeat(coord[:, None, :], m, axis=1),
+                per_coord_psums=np.full((shards, m), s_f, dtype=np.int64),
+                per_coord_stages=np.full((shards, m), s_f, dtype=np.int64),
+            )
         return ExecutorResult(
             decisions=dec,
             exit_step=ex,
@@ -712,6 +891,15 @@ class ShardedDeviceExecutor:
         """
         plan = self.dplan.plan
         T = plan.T
+        if self.model_shards > 1:
+            raise ValueError(
+                f"run_grouped is unavailable on a {self.shards}x"
+                f"{self.model_shards} ({DATA_AXIS!r}, {MODEL_AXIS!r}) "
+                "mesh: the grouped (ranking) decide is data-parallel "
+                "only — BackendCapabilities.model_parallel covers batch "
+                "run() (DESIGN.md §13); compile with model_shards=1 for "
+                "grouped serving"
+            )
         group_rows = np.asarray(group_rows, dtype=np.int32)
         group_valid = np.asarray(group_valid)
         if group_rows.ndim != 2 or group_rows.shape != group_valid.shape:
@@ -1028,6 +1216,15 @@ class ShardedDeviceExecutor:
         """
         plan = self.dplan.plan
         T = plan.T
+        if self.model_shards > 1:
+            raise ValueError(
+                f"run_stream is unavailable on a {self.shards}x"
+                f"{self.model_shards} ({DATA_AXIS!r}, {MODEL_AXIS!r}) "
+                "mesh: streaming admission mixes per-lane stages, which "
+                "would need a per-lane model-axis psum — data-parallel "
+                "only (DESIGN.md §13); compile with model_shards=1 for "
+                "streaming"
+            )
         if not self.scorer.has_lanes and not self.megakernel:
             raise ValueError(
                 "run_stream needs a scorer with per-lane stage scoring "
@@ -1061,8 +1258,16 @@ class ShardedDeviceExecutor:
             if arrivals is None
             else np.asarray(arrivals, dtype=np.int32)
         )
-        assert arr.shape == (n,)
-        assert (np.diff(arr) >= 0).all(), "arrivals must be nondecreasing"
+        if arr.shape != (n,):
+            raise ValueError(
+                f"arrivals must have shape ({n},) matching n, got "
+                f"{tuple(arr.shape)}"
+            )
+        if arr.size and not (np.diff(arr) >= 0).all():
+            raise ValueError(
+                "arrivals must be nondecreasing (the admission ring "
+                "replays requests in arrival order)"
+            )
         # round-robin deal: shard k's ring slot i holds request i*shards+k
         ring_ids = np.full((shards, R_l), R_g, dtype=np.int32)
         ring_arr = np.zeros((shards, R_l), dtype=np.int32)

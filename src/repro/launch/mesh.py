@@ -42,24 +42,43 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), SINGLE_POD_AXES)
 
 
-def make_serving_mesh(n_data_shards: int) -> jax.sharding.Mesh:
-    """1-D ``("data",)`` mesh for the sharded serving executor.
+def make_serving_mesh(
+    n_data_shards: int, model_shards: int = 1
+) -> jax.sharding.Mesh:
+    """``("data",)`` — or, with ``model_shards > 1``, ``("data", "model")``
+    — mesh for the sharded serving executor.
 
     Unlike the training meshes above this takes however many devices
-    exist: ``n_data_shards`` of them, in enumeration order.  On CPU, run
-    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
-    sharded tests and the CI sharded-parity step do exactly this) to get
-    N host "devices"; on TPU the first N chips are used directly.
+    exist: ``n_data_shards * model_shards`` of them, in enumeration
+    order.  On CPU, run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the sharded
+    tests and the CI sharded-parity step do exactly this) to get N host
+    "devices"; on TPU the first N chips are used directly.
+
+    ``model_shards=1`` returns the same 1-D ``("data",)`` mesh as
+    always, so existing callers (and their compiled traces) are
+    untouched; the 2-D shape only exists when somebody asked for it.
     """
     n = int(n_data_shards)
     if n < 1:
         raise ValueError(f"n_data_shards must be >= 1, got {n}")
+    m = int(model_shards)
+    if m < 1:
+        raise ValueError(f"model_shards must be >= 1, got {m}")
+    need = n * m
     devs = jax.devices()
-    if len(devs) < n:
+    if len(devs) < need:
+        shape = f"{n}x{m} ({n} data x {m} model)" if m > 1 else f"{n}-way"
         raise RuntimeError(
-            f"need {n} devices for a {n}-way serving mesh, have {len(devs)} — "
-            f"run under XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"need {need} devices for a {shape} serving mesh, have {len(devs)} — "
+            f"run under XLA_FLAGS=--xla_force_host_platform_device_count={need} "
             "(must be set before jax initializes)"
+        )
+    if m > 1:
+        if len(devs) == need:
+            return jax.make_mesh((n, m), ("data", "model"))
+        return jax.sharding.Mesh(
+            np.asarray(devs[:need]).reshape(n, m), ("data", "model")
         )
     if len(devs) == n:
         return jax.make_mesh((n,), ("data",))

@@ -96,6 +96,12 @@ def build_parser() -> argparse.ArgumentParser:
         "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
     ap.add_argument(
+        "--model-shards", type=int, default=None,
+        help="model-parallel width for --backend sharded/auto: shard every "
+        "stage's param slab over a second 'model' mesh axis, one psum per "
+        "stage step (DESIGN.md §13); total devices = data x model shards",
+    )
+    ap.add_argument(
         "--rebalance", action="store_true",
         help="sharded backend: all-gather repack of survivor buffers "
         "between stages when shard occupancy skews (DESIGN.md §6)",
@@ -199,6 +205,12 @@ def resolve_backend_args(args) -> tuple[str, dict, str]:
             # backend — don't let auto negotiate down to device/host and
             # then reject the shards option
             backend = "sharded"
+    if args.model_shards is not None:
+        opts["model_shards"] = int(args.model_shards)
+        if backend == "auto":
+            # same contract as --backend-shards: an explicit model-axis
+            # width IS a request for the (only) model-parallel backend
+            backend = "sharded"
     if args.rebalance:
         opts["rebalance"] = True
     return backend, opts, policy
@@ -279,6 +291,13 @@ def main() -> None:
     if backend_opts.get("rebalance") and not backend.capabilities.supports_rebalance:
         ap.error(
             f"--rebalance requires the sharded backend (resolved {backend.name!r})"
+        )
+    if backend_opts.get("model_shards", 1) > 1 and not getattr(
+        backend.capabilities, "model_parallel", False
+    ):
+        ap.error(
+            f"--model-shards requires a model-parallel backend "
+            f"(resolved {backend.name!r}; use --backend sharded)"
         )
     on_device = backend.capabilities.on_device
 

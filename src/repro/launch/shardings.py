@@ -19,6 +19,8 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 REPLICATED_NAMES = {
@@ -162,3 +164,86 @@ def batch_shardings(abs_batch, mesh, batch_ax):
         return _fit((batch_ax,) + (None,) * (nd - 1), leaf.shape, mesh)
 
     return tree_shardings(abs_batch, mesh, pspec)
+
+
+# ---------------------------------------------------------------------------
+# Cascade-slab model-axis partitioning (DESIGN.md §13).
+#
+# The serving cascade's per-stage param slabs are cascade-ordered arrays
+# with the column (base-model) axis FIRST: stage s owns columns
+# [t0[s], t0[s] + W).  A 2-D ("data", "model") mesh splits every stage's
+# W columns into model_shards CONTIGUOUS slices so model shard j holds
+# columns [j*w_local, (j+1)*w_local) of every stage — the per-device slab
+# genuinely shrinks by ~model_shards, and one psum over "model"
+# reassembles the full per-stage score block bit-exactly (each shard's
+# contribution is zero outside its own slice, and adding exact zeros
+# preserves f32 bits).
+
+
+def split_columns(width: int, model_shards: int) -> tuple[int, int]:
+    """Contiguous column split of a ``width``-column stage over
+    ``model_shards`` model shards.
+
+    Returns ``(w_local, w_global)``: every model shard owns ``w_local =
+    ceil(width / model_shards)`` consecutive columns and ``w_global =
+    model_shards * w_local >= width`` is the padded global width.  The
+    trailing ``w_global - width`` columns are dead — the executor's
+    ``col_valid`` mask zeroes them before the decide, so a non-dividing
+    split costs padding, never correctness.
+    """
+    w = int(width)
+    m = int(model_shards)
+    if w < 1:
+        raise ValueError(f"stage width must be >= 1, got {w}")
+    if m < 1:
+        raise ValueError(f"model_shards must be >= 1, got {m}")
+    w_local = -(-w // m)
+    return w_local, m * w_local
+
+
+def stage_column_slices(
+    param, t0, w_local: int, w_global: int
+) -> jax.Array:
+    """Stack per-(model shard, stage) column slices of a cascade-ordered
+    param array.
+
+    ``param`` has the cascade/column axis first (shape ``(T, ...)``);
+    ``t0[s]`` is stage s's first column.  Returns shape
+    ``(M, S, w_local, *param.shape[1:])`` with
+
+        ``out[j, s, c] = param[t0[s] + j*w_local + c]``
+
+    zero-padded where the index runs past ``T`` (those columns are
+    masked by ``col_valid`` downstream).  Feeding this to ``shard_map``
+    with ``in_specs=P("model")`` hands model shard j exactly its
+    ``(S, w_local, ...)`` slice of every stage's slab.
+    """
+    t0 = np.asarray(t0, dtype=np.int64).reshape(-1)
+    if w_global % max(w_local, 1) != 0:
+        raise ValueError(
+            f"w_global ({w_global}) must be a multiple of w_local ({w_local})"
+        )
+    m = w_global // w_local
+    s = len(t0)
+    t_pad = (int(t0.max()) if s else 0) + w_global
+    param = jnp.asarray(param)
+    pad = t_pad - param.shape[0]
+    if pad > 0:
+        param = jnp.concatenate(
+            [param, jnp.zeros((pad,) + param.shape[1:], param.dtype)], axis=0
+        )
+    idx = (
+        t0[None, :, None]
+        + (np.arange(m) * w_local)[:, None, None]
+        + np.arange(w_local)[None, None, :]
+    )
+    out = jnp.take(param, jnp.asarray(idx.reshape(-1)), axis=0)
+    return out.reshape((m, s, w_local) + param.shape[1:])
+
+
+def model_stacked_shardings(tree, mesh: jax.sharding.Mesh):
+    """Shardings placing leading-axis-M stacked slab trees one slice per
+    model shard (``P("model")`` on axis 0, replicated over "data")."""
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P("model")), tree
+    )

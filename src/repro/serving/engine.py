@@ -292,6 +292,14 @@ class QWYCServer:
                 "mesh/shards require a data-parallel backend "
                 f"(exec_backend is {self.exec.name!r})"
             )
+        if int(opts.get("model_shards") or 1) > 1 and not getattr(
+            caps, "model_parallel", False
+        ):
+            raise ValueError(
+                "model_shards > 1 requires a model-parallel backend "
+                f"(exec_backend is {self.exec.name!r}; see "
+                "Backend.capabilities.model_parallel, DESIGN.md §13)"
+            )
         on_device = caps.on_device
         if score_fn is None and chunk_score_fn is None and (
             not on_device or scorer is None
@@ -332,7 +340,16 @@ class QWYCServer:
             # the shard COUNT up front, to size its flush
             resolver = getattr(self.exec, "resolve_mesh", None)
             if resolver is not None:
-                self.mesh = resolver(opts.pop("mesh", None), opts.pop("shards", None))
+                # forward the model axis only when requested: a resolver
+                # predating DESIGN.md §13 keeps its 2-arg signature, and
+                # an explicit mesh would otherwise silently win over
+                # model_shards and drop the whole 2-D request
+                mkw = {}
+                if int(opts.get("model_shards") or 1) > 1:
+                    mkw["model_shards"] = int(opts["model_shards"])
+                self.mesh = resolver(
+                    opts.pop("mesh", None), opts.pop("shards", None), **mkw
+                )
                 opts["mesh"] = self.mesh
             else:
                 self.mesh = opts.get("mesh")

@@ -51,6 +51,37 @@ def test_nested_objects_stay_open():
     assert v.validate(doc, _schema()) == []
 
 
+def test_all_unknown_sections_reported_sorted():
+    """EVERY unregistered top-level section lands in the failure list
+    (not just the first), in sorted order so the report is stable
+    regardless of the document's key order."""
+    v = _load_validator()
+    doc = json.loads((REPO / "BENCH_executor.json").read_text())
+    doc["zz_rogue"] = {"anything": 1}
+    doc["aa_rogue"] = {"anything": 2}
+    doc["mm_rogue"] = 3
+    errors = [e for e in v.validate(doc, _schema()) if "unknown top-level" in e]
+    named = [e for e in errors for n in ("aa_rogue", "mm_rogue", "zz_rogue") if f"'{n}'" in e]
+    assert len(named) == 3, errors
+    assert named == sorted(named)
+
+
+def test_mesh2d_section_registered_and_required():
+    schema = _schema()
+    assert "mesh2d" in schema["required"]
+    assert "mesh2d" in schema["properties"]
+    row_schema = schema["properties"]["mesh2d"]["properties"]["rows"]["items"]
+    for key in ("parity_with_host_oracle", "g_final_bit_exact"):
+        assert key in row_schema["required"]
+        assert row_schema["properties"][key]["enum"] == [True]
+    for key in ("model_shards", "psums_total", "slab_bytes_per_device",
+                "w_local", "w_global"):
+        assert key in row_schema["required"]
+    head = schema["properties"]["mesh2d"]["properties"]["headline"]
+    assert "one_trace_per_mesh_shape" in head["required"]
+    assert head["properties"]["one_trace_per_mesh_shape"]["enum"] == [True]
+
+
 def test_ranking_section_registered_and_required():
     schema = _schema()
     assert "ranking" in schema["required"]

@@ -1,0 +1,455 @@
+"""2-D ``("data", "model")`` serving mesh (DESIGN.md §13): stage param
+slabs column-sharded over "model" with ONE psum per stage step, survivor
+buffers strictly local to "data" shards.
+
+The contract under test, at every CI mesh shape (1x4 / 2x2 / 4x1):
+
+* decisions/exit_step bit-identical to the host ``ChunkedExecutor``
+  oracle, g_final bit-identical to the f32 ``DeviceExecutor`` (each
+  model shard's psum contribution is zero outside its own column slice,
+  and adding exact zeros preserves f32 bits),
+* ``model_shards=1`` takes the 1-D program verbatim — byte-identical
+  results AND billing vs the ``("data",)``-mesh executor,
+* one compiled trace per mesh shape,
+* non-dividing column splits (W not a multiple of M) pay padding, never
+  correctness,
+* grouped / streaming raise the documented capability errors.
+
+Multi-device cases need XLA devices; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI mesh2d
+job does) — with fewer devices they SKIP, keeping plain tier-1 runs
+green on one device.
+
+All tests use LOCAL rngs so the session-rng stream stays stable.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_scores
+from repro.core import CascadePlan, evaluate_cascade, fit_qwyc
+from repro.core.executor import ChunkedExecutor, matrix_producer
+from repro.kernels import ops
+from repro.kernels.device_executor import (
+    DeviceExecutor,
+    DevicePlan,
+    matrix_stage_scorer,
+    tree_stage_scorer,
+)
+from repro.kernels.sharded_executor import ShardedDeviceExecutor
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.shardings import split_columns, stage_column_slices
+
+pytestmark = pytest.mark.multidevice
+
+N_DEV = len(jax.devices())
+
+# the CI mesh-shape matrix: same device budget (4), three factorizations
+MESH_SHAPES = ((1, 4), (2, 2), (4, 1))
+
+
+def _mesh_params(shapes=MESH_SHAPES):
+    return [
+        pytest.param(
+            d, m,
+            id=f"{d}x{m}",
+            marks=pytest.mark.skipif(
+                N_DEV < d * m,
+                reason=f"needs {d * m} devices (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={d * m})",
+            ),
+        )
+        for d, m in shapes
+    ]
+
+
+def _need(n):
+    return pytest.mark.skipif(
+        N_DEV < n,
+        reason=f"needs {n} devices (XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={n})",
+    )
+
+
+def _fit(rng, n=400, t=24, mode="both", alpha=0.01):
+    F = make_scores(rng, n=n, t=t)
+    m = fit_qwyc(F, beta=0.0, alpha=alpha, mode=mode)
+    return F, m
+
+
+def _executor(dplan, d, m, **kw):
+    mesh = make_serving_mesh(d, m)
+    return ShardedDeviceExecutor(
+        dplan, kw.pop("scorer", matrix_stage_scorer(dplan)), mesh,
+        block_n=kw.pop("block_n", 32), **kw,
+    )
+
+
+# -- slab partitioning helpers (launch/shardings.py) --------------------
+
+
+def test_split_columns():
+    assert split_columns(8, 1) == (8, 8)
+    assert split_columns(8, 2) == (4, 8)
+    assert split_columns(8, 3) == (3, 9)  # non-dividing: padded global
+    assert split_columns(3, 2) == (2, 4)
+    with pytest.raises(ValueError, match="model_shards"):
+        split_columns(8, 0)
+    with pytest.raises(ValueError, match="width"):
+        split_columns(0, 2)
+
+
+def test_stage_column_slices_layout():
+    """out[j, s, c] == param[t0[s] + j*w_local + c], zero past the end."""
+    rng = np.random.default_rng(0)
+    param = rng.normal(size=(10, 3)).astype(np.float32)
+    t0 = np.array([0, 3, 6])
+    w_local, w_global = split_columns(3, 2)  # (2, 4): non-dividing
+    out = np.asarray(stage_column_slices(param, t0, w_local, w_global))
+    assert out.shape == (2, 3, 2, 3)
+    for j in range(2):
+        for s, t in enumerate(t0):
+            for cc in range(w_local):
+                idx = t + j * w_local + cc
+                want = param[idx] if idx < 10 else np.zeros(3)
+                np.testing.assert_array_equal(out[j, s, cc], want)
+
+
+# -- parity across the mesh-shape matrix --------------------------------
+
+
+@pytest.mark.parametrize("mode", ["both", "neg_only"])
+@pytest.mark.parametrize("d,m", _mesh_params())
+def test_mesh2d_matrix_parity(mode, d, m):
+    """Every (data, model) factorization of 4 devices produces verdicts
+    bit-identical to the host oracle and g_final bit-identical to the
+    single-device f32 executor."""
+    rng = np.random.default_rng(41)
+    F, qm = _fit(rng, mode=mode)
+    ev = evaluate_cascade(qm, F)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    Fo = F[:, qm.order].astype(np.float32)
+    n = F.shape[0]
+    sx = _executor(dplan, d, m)
+    res = sx.run(Fo, n)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    host = ChunkedExecutor(plan, matrix_producer(F[:, qm.order])).run(n)
+    np.testing.assert_array_equal(res.decisions, host.decisions)
+    np.testing.assert_array_equal(res.exit_step, host.exit_step)
+    dev = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32).run(
+        Fo, n
+    )
+    # the model-axis psum adds exact zeros outside each shard's slice,
+    # so g_final matches the single-device executor EXACTLY
+    np.testing.assert_array_equal(res.g_final, dev.g_final)
+    assert sx.model_shards == m
+    assert sx.last_run_info["model_shards"] == m
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2), (1, 4))))
+def test_mesh2d_tree_scorer_parity(d, m):
+    """Real Pallas tree kernel under the model-axis split: per-column
+    kernels are column-independent, so a shard's (S, w_local) slab
+    reproduces its column slice bit-exactly."""
+    rng = np.random.default_rng(42)
+    t, depth, dim, n = 16, 3, 8, 192
+    feats = rng.integers(0, dim, size=(t, depth)).astype(np.int32)
+    thrs = rng.uniform(size=(t, depth)).astype(np.float32)
+    leaves = rng.normal(size=(t, 1 << depth)).astype(np.float32)
+    x = rng.uniform(size=(n, dim)).astype(np.float32)
+    F = np.asarray(
+        ops.gbt_scores(
+            jnp.asarray(feats), jnp.asarray(thrs), jnp.asarray(leaves),
+            jnp.asarray(x), block_n=32,
+        )
+    )
+    qm = fit_qwyc(F.astype(np.float64), beta=0.0, alpha=0.02)
+    ev = evaluate_cascade(qm, F)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    scorer = tree_stage_scorer(
+        dplan, feats[qm.order], thrs[qm.order], leaves[qm.order], block_n=32
+    )
+    sx = _executor(dplan, d, m, scorer=scorer)
+    res = sx.run(x, n)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    assert sx.traces == 1
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2),)))
+def test_mesh2d_nonaligned_column_split(d, m):
+    """W=3 over M=2 (w_local=2, w_global=4): the dead padded column is
+    masked before the decide, so a non-dividing split changes the bill
+    (padding) but never the verdicts."""
+    rng = np.random.default_rng(43)
+    F, qm = _fit(rng, t=21)
+    ev = evaluate_cascade(qm, F)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=3)  # W=3
+    dplan = DevicePlan.from_plan(plan)
+    assert dplan.W == 3
+    Fo = F[:, qm.order].astype(np.float32)
+    n = F.shape[0]
+    sx = _executor(dplan, d, m)
+    assert (sx._w_local, sx._w_global) == (2, 4)
+    res = sx.run(Fo, n)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    dev = DeviceExecutor(dplan, matrix_stage_scorer(dplan), block_n=32).run(
+        Fo, n
+    )
+    np.testing.assert_array_equal(res.g_final, dev.g_final)
+    # the bill is quantized at w_global, not W: strictly more than the
+    # 1-D executor paid, by exactly the padding ratio per stage block
+    info = sx.last_run_info
+    s_f = int(info["stages_run"])
+    n_in = info["per_shard_n_in"][:, :s_f]
+    blocks = -(-n_in // 32) * 32
+    assert res.scores_computed == int(blocks.sum()) * sx._w_global
+
+
+# -- model_shards=1 byte-identity ---------------------------------------
+
+
+@pytest.mark.parametrize("d", [pytest.param(4, marks=_need(4))])
+def test_model_shards_one_is_the_1d_program(d):
+    """``make_serving_mesh(d, 1)`` returns the same 1-D mesh as always
+    and the executor takes the 1-D program verbatim: results, billing
+    counters and trace counts are byte-identical to a plain
+    ``("data",)``-mesh executor — the 111 pre-existing perf-gate
+    counters cannot move."""
+    rng = np.random.default_rng(44)
+    F, qm = _fit(rng)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    Fo = F[:, qm.order].astype(np.float32)
+    n = F.shape[0]
+    mesh_1d = make_serving_mesh(d)
+    mesh_m1 = make_serving_mesh(d, 1)
+    assert mesh_m1.axis_names == ("data",)
+    a = ShardedDeviceExecutor(dplan, matrix_stage_scorer(dplan), mesh_1d, block_n=32)
+    b = ShardedDeviceExecutor(dplan, matrix_stage_scorer(dplan), mesh_m1, block_n=32)
+    ra, rb = a.run(Fo, n), b.run(Fo, n)
+    assert b.model_shards == 1
+    np.testing.assert_array_equal(ra.decisions, rb.decisions)
+    np.testing.assert_array_equal(ra.exit_step, rb.exit_step)
+    np.testing.assert_array_equal(ra.g_final, rb.g_final)
+    assert ra.scores_computed == rb.scores_computed
+    assert a.traces == b.traces == 1
+    ia, ib = a.last_run_info, b.last_run_info
+    assert ia["stages_run"] == ib["stages_run"]
+    np.testing.assert_array_equal(ia["per_shard_n_in"], ib["per_shard_n_in"])
+    assert ib["model_shards"] == 1
+    # the per-coordinate 2-D counters exist ONLY at model_shards > 1:
+    # additive, never rewriting the 1-D billing surface
+    assert "per_coord_scores" not in ib
+
+
+# -- trace discipline ---------------------------------------------------
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2), (1, 4))))
+def test_mesh2d_single_trace(d, m):
+    """One compiled trace per mesh shape: repeat batches, permuted row
+    orders and partial batches under a pinned capacity all reuse it."""
+    rng = np.random.default_rng(45)
+    F, qm = _fit(rng, t=20)
+    ev = evaluate_cascade(qm, F)
+    n = F.shape[0]
+    plan = CascadePlan.from_qwyc(qm, chunk_t=4)
+    dplan = DevicePlan.from_plan(plan)
+    sx = _executor(dplan, d, m)
+    Fo = F[:, qm.order].astype(np.float32)
+    for _ in range(2):
+        res = sx.run(Fo, n)
+        np.testing.assert_array_equal(res.exit_step, ev["exit_step"])
+    perm = np.random.default_rng(7).permutation(n)
+    res = sx.run(Fo, n, row_order=perm)
+    np.testing.assert_array_equal(res.decisions, ev["decisions"])
+    res_small = sx.run(Fo[:100], 100, capacity=n)
+    np.testing.assert_array_equal(res_small.exit_step, ev["exit_step"][:100])
+    assert sx.traces == 1
+
+
+# -- per-coordinate billing ---------------------------------------------
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2), (1, 4))))
+def test_mesh2d_per_coord_billing(d, m):
+    """Per-(data, model)-coordinate counters: every model shard pays the
+    same block-quantized w_local bill as its data row, psums == stage
+    steps, and the global bill is the padded-width sum."""
+    rng = np.random.default_rng(46)
+    F, qm = _fit(rng)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    sx = _executor(dplan, d, m)
+    res = sx.run(F[:, qm.order].astype(np.float32), F.shape[0])
+    info = sx.last_run_info
+    s_f = int(info["stages_run"])
+    assert info["mesh_shape"] == (d, m)
+    for key in ("per_coord_scores", "per_coord_psums", "per_coord_stages"):
+        assert info[key].shape[:2] == (d, m)
+    # exactly one psum (and one stage step) per coordinate per stage
+    np.testing.assert_array_equal(
+        info["per_coord_psums"], np.full((d, m), s_f)
+    )
+    np.testing.assert_array_equal(
+        info["per_coord_stages"], np.full((d, m), s_f)
+    )
+    # column split is balanced: model shards of one data row bill alike,
+    # and the coordinate sum reproduces the global padded-width bill
+    coord = info["per_coord_scores"]
+    for j in range(1, m):
+        np.testing.assert_array_equal(coord[:, j, :], coord[:, 0, :])
+    blocks = -(-info["per_shard_n_in"][:, :s_f] // 32) * 32
+    assert res.scores_computed == int(blocks.sum()) * sx._w_global
+    assert int(coord.sum()) == int(blocks.sum()) * sx._w_local * m
+
+
+# -- capability errors and validation -----------------------------------
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2),)))
+def test_mesh2d_grouped_and_streaming_raise(d, m):
+    """The grouped decide and streaming admission stay data-parallel
+    only (DESIGN.md §13): both raise documented capability errors."""
+    rng = np.random.default_rng(47)
+    F, qm = _fit(rng)
+    dplan = DevicePlan.from_plan(CascadePlan.from_qwyc(qm, chunk_t=8))
+    sx = _executor(dplan, d, m)
+    with pytest.raises(ValueError, match="run_grouped is unavailable"):
+        sx.run_grouped(
+            F[:, qm.order].astype(np.float32),
+            np.zeros((1, 4), np.int32), np.ones((1, 4), bool),
+            1, np.zeros(4), 1,
+        )
+    with pytest.raises(ValueError, match="run_stream is unavailable"):
+        sx.run_stream(
+            F[:, qm.order].astype(np.float32), F.shape[0],
+            arrivals=np.zeros(F.shape[0], np.int32),
+        )
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2),)))
+def test_mesh2d_validation_errors(d, m):
+    """Construction/run validation names the mesh shape and both axes —
+    the compile() error contract, not a bare assert."""
+    rng = np.random.default_rng(48)
+    F, qm = _fit(rng)
+    plan = CascadePlan.from_qwyc(qm, chunk_t=8)
+    dplan = DevicePlan.from_plan(plan)
+    mesh = make_serving_mesh(d, m)
+    # megakernel has no model-axis psum seam
+    with pytest.raises(ValueError, match=r"megakernel=True is unavailable"):
+        ShardedDeviceExecutor(
+            dplan, matrix_stage_scorer(dplan), mesh, megakernel=True
+        )
+    # a scorer without the partition hook cannot be column-split
+    import dataclasses
+
+    bare = dataclasses.replace(
+        matrix_stage_scorer(dplan), model_partition=None
+    )
+    with pytest.raises(ValueError, match="model_partition"):
+        ShardedDeviceExecutor(dplan, bare, mesh)
+    # more model shards than columns per stage
+    wide = jax.sharding.Mesh(
+        np.asarray(jax.devices()[: d * m]).reshape(1, d * m),
+        ("data", "model"),
+    )
+    if d * m > dplan.W:
+        with pytest.raises(ValueError, match="more model shards"):
+            ShardedDeviceExecutor(dplan, matrix_stage_scorer(dplan), wide)
+    # run-time capacity validation names the 2-D shape
+    sx = _executor(dplan, d, m)
+    with pytest.raises(ValueError, match=rf"{d}x{m} \('data', 'model'\)"):
+        sx.run(
+            F[:, qm.order].astype(np.float32), F.shape[0],
+            capacity=F.shape[0] // 2,
+        )
+    with pytest.raises(ValueError, match="row_order"):
+        sx.run(
+            F[:, qm.order].astype(np.float32), F.shape[0],
+            row_order=np.arange(3),
+        )
+
+
+# -- the api seam -------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2),)))
+def test_compile_model_shards(d, m):
+    """compile(backend='sharded', model_shards=) builds the 2-D executor;
+    non-model-parallel rungs reject the option compile-time."""
+    from repro import api
+
+    rng = np.random.default_rng(49)
+    F, _ = _fit(rng)
+    fitted = api.fit(F, beta=0.0, alpha=0.01)
+    ref = fitted.compile("device").evaluate(scores=F)
+    c = fitted.compile("sharded", shards=d, model_shards=m)
+    assert c._executor.model_shards == m
+    r = c.evaluate(scores=F)
+    np.testing.assert_array_equal(r.decisions, ref.decisions)
+    np.testing.assert_array_equal(r.exit_step, ref.exit_step)
+    with pytest.raises(ValueError, match="model-parallel backend"):
+        fitted.compile("host", model_shards=2)
+    with pytest.raises(ValueError, match="model-parallel backend"):
+        fitted.compile("device", model_shards=2)
+    # billing key names the full mesh shape, 1-D names stay stable
+    sb = api.get_backend("sharded")
+    assert sb.billing_key(shards=d, model_shards=m) == f"sharded{d}x{m}"
+    assert sb.billing_key(shards=d, model_shards=m, rebalance=True) == (
+        f"sharded{d}x{m}r"
+    )
+    assert sb.billing_key(shards=4) == "sharded4"
+    assert sb.billing_key(shards=4, model_shards=1) == "sharded4"
+
+
+@pytest.mark.parametrize("d,m", _mesh_params(((2, 2),)))
+def test_serving_mesh_carries_model_axis(d, m):
+    """The serving engine forwards model_shards to the backend's mesh
+    resolver (regression: an engine-resolved 1-D mesh used to win over
+    backend_opts['model_shards'] and silently drop the model axis)."""
+    from repro import api
+    from repro.serving.engine import QWYCServer
+
+    rng = np.random.default_rng(50)
+    t, dim = 16, 6
+    Wm = rng.normal(size=(t, dim))
+    X = rng.normal(size=(220, dim)).astype(np.float32)
+    F = (X @ Wm.T).astype(np.float64)
+    qm = fit_qwyc(F, beta=0.0, alpha=0.01)
+    ev = evaluate_cascade(qm, F)
+    srv = QWYCServer(
+        qm, lambda x: np.asarray(x) @ Wm.T, batch_size=64,
+        backend="kernel", chunk_t=4, exec_backend="sharded",
+        backend_opts={"shards": d, "model_shards": m},
+    )
+    assert dict(srv.mesh.shape) == {"data": d, "model": m}
+    assert srv.n_shards == d  # the flush stays data-local
+    for row in X:
+        srv.submit(row)
+    res = srv.drain()
+    np.testing.assert_array_equal(
+        np.array([r["decision"] for r in res]), ev["decisions"]
+    )
+    assert srv._dev[0].model_shards == m
+    # a non-model-parallel rung rejects the option at construction
+    with pytest.raises(ValueError, match="model-parallel"):
+        QWYCServer(
+            qm, lambda x: np.asarray(x) @ Wm.T, batch_size=64,
+            backend="kernel", exec_backend="device",
+            backend_opts={"model_shards": 2},
+        )
+    # an explicit mesh that contradicts model_shards is an error, not a
+    # silent 1-D downgrade
+    with pytest.raises(ValueError, match="conflicts with the explicit mesh"):
+        api.get_backend("sharded").resolve_mesh(
+            make_serving_mesh(d), model_shards=m
+        )

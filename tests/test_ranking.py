@@ -46,6 +46,10 @@ from repro.ranking.bucketing import (
 )
 from repro.ranking.plan import topk_margin
 
+# CI's multi-device steps select marked suites with `-m multidevice`
+# instead of a hand-maintained file list
+pytestmark = pytest.mark.multidevice
+
 N_DEV = len(jax.devices())
 
 

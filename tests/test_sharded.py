@@ -35,6 +35,10 @@ from repro.kernels.sharded_executor import ShardedDeviceExecutor, critical_block
 from repro.launch.mesh import make_serving_mesh
 from repro.serving.engine import QWYCServer
 
+# CI's multi-device steps select marked suites with `-m multidevice`
+# instead of a hand-maintained file list
+pytestmark = pytest.mark.multidevice
+
 N_DEV = len(jax.devices())
 
 
